@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference, plus the
+jnp-path timing that is the CPU-meaningful number.  Interpret-mode wall time
+is NOT TPU performance — the TPU claim is the VMEM/BlockSpec structure
+checked here for fit, and the roofline table in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.segment_combine.ops import (pack_edges, pack_values,
+                                               segment_combine)
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+VMEM_BUDGET = 16 * 2 ** 20  # v5e ~16MB/core usable
+
+
+def _vmem_report():
+    print("# kernel VMEM working sets (bytes, must be << 16MiB)")
+    eb, nb = 512, 256
+    seg = (eb * nb + eb + nb) * 4
+    bq = bk = 512
+    d = 256
+    fla = (bq * d + 2 * bk * d + bq * bk + 2 * bq + bq * d) * 4
+    q, p, n = 128, 64, 128
+    ssd = (q * (p + 2 * n + 1) + q * q + p * n * 2 + q * p) * 4
+    for name, b in [("segment_combine", seg), ("flash_attention", fla),
+                    ("ssd_scan", ssd)]:
+        assert b < VMEM_BUDGET, (name, b)
+        print(f"vmem.{name},{b},fits=True")
+
+
+def run():
+    _vmem_report()
+    rng = np.random.RandomState(0)
+
+    # segment_combine: graph-scale message combining
+    E, N = 200_000, 16_384
+    dst = rng.randint(0, N, E)
+    vals = rng.randn(E).astype(np.float32)
+    order, idxl = pack_edges(dst, N, nb=256)
+    pv = jnp.asarray(pack_values(vals, order, idxl, "sum"))
+    idxl = jnp.asarray(idxl)
+    f_ref = jax.jit(lambda v, i: segment_combine(v, i, "sum", 256, N,
+                                                 use_kernel=False))
+    f_ref(pv, idxl).block_until_ready()
+    _, secs = timed(lambda: f_ref(pv, idxl).block_until_ready(), repeat=3)
+    row("kern.segment_combine.ref_jnp.E200k", secs, f"E={E};N={N}")
+
+    # flash attention (jnp ref path = CPU-meaningful; kernel checked in tests)
+    B, S, H, K, hd = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, K, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, K, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, use_kernel=False))
+    f(q, k, v).block_until_ready()
+    _, secs = timed(lambda: f(q, k, v).block_until_ready(), repeat=3)
+    flops = 4 * B * S * S * H * hd / 2
+    row("kern.flash_attention.ref_jnp.S1024", secs,
+        f"gflops_s={flops / secs / 1e9:.1f}")
+
+    # ssd scan
+    b, s, h, p, n = 1, 2048, 8, 64, 64
+    x = jnp.asarray(rng.randn(b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.randn(b, s, h), jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.randn(h), jnp.float32) * 0.3)
+    Bm = jnp.asarray(rng.randn(b, s, 1, n), jnp.float32)
+    Cm = jnp.asarray(rng.randn(b, s, 1, n), jnp.float32)
+    f = jax.jit(lambda *a: ssd_scan(*a, chunk=128, use_kernel=False))
+    f(x, dt, A, Bm, Cm).block_until_ready()
+    _, secs = timed(lambda: f(x, dt, A, Bm, Cm).block_until_ready(),
+                    repeat=3)
+    row("kern.ssd_scan.ref_jnp.S2048", secs, f"bhpn={b}x{h}x{p}x{n}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Roofline report: renders the table in EXPERIMENTS.md §Roofline from the
+dry-run artifacts (artifacts/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_artifacts(mesh_filter=None, tag=""):
+    arts = []
+    for p in sorted(ART.glob("*.json")):
+        a = json.loads(p.read_text())
+        if mesh_filter and a.get("mesh") != mesh_filter:
+            continue
+        if (a.get("options", {}).get("tag") or "") != tag:
+            continue
+        arts.append(a)
+    return arts
+
+
+def run():
+    print("# roofline: name,us_per_call(bound term),dominant|terms|frac")
+    arts = load_artifacts(mesh_filter="16x16", tag="")
+    if not arts:
+        print("roofline.NO_ARTIFACTS,0,run launch/dryrun first")
+        return False
+    n_ok = n_skip = 0
+    for a in arts:
+        name = f"roofline.{a['arch']}.{a['shape']}"
+        if a["status"] == "skipped":
+            n_skip += 1
+            row(name, 0.0, f"SKIP:{a['reason'][:60]}")
+            continue
+        if a["status"] != "ok":
+            row(name, 0.0, "ERROR")
+            continue
+        n_ok += 1
+        r = a["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        row(name, bound,
+            f"dom={r['dominant']};c={r['compute_s']:.3e}"
+            f";m={r['memory_s']:.3e};coll={r['collective_s']:.3e}"
+            f";useful={r['useful_ratio']:.3f}"
+            f";frac={r['roofline_fraction']:.4f}")
+    print(f"# roofline summary: ok={n_ok} skipped={n_skip}")
+    return n_ok > 0
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.graph import generators as gen  # noqa: E402
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """Returns (result, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def paper_graphs(scale: int = 20_000):
+    """CPU-scale analogs of the paper's datasets (Fig. 11):
+    skewed (BTC/Twitter/LJ), high-avg-degree (WebUK), road (USA)."""
+    return {
+        "btc_like": gen.powerlaw(scale, avg_deg=5, alpha=1.7,
+                                 seed=0).symmetrized(),
+        "twitter_like": gen.powerlaw(scale, avg_deg=12, alpha=1.9, seed=1),
+        "webuk_like": gen.erdos(scale, avg_deg=20, seed=2),
+        "usa_like": gen.grid_road(int(np.sqrt(scale)), seed=3,
+                                  weighted=True),
+    }
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,35 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    from benchmarks import (bench_balance, bench_kernels, bench_mirroring,
+                            bench_reqresp, bench_roofline)
+    suites = [
+        ("fig12_mirroring", bench_mirroring.run),
+        ("fig13_reqresp", bench_reqresp.run),
+        ("fig1_2_balance", bench_balance.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        print(f"\n### {name}")
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        raise SystemExit(1)
+    print("\nALL BENCHMARK SUITES PASSED")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's two techniques in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.algorithms.hashmin import hashmin
+from repro.algorithms.sv import sv
+from repro.core.cost_model import choose_tau, mirror_threshold
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+# A skewed graph: a few vertices have enormous degree (BTC/Twitter-like).
+g = gen.powerlaw(20_000, avg_deg=8, alpha=1.8, seed=0).symmetrized()
+M = 16
+deg = g.out_degrees()
+tau = choose_tau(deg, M)
+print(f"graph: n={g.n} m={g.m} max_deg={deg.max()} avg_deg={deg.mean():.1f}")
+print(f"Theorem-2 mirroring threshold: tau* = M*exp(deg_avg/M) = {tau}")
+
+# --- Technique 1: mirroring (high-degree vertices) -----------------------
+pg = partition(g, M, tau=tau, seed=0)
+labels, stats, n = hashmin(pg, use_mirroring=True)
+_, stats_nom, _ = hashmin(pg, use_mirroring=False)
+print(f"\nHash-Min CC in {int(n)} supersteps")
+print(f"  messages, Pregel basic (no combiner): {int(stats_nom['msgs_basic']):>12,}")
+print(f"  messages, with combiner (Pregel-noM): {int(stats_nom['msgs_combined']):>12,}")
+print(f"  messages, combiner + mirroring:       {int(stats['msgs_total']):>12,}")
+
+# --- Technique 2: request-respond (algorithm-logic bottlenecks) ----------
+labels2, stats2, rounds = sv(pg)
+print(f"\nS-V CC in {int(rounds)} rounds (O(log n), pointer jumping)")
+print(f"  messages, Pregel basic:    {int(stats2['msgs_basic']):>12,}")
+print(f"  messages, request-respond: {int(stats2['msgs_rr']):>12,}")
+per = np.asarray(stats2["per_worker_basic"])
+per_rr = np.asarray(stats2["per_worker_rr"])
+print(f"  worker balance (max/mean): basic {per.max() / per.mean():.2f} "
+      f"-> rr {per_rr.max() / per_rr.mean():.2f}")
+assert (np.asarray(labels) == np.asarray(labels2)).all(), "CC labels agree"
+print("\nHash-Min and S-V agree on all component labels. Done.")

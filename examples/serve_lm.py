@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + KV/SSM-cache decode
+across three architecture families (dense GQA, MoE, SSM).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import run
+
+for arch in ["tinyllama_1_1b", "olmoe_1b_7b", "mamba2_1_3b"]:
+    run(arch, reduced=True, batch=4, prompt_len=32, gen=16)
+print("\nAll three families served. Done.")

@@ -1,0 +1,17 @@
+"""Train a ~large-M-param reduced LM for a few hundred steps on CPU with
+checkpointing + restart (the LM-side end-to-end driver).
+
+    PYTHONPATH=src python examples/train_lm.py [steps]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import run
+
+steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+losses = run("tinyllama_1_1b", reduced=True, steps=steps, batch=8, seq=128,
+             ckpt_dir="/tmp/repro_train_lm", ckpt_every=50, lr=1e-3)
+print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {steps} steps")
+assert losses[-1] < losses[0], "training must reduce loss"

@@ -1,0 +1,35 @@
+"""Hash-Min connected components (paper §3.3): broadcast the smallest id
+seen so far with a min combiner.  The Fig. 1 balance workload."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bsp
+from repro.core.channels import broadcast
+from repro.graph.structs import PartitionedGraph
+
+
+def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
+            use_mirroring: bool = True, record_history: bool = False):
+    ids = pg.local_ids()
+
+    def step(state, i):
+        minv, active = state
+        inbox, stats = broadcast(pg, minv.astype(jnp.float32), active,
+                                 op="min", use_mirroring=use_mirroring)
+        inbox = jnp.where(jnp.isfinite(inbox), inbox,
+                          jnp.inf).astype(jnp.float32)
+        upd = pg.vmask & (inbox < minv)
+        new = jnp.where(upd, inbox, minv)
+        halted = ~jnp.any(upd)
+        return (new, upd), halted, stats
+
+    minv0 = jnp.where(pg.vmask, ids.astype(jnp.float32), jnp.inf)
+    state0 = (minv0, pg.vmask)
+    (minv, _), stats, n = (out := bsp.run(jax.jit(step), state0,
+                                          max_supersteps,
+                                          record_history=record_history))[:3]
+    if record_history:
+        return minv.astype(jnp.int32), stats, n, out[3]
+    return minv.astype(jnp.int32), stats, n

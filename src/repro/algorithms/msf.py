@@ -1,0 +1,109 @@
+"""Minimum spanning forest (paper §3.5): Boruvka with the SEAS optimization
+("storing edges at subvertices") — edges stay distributed at subvertices,
+which query their supervertex (request-respond!) every round; supervertices
+aggregate min-edge picks through the combined scatter channel.
+
+Per round:
+  1. every edge endpoint asks the owner of its neighbor for D[v] (Ch_req);
+  2. a 3-stage scatter-min elects each component's min edge under the total
+     order (w, min(Du,Dv), max(Du,Dv)) — ties cannot create >2-cycles;
+  3. mutual picks form conjoined trees; the smaller root becomes the
+     supervertex; pointer jumping (more Ch_req) flattens the forest —
+     towards the end a supervertex serves requests from ALL its subvertices,
+     the exact bottleneck the paper's request-respond channel removes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bsp
+from repro.core.channels import rr_gather, scatter_combine
+from repro.graph.structs import PartitionedGraph
+from repro.algorithms.sv import _acc
+
+IMAX = jnp.iinfo(jnp.int32).max
+
+
+def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20):
+    """Returns ((total_weight, n_edges, labels), stats, rounds).
+    Requires pg built from a *weighted, symmetrized* graph."""
+    ids = pg.local_ids().astype(jnp.int32)
+    M, n_loc = pg.M, pg.n_loc
+    widx = jnp.arange(M)[:, None]
+
+    def step(state, i):
+        D, total_w, n_edges = state
+        stats: dict = {}
+
+        Dv, s = rr_gather(D, pg.all_dst, pg.all_mask, M, n_loc)
+        stats = _acc(stats, s, M)
+        Du = D[widx, pg.all_src]
+        cross = pg.all_mask & (Dv != Du)
+
+        # --- 3-stage min-edge election per supervertex -------------------
+        inf_f = jnp.full((M, n_loc), jnp.inf, jnp.float32)
+        wmin, s = scatter_combine(inf_f, Du, pg.all_w, cross, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+        wmin_e, s = rr_gather(wmin, Du, cross, M, n_loc)
+        stats = _acc(stats, s, M)
+        sel = cross & (pg.all_w == wmin_e)
+
+        lo = jnp.minimum(Du, Dv)
+        hi = jnp.maximum(Du, Dv)
+        imax_i = jnp.full((M, n_loc), IMAX, jnp.int32)
+        lomin, s = scatter_combine(imax_i, Du, lo, sel, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+        lomin_e, s = rr_gather(lomin, Du, sel, M, n_loc)
+        stats = _acc(stats, s, M)
+        sel &= lo == lomin_e
+
+        himin, s = scatter_combine(imax_i, Du, hi, sel, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+        himin_e, s = rr_gather(himin, Du, sel, M, n_loc)
+        stats = _acc(stats, s, M)
+        sel &= hi == himin_e
+
+        other = jnp.where(lo == Du, hi, lo)
+        tgt, s = scatter_combine(imax_i, Du, other, sel, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+
+        valid = pg.vmask & (tgt != IMAX)
+        t_of_t, s = rr_gather(tgt, jnp.where(valid, tgt, 0), valid, M, n_loc)
+        stats = _acc(stats, s, M)
+        mutual = valid & (t_of_t == ids)
+
+        add = valid & (~mutual | (ids < tgt))
+        total_w = total_w + jnp.where(add, wmin, 0.0).sum()
+        n_edges = n_edges + add.sum()
+
+        is_root = D == ids
+        hookD = jnp.where(mutual & (ids < tgt), ids, tgt)
+        D1 = jnp.where(is_root & valid, hookD, D)
+
+        # --- pointer jumping (subvertices chase the new supervertex) -----
+        def jcond(c):
+            _, changed, _ = c
+            return changed
+
+        def jbody(c):
+            Dj, _, cnt = c
+            DD, s = rr_gather(Dj, Dj, pg.vmask, M, n_loc)
+            cnt = (cnt[0] + s["msgs_rr"], cnt[1] + s["msgs_basic"],
+                   cnt[2] + s["per_worker_rr"], cnt[3] + s["per_worker_basic"])
+            return DD, jnp.any(DD != Dj), cnt
+
+        zero = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                jnp.zeros((M,), jnp.int32), jnp.zeros((M,), jnp.int32))
+        D2, _, cnt = lax.while_loop(jcond, jbody,
+                                    (D1, jnp.any(D1 != D), zero))
+        stats = _acc(stats, {"msgs_rr": cnt[0], "msgs_basic": cnt[1],
+                             "per_worker_rr": cnt[2],
+                             "per_worker_basic": cnt[3]}, M)
+
+        halted = ~jnp.any(valid)
+        return (D2, total_w, n_edges), halted, stats
+
+    state0 = (ids, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+    return bsp.run(jax.jit(step), state0, max_rounds)

@@ -1,0 +1,89 @@
+"""Shiloach-Vishkin connected components (paper §3.4) — the request-respond
+showcase: every vertex u reads D[D[u]] from the owner of D[u], and towards
+the end ALL vertices of a component request the same root (the Fig. 2
+bottleneck).  Min-hooking variant (hook larger roots onto smaller labels),
+which converges to the minimum id of each component in O(log n) rounds.
+
+Message accounting: every pointer read is a request-respond exchange
+(msgs_rr vs msgs_basic = the with/without-Ch_req comparison of Fig. 13);
+hooking writes go through the combined scatter channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bsp
+from repro.core.channels import (broadcast, push_combined, rr_gather,
+                                 scatter_combine)
+from repro.graph.structs import PartitionedGraph
+
+
+def _acc(stats, s, workers):
+    """Accumulate a channel stats dict into uniform rr/basic counters."""
+    rr = s.get("msgs_rr", s.get("msgs_combined", 0))
+    stats["msgs_rr"] = stats.get("msgs_rr", 0) + rr
+    stats["msgs_basic"] = stats.get("msgs_basic", 0) + s["msgs_basic"]
+    pw_rr = s.get("per_worker_rr", s.get("per_worker_combined"))
+    stats["per_worker_rr"] = stats.get("per_worker_rr",
+                                       jnp.zeros(workers, jnp.int32)) + pw_rr
+    stats["per_worker_basic"] = (stats.get("per_worker_basic",
+                                           jnp.zeros(workers, jnp.int32))
+                                 + s["per_worker_basic"])
+    return stats
+
+
+def sv(pg: PartitionedGraph, max_supersteps: int = 64):
+    """Returns (labels (M, n_loc) int32 = min id of each CC, stats, rounds)."""
+    ids = pg.local_ids().astype(jnp.int32)
+    M, n_loc = pg.M, pg.n_loc
+    widx = jnp.arange(M)[:, None]
+
+    def step(state, i):
+        D = state
+        stats: dict = {}
+
+        # D[D[u]]  — THE skewed pointer read (request-respond)
+        DD, s = rr_gather(D, D, pg.vmask, M, n_loc)
+        stats = _acc(stats, s, M)
+        parent_is_root = DD == D
+
+        # cand[u] = min over neighbors v of D[v] (push D with min combiner)
+        cand_f, s = broadcast(pg, D.astype(jnp.float32), pg.vmask, op="min",
+                              use_mirroring=False)
+        stats = _acc(stats, s, M)
+        has_nbr = jnp.isfinite(cand_f)
+        cand = jnp.where(has_nbr, cand_f, 2 ** 30).astype(jnp.int32)
+
+        # (1) tree hooking: roots get hooked onto smaller neighbor-parents
+        hook_mask = pg.vmask & parent_is_root & has_nbr & (cand < D)
+        D1, s = scatter_combine(D, D, cand, hook_mask, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+
+        # star detection on the hooked forest
+        DD1, s = rr_gather(D1, D1, pg.vmask, M, n_loc)
+        stats = _acc(stats, s, M)
+        star = (DD1 == D1).astype(jnp.int32)
+        deep = pg.vmask & (DD1 != D1)
+        star, s = scatter_combine(star, DD1, jnp.zeros_like(star), deep,
+                                  "min", M, n_loc)
+        stats = _acc(stats, s, M)
+        star_of_parent, s = rr_gather(star, D1, pg.vmask, M, n_loc)
+        stats = _acc(stats, s, M)
+        in_star = pg.vmask & (star_of_parent > 0)
+
+        # (2) star hooking
+        hook2 = in_star & has_nbr & (cand < D1)
+        D2, s = scatter_combine(D1, D1, cand, hook2, "min", M, n_loc)
+        stats = _acc(stats, s, M)
+
+        # (3) shortcutting: D[u] = D[D[u]]
+        DD2, s = rr_gather(D2, D2, pg.vmask, M, n_loc)
+        stats = _acc(stats, s, M)
+        D3 = jnp.where(pg.vmask, jnp.minimum(D2, DD2), D)
+
+        halted = jnp.all(D3 == D) & jnp.all(~hook_mask) & jnp.all(~hook2)
+        return D3, halted, stats
+
+    D0 = jnp.where(pg.vmask, ids, ids)
+    return bsp.run(jax.jit(step), D0, max_supersteps)

@@ -1,0 +1,58 @@
+"""BSP superstep runtime: jit-compiled while-loop with halt voting,
+aggregators, and per-superstep message accounting.
+
+A *program* is a function ``step(state, superstep) -> (state, halted, stats)``
+where ``state`` is any pytree of (M, ...) arrays, ``halted`` a scalar bool
+(the paper's "all vertices voted to halt & no pending messages"), and
+``stats`` a flat dict of scalars / (M,) arrays.  The runtime accumulates
+stats totals and an optional per-superstep history, and supports
+checkpoint/restore of the loop carry (fault tolerance: the whole BSP state
+is a pytree).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def run(step: Callable, state, max_supersteps: int,
+        record_history: bool = False) -> Tuple[object, Dict, jnp.ndarray]:
+    """Run ``step`` until halt or max_supersteps.  Returns
+    (final_state, stats_totals, n_supersteps [, history])."""
+    _, _, stats0 = jax.eval_shape(step, state, jnp.zeros((), jnp.int32))
+    zero_stats = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), stats0)
+    history0 = None
+    if record_history:
+        history0 = jax.tree.map(
+            lambda s: jnp.zeros((max_supersteps,) + s.shape, s.dtype), stats0)
+
+    def cond(carry):
+        _, halted, i, _, _ = carry
+        return (~halted) & (i < max_supersteps)
+
+    def body(carry):
+        st, _, i, acc, hist = carry
+        st, halted, stats = step(st, i)
+        acc = jax.tree.map(jnp.add, acc, stats)
+        if record_history:
+            hist = jax.tree.map(lambda h, s: h.at[i].set(s), hist, stats)
+        return st, halted, i + 1, acc, hist
+
+    carry = (state, jnp.zeros((), bool), jnp.zeros((), jnp.int32),
+             zero_stats, history0)
+    st, _, n, acc, hist = jax.lax.while_loop(cond, body, carry)
+    if record_history:
+        return st, acc, n, hist
+    return st, acc, n
+
+
+def aggregate_or(x: jnp.ndarray) -> jnp.ndarray:
+    """Aggregator: global OR (e.g. 'did any vertex update?')."""
+    return jnp.any(x)
+
+
+def aggregate_sum(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x)

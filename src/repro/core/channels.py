@@ -1,0 +1,253 @@
+"""The paper's message channels as composable JAX ops.
+
+Everything operates on arrays with a leading worker axis ``M``; on one
+device that axis is a batch dim (exact M-worker simulation), under ``jit``
+with the axis sharded it lowers to real collectives (the worker-axis
+transpose IS the all-to-all).  Every channel returns a ``stats`` dict with
+the *paper's* message metric, computed exactly:
+
+  msgs_basic     — Pregel vertex-to-vertex messages (network only)
+  msgs_combined  — after sender-side combining (distinct (src worker, dst
+                   vertex) pairs) — Ch_msg with combiner
+  msgs_mirror    — Ch_mir: one message per (active mirrored vertex, remote
+                   worker hosting a mirror)  [Theorem 1]
+  msgs_rr        — request-respond: 2 * distinct (worker, target) pairs
+                   [Theorem 3]
+  per_worker_*   — (M,) sent-message counts for the Fig.1/2 balance plots
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import PartitionedGraph
+
+_IDENT = {"min": jnp.inf, "max": -jnp.inf, "sum": 0.0}
+
+
+def _scatter_op(op: str, buf: jnp.ndarray, idx: jnp.ndarray,
+                vals: jnp.ndarray) -> jnp.ndarray:
+    if op == "min":
+        return buf.at[idx].min(vals)
+    if op == "max":
+        return buf.at[idx].max(vals)
+    return buf.at[idx].add(vals)
+
+
+def _reduce_op(op: str, x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op](x, axis=axis)
+
+
+def identity_of(op: str, dtype=jnp.float32):
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.asarray({"min": info.max, "max": info.min, "sum": 0}[op],
+                           dtype)
+    return jnp.asarray(_IDENT[op], dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ch_msg: combined push (sender-side combining + all-to-all)
+# ---------------------------------------------------------------------------
+
+def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
+                  mask: jnp.ndarray, op: str, M: int, n_loc: int
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """targets: (M, K) global dst ids; values: (M, K); mask: (M, K).
+
+    Returns (inbox (M, n_loc) combined with ``op``, stats).  The per-source
+    partial buffer is the paper's combiner; its non-identity entries are the
+    combined message count.  The worker-axis transpose is the batched send.
+    """
+    ident = identity_of(op, values.dtype)
+    n_pad = M * n_loc
+
+    def one(tgt, val, msk):
+        v = jnp.where(msk, val, ident)
+        t = jnp.where(msk, tgt, 0)
+        buf = jnp.full((n_pad,), ident, values.dtype)
+        return _scatter_op(op, buf, t, v)
+
+    partial = jax.vmap(one)(targets, values, mask)      # (M_src, n_pad)
+    partial3 = partial.reshape(M, M, n_loc)             # (src, dst, slot)
+
+    sent = partial3 != ident
+    cross = sent & ~jnp.eye(M, dtype=bool)[:, :, None]
+    raw_cross = mask & ((targets // n_loc) != jnp.arange(M)[:, None])
+    stats = {
+        "msgs_combined": cross.sum(),
+        "msgs_basic": raw_cross.sum(),
+        "per_worker_combined": cross.sum(axis=(1, 2)),
+        "per_worker_basic": raw_cross.sum(axis=1),
+    }
+    recv = jnp.swapaxes(partial3, 0, 1)                 # the all-to-all
+    inbox = _reduce_op(op, recv, axis=1)                # receiver combine
+    return inbox, stats
+
+
+# ---------------------------------------------------------------------------
+# Ch_mir: mirror broadcast + local fan-out (with relay() for edge fields)
+# ---------------------------------------------------------------------------
+
+def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
+                op: str, relay: str = "none"
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Broadcast each active mirrored vertex's value to its mirrors, fan out
+    locally.  vals/active: (M, n_loc).  relay='add_w' adds the edge weight at
+    the mirror (the paper's relay() for SSSP)."""
+    ident = identity_of(op, vals.dtype)
+    n_pad = pg.n_pad
+    flat_vals = vals.reshape(-1)
+    flat_act = active.reshape(-1)
+    safe = jnp.clip(pg.mir_ids, 0, n_pad - 1)
+    valid = pg.mir_ids < n_pad
+    mir_vals = jnp.where(valid & flat_act[safe], flat_vals[safe], ident)
+    # ^ one value per mirrored vertex: the all-gather payload (Ch_mir send)
+
+    def fan_out(esrc, edst, emask, ew):
+        v = mir_vals[esrc]
+        if relay == "add_w":
+            v = v + ew
+        v = jnp.where(emask & (mir_vals[esrc] != ident), v, ident)
+        buf = jnp.full((pg.n_loc,), ident, vals.dtype)
+        return _scatter_op(op, buf, jnp.where(emask, edst, 0), v)
+
+    inbox = jax.vmap(fan_out)(pg.mir_esrc, pg.mir_edst, pg.mir_emask,
+                              pg.mir_ew)
+    sent = jnp.where(mir_vals != ident, pg.mir_nworkers, 0)
+    owner_w = jnp.clip(safe // pg.n_loc, 0, pg.M - 1)
+    per_worker = jnp.zeros((pg.M,), sent.dtype).at[owner_w].add(
+        jnp.where(valid, sent, 0))
+    stats = {"msgs_mirror": sent.sum(), "per_worker_mirror": per_worker}
+    return inbox, stats
+
+
+def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
+              op: str, relay: str = "none", use_mirroring: bool = True
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """The full paper pipeline: low-degree vertices push through Ch_msg with
+    combining; high-degree (>= pg.tau) vertices through Ch_mir.  ``vals`` is
+    each vertex's broadcast value (a(v)); relay folds edge fields.
+    use_mirroring=False routes EVERY edge through Ch_msg (Pregel-noM)."""
+    esrc = pg.eg_src if use_mirroring else pg.all_src
+    edst = pg.eg_dst if use_mirroring else pg.all_dst
+    emask = pg.eg_mask if use_mirroring else pg.all_mask
+    ew = pg.eg_w if use_mirroring else pg.all_w
+    src_val = vals[jnp.arange(pg.M)[:, None], esrc]
+    src_act = active[jnp.arange(pg.M)[:, None], esrc]
+    v = src_val + ew if relay == "add_w" else src_val
+    inbox, stats = push_combined(edst, v, emask & src_act, op,
+                                 pg.M, pg.n_loc)
+    if use_mirroring:
+        inbox2, s2 = push_mirror(pg, vals, active, op, relay)
+        inbox = {"min": jnp.minimum, "max": jnp.maximum,
+                 "sum": jnp.add}[op](inbox, inbox2)
+        stats.update(s2)
+    else:
+        stats["msgs_mirror"] = jnp.zeros((), jnp.int32)
+        stats["per_worker_mirror"] = jnp.zeros((pg.M,), jnp.int32)
+    stats["msgs_total"] = stats["msgs_combined"] + stats["msgs_mirror"]
+    stats["per_worker_total"] = (stats["per_worker_combined"]
+                                 + stats["per_worker_mirror"])
+    return inbox, stats
+
+
+# ---------------------------------------------------------------------------
+# Ch_req: request-respond distributed gather  (paper §6)
+# ---------------------------------------------------------------------------
+
+def _dedup_row(t: jnp.ndarray, sentinel: int):
+    """Sort-based dedup of one worker's request list (static shapes)."""
+    R = t.shape[0]
+    order = jnp.argsort(t)
+    s = t[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    first &= s < sentinel
+    rank = jnp.cumsum(first) - 1
+    uniq = jnp.full((R,), -1, t.dtype).at[jnp.where(first, rank, R - 1)
+                                          ].max(jnp.where(first, s, -1))
+    uniq = jnp.where(uniq < 0, sentinel, uniq)
+    inv = jnp.zeros((R,), jnp.int32).at[order].set(rank.astype(jnp.int32))
+    return uniq, inv
+
+
+def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
+              M: int, n_loc: int, dedup: bool = True
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Distributed gather: each worker reads vals[target] for arbitrary
+    global targets (the paper's request(u) / get_resp(u)).
+
+    vals: (M, n_loc); targets/tmask: (M, R).  Returns (out (M, R), stats).
+    dedup=True is the request-respond channel (one request per distinct
+    target per worker — Theorem 3); dedup=False counts Pregel basic.
+    """
+    n_pad = M * n_loc
+    R = targets.shape[1]
+    t = jnp.where(tmask, targets, n_pad)
+
+    uniq, inv = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)   # (M,R),(M,R)
+    owner = jnp.clip(uniq // n_loc, 0, M - 1)
+    uvalid = uniq < n_pad
+
+    # bucket requests by owner: reqbuf[src, owner, cap]
+    cap = R
+
+    def bucketize(u_row, ow_row, val_row):
+        onehot = (ow_row[None, :] == jnp.arange(M)[:, None]) & val_row[None, :]
+        pos = jnp.cumsum(onehot, axis=1) - onehot.astype(jnp.int32)
+        pos_of = (pos * onehot).sum(0)
+        dest = jnp.where(val_row, ow_row * cap + pos_of, M * cap)
+        buf = jnp.full((M * cap + 1,), n_pad, jnp.int32
+                       ).at[dest].set(u_row.astype(jnp.int32))
+        return buf[:-1].reshape(M, cap), pos_of
+
+    reqbuf, pos_of = jax.vmap(bucketize)(uniq, owner, uvalid)
+    recv = jnp.swapaxes(reqbuf, 0, 1)                  # (owner, src, cap)
+
+    def respond(vals_row, rec_row, w):
+        slot = rec_row - w * n_loc
+        ok = (slot >= 0) & (slot < n_loc)
+        return jnp.where(ok, vals_row[jnp.clip(slot, 0, n_loc - 1)],
+                         jnp.zeros((), vals.dtype))
+
+    resp = jax.vmap(respond)(vals, recv, jnp.arange(M))  # (owner, src, cap)
+    back = jnp.swapaxes(resp, 0, 1)                      # (src, owner, cap)
+
+    def collect(back_row, ow_row, pos_row, inv_row, uvalid_row):
+        uniq_vals = back_row.reshape(-1)[ow_row * cap + pos_row]
+        uniq_vals = jnp.where(uvalid_row, uniq_vals, 0)
+        return uniq_vals[inv_row]
+
+    out = jax.vmap(collect)(back, owner, pos_of, inv, uvalid)
+    out = jnp.where(tmask, out, 0)
+
+    self_w = jnp.arange(M)[:, None]
+    remote_u = uvalid & (owner != self_w)
+    raw_remote = tmask & ((targets // n_loc) != self_w)
+    n_rr = remote_u.sum()
+    n_basic = raw_remote.sum()
+    stats = {
+        "msgs_rr": 2 * n_rr,
+        "msgs_basic": 2 * n_basic,
+        "per_worker_rr": remote_u.sum(1) + jnp.zeros((M,), jnp.int32
+                                                     ).at[jnp.where(remote_u, owner, 0).reshape(-1)
+                                                          ].add(remote_u.reshape(-1).astype(jnp.int32)),
+        "per_worker_basic": raw_remote.sum(1)
+        + jnp.zeros((M,), jnp.int32).at[
+            jnp.where(raw_remote, jnp.clip(targets // n_loc, 0, M - 1), 0
+                      ).reshape(-1)].add(raw_remote.reshape(-1).astype(jnp.int32)),
+    }
+    return out, stats
+
+
+def scatter_combine(vals: jnp.ndarray, targets: jnp.ndarray,
+                    upd: jnp.ndarray, mask: jnp.ndarray, op: str,
+                    M: int, n_loc: int):
+    """Distributed scatter-``op`` into vals (S-V hooking writes).  Messages
+    are counted like the combined channel (one per distinct (worker, target)
+    after sender-side combining)."""
+    inbox, stats = push_combined(targets, upd, mask, op, M, n_loc)
+    fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
+    return fn(vals, inbox), stats

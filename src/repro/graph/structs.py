@@ -1,0 +1,218 @@
+"""Graph containers and the worker-partitioned representation.
+
+Design note (hardware adaptation, DESIGN.md §2): the engine executes the
+paper's per-worker logic as *batched* JAX ops over a leading worker axis
+``M``.  On one CPU device that axis is a plain batch dimension (exact
+M-worker simulation, exact message counts); under ``jit`` with the axis
+sharded over a TPU mesh the very same code lowers to all-to-all /
+all-gather collectives (the multi-pod dry-run proves it).  Static shapes
+come from padding each per-worker array to the max across workers — the
+padding itself visualizes the skew the paper fights.
+
+Vertex ids are relabeled by a random permutation at partition time and then
+block-partitioned: ``owner(v) = v // n_loc`` — distributionally identical to
+Pregel's hash partitioning with O(1) owner computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Graph:
+    """Host-side graph: COO edge list (directed; undirected graphs store both
+    directions)."""
+    n: int
+    src: np.ndarray  # (E,) int64
+    dst: np.ndarray  # (E,) int64
+    weight: Optional[np.ndarray] = None  # (E,) float32
+
+    @property
+    def m(self) -> int:
+        return len(self.src)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n)
+
+    def symmetrized(self) -> "Graph":
+        """Both directions, deduplicated; undirected weights canonicalized
+        to the min over the two directions (so w(a,b) == w(b,a))."""
+        src = np.concatenate([self.src, self.dst])
+        dst = np.concatenate([self.dst, self.src])
+        w = None if self.weight is None else np.concatenate([self.weight] * 2)
+        key = src.astype(np.int64) * self.n + dst
+        order = np.argsort(key, kind="stable")
+        key_s, src_s, dst_s = key[order], src[order], dst[order]
+        first = np.concatenate([[True], key_s[1:] != key_s[:-1]])
+        src_u, dst_u = src_s[first], dst_s[first]
+        if w is None:
+            return Graph(self.n, src_u, dst_u, None)
+        wmin_dir = np.minimum.reduceat(w[order], np.flatnonzero(first))
+        lo = np.minimum(src_u, dst_u)
+        hi = np.maximum(src_u, dst_u)
+        ukey = lo.astype(np.int64) * self.n + hi
+        _, inv = np.unique(ukey, return_inverse=True)
+        wpair = np.full(inv.max() + 1, np.inf, np.float32)
+        np.minimum.at(wpair, inv, wmin_dir.astype(np.float32))
+        return Graph(self.n, src_u, dst_u, wpair[inv].astype(np.float32))
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """M-worker partition with the paper's two channels precomputed.
+
+    Low-degree (< tau) vertices' edges go through Ch_msg (COO per worker);
+    high-degree vertices are *mirrored*: their value is broadcast once per
+    hosting worker and fanned out locally through the mirror COO.
+    """
+    n: int
+    M: int
+    n_loc: int
+    tau: int
+    perm: np.ndarray          # relabel: new_id = perm[old_id]
+    inv_perm: np.ndarray
+
+    # Ch_msg edges (from non-mirrored sources), padded per worker:
+    eg_src: jnp.ndarray       # (M, E_loc) local src slot
+    eg_dst: jnp.ndarray       # (M, E_loc) global dst id (pad: 0)
+    eg_mask: jnp.ndarray      # (M, E_loc) bool
+    eg_w: jnp.ndarray         # (M, E_loc) float32
+
+    # full adjacency (mirrored + not), for algorithms that need all edges:
+    all_src: jnp.ndarray      # (M, A_loc)
+    all_dst: jnp.ndarray
+    all_mask: jnp.ndarray
+    all_w: jnp.ndarray
+
+    # mirror structures:
+    mir_ids: jnp.ndarray      # (n_mir,) global ids of mirrored vertices (pad n)
+    mir_slot_of: jnp.ndarray  # (M, n_loc) index into mir_ids or -1
+    mir_nworkers: jnp.ndarray # (n_mir,) #workers holding a mirror (Thm 1 count)
+    mir_esrc: jnp.ndarray     # (M, ME_loc) index into mir_ids
+    mir_edst: jnp.ndarray     # (M, ME_loc) local dst slot on this worker
+    mir_emask: jnp.ndarray    # (M, ME_loc)
+    mir_ew: jnp.ndarray       # (M, ME_loc)
+
+    deg: jnp.ndarray          # (M, n_loc) out-degree
+    vmask: jnp.ndarray        # (M, n_loc) real-vertex mask
+
+    @property
+    def n_pad(self) -> int:
+        return self.M * self.n_loc
+
+    def local_ids(self) -> jnp.ndarray:
+        """(M, n_loc) global id of each local slot."""
+        return (jnp.arange(self.M)[:, None] * self.n_loc
+                + jnp.arange(self.n_loc)[None, :])
+
+
+def _pad_rows(rows, pad_val, dtype):
+    """list of 1-D arrays -> (M, maxlen) + mask."""
+    m = max((len(r) for r in rows), default=0)
+    m = max(m, 1)
+    out = np.full((len(rows), m), pad_val, dtype=dtype)
+    mask = np.zeros((len(rows), m), bool)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+        mask[i, :len(r)] = True
+    return out, mask
+
+
+def partition(g: Graph, M: int, tau: Optional[int] = None,
+              seed: int = 0) -> PartitionedGraph:
+    """Hash-partition ``g`` over M workers with mirroring threshold ``tau``
+    (None => mirroring disabled, i.e. tau = inf)."""
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(g.n).astype(np.int64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.n)
+    src = perm[g.src]
+    dst = perm[g.dst]
+    w = g.weight if g.weight is not None else np.ones(g.m, np.float32)
+
+    n_loc = -(-g.n // M)
+    owner = src // n_loc
+    deg = np.bincount(src, minlength=g.n)
+    tau_eff = tau if tau is not None else g.n + 1
+    mirrored = deg >= tau_eff                      # per (new) vertex id
+
+    # ---- Ch_msg edges: sources below threshold -------------------------
+    lo = ~mirrored[src]
+    eg_rows_s, eg_rows_d, eg_rows_w = [], [], []
+    all_rows_s, all_rows_d, all_rows_w = [], [], []
+    for wk in range(M):
+        sel = owner == wk
+        all_rows_s.append((src[sel] % n_loc).astype(np.int32))
+        all_rows_d.append(dst[sel].astype(np.int32))
+        all_rows_w.append(w[sel].astype(np.float32))
+        sel2 = sel & lo
+        eg_rows_s.append((src[sel2] % n_loc).astype(np.int32))
+        eg_rows_d.append(dst[sel2].astype(np.int32))
+        eg_rows_w.append(w[sel2].astype(np.float32))
+    eg_src, eg_mask = _pad_rows(eg_rows_s, 0, np.int32)
+    eg_dst, _ = _pad_rows(eg_rows_d, 0, np.int32)
+    eg_w, _ = _pad_rows(eg_rows_w, 0.0, np.float32)
+    all_src, all_mask = _pad_rows(all_rows_s, 0, np.int32)
+    all_dst, _ = _pad_rows(all_rows_d, 0, np.int32)
+    all_w, _ = _pad_rows(all_rows_w, 0.0, np.float32)
+
+    # ---- mirrors: group each high-deg vertex's edges by dst worker -----
+    mir_vertex_ids = np.flatnonzero(mirrored)          # sorted global ids
+    n_mir = max(len(mir_vertex_ids), 1)
+    mir_index = {int(v): i for i, v in enumerate(mir_vertex_ids)}
+    mir_slot_of = np.full((M, n_loc), -1, np.int32)
+    for v in mir_vertex_ids:
+        mir_slot_of[v // n_loc, v % n_loc] = mir_index[int(v)]
+
+    hi = mirrored[src]
+    hsrc, hdst, hw = src[hi], dst[hi], w[hi]
+    dst_owner = hdst // n_loc
+    rows_es = [[] for _ in range(M)]
+    rows_ed = [[] for _ in range(M)]
+    rows_ew = [[] for _ in range(M)]
+    nworkers = np.zeros(n_mir, np.int64)
+    if len(hsrc):
+        order = np.lexsort((hdst, hsrc, dst_owner))
+        hsrc, hdst, hw, dst_owner = (hsrc[order], hdst[order], hw[order],
+                                     dst_owner[order])
+        for s, d, ww, ow in zip(hsrc, hdst, hw, dst_owner):
+            rows_es[ow].append(mir_index[int(s)])
+            rows_ed[ow].append(int(d % n_loc))
+            rows_ew[ow].append(float(ww))
+        # workers per mirrored vertex
+        pair = np.unique(hsrc * np.int64(M) + dst_owner)
+        cnt = np.bincount((pair // M).astype(np.int64), minlength=g.n)
+        nworkers = cnt[mir_vertex_ids] if len(mir_vertex_ids) else nworkers
+    mir_esrc, mir_emask = _pad_rows([np.array(r, np.int32) for r in rows_es],
+                                    0, np.int32)
+    mir_edst, _ = _pad_rows([np.array(r, np.int32) for r in rows_ed],
+                            0, np.int32)
+    mir_ew, _ = _pad_rows([np.array(r, np.float32) for r in rows_ew],
+                          0.0, np.float32)
+
+    deg_pad = np.zeros((M, n_loc), np.int32)
+    vmask = np.zeros((M, n_loc), bool)
+    ids = np.arange(M * n_loc)
+    vmask.reshape(-1)[:g.n] = True
+    deg_pad.reshape(-1)[:g.n] = deg
+
+    mir_ids_arr = np.full(n_mir, M * n_loc, np.int32)
+    mir_ids_arr[:len(mir_vertex_ids)] = mir_vertex_ids
+
+    return PartitionedGraph(
+        n=g.n, M=M, n_loc=n_loc, tau=int(tau_eff), perm=perm, inv_perm=inv,
+        eg_src=jnp.asarray(eg_src), eg_dst=jnp.asarray(eg_dst),
+        eg_mask=jnp.asarray(eg_mask), eg_w=jnp.asarray(eg_w),
+        all_src=jnp.asarray(all_src), all_dst=jnp.asarray(all_dst),
+        all_mask=jnp.asarray(all_mask), all_w=jnp.asarray(all_w),
+        mir_ids=jnp.asarray(mir_ids_arr),
+        mir_slot_of=jnp.asarray(mir_slot_of),
+        mir_nworkers=jnp.asarray(nworkers),
+        mir_esrc=jnp.asarray(mir_esrc), mir_edst=jnp.asarray(mir_edst),
+        mir_emask=jnp.asarray(mir_emask), mir_ew=jnp.asarray(mir_ew),
+        deg=jnp.asarray(deg_pad), vmask=jnp.asarray(vmask),
+    )

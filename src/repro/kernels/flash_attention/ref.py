@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, Sq, d); k/v: (BKV, Sk, d)."""
+    BH, Sq, d = q.shape
+    BKV, Sk, _ = k.shape
+    n_rep = BH // BKV
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

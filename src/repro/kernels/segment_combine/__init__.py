@@ -1,0 +1,1 @@
+from repro.kernels.segment_combine.ops import segment_combine, pack_edges  # noqa

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel for sender-side message combining (the Ch_msg hot path).
+
+TPU adaptation of the paper's per-message hash-table combiner (DESIGN.md §2):
+a CPU combiner groups messages with a hash table — serial, pointer-chasing,
+hostile to the VPU/MXU.  Here messages are pre-sorted by destination block
+(host-side, once per graph) and each grid step combines one edge block into
+one destination block with a *dense* compare/accumulate in VMEM:
+
+    hit[e, n]  = (idx[e] == n)               (Eb x Nb in VMEM)
+    out[n]     = op_e  hit ? val[e] : identity
+
+For op='sum' this is literally a one-hot matmul -> MXU; min/max run on the
+VPU.  Block sizes default to (Eb=512, Nb=256): hit matrix = 512KB f32,
+well inside the ~16MB VMEM budget, and Nb is a multiple of the 128-lane
+register width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+POS = 3.0e38
+
+
+def _kernel(vals_ref, idx_ref, out_ref, *, op: str, nb: int):
+    vals = vals_ref[0, :]                       # (Eb,)
+    idx = idx_ref[0, :]                         # (Eb,) local dst in [0, nb)
+    eb = vals.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (eb, nb), 1)
+    hit = idx[:, None] == cols
+    if op == "sum":
+        onehot = hit.astype(vals.dtype)
+        out_ref[0, :] = jax.lax.dot_general(
+            vals[None, :], onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0].astype(out_ref.dtype)
+    elif op == "min":
+        out_ref[0, :] = jnp.min(jnp.where(hit, vals[:, None], POS), axis=0)
+    else:  # max
+        out_ref[0, :] = jnp.max(jnp.where(hit, vals[:, None], NEG), axis=0)
+
+
+def segment_combine_blocks(vals: jax.Array, idx: jax.Array, op: str,
+                           nb: int, interpret: bool = True) -> jax.Array:
+    """vals/idx: (n_blocks, Eb); returns (n_blocks, nb) combined blocks.
+    idx entries are block-local destinations; padding idx = -1 (never hits).
+    """
+    n_blocks, eb = vals.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, nb=nb),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, eb), lambda i: (i, 0)),
+                  pl.BlockSpec((1, eb), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, nb), vals.dtype),
+        interpret=interpret,
+    )(vals, idx)

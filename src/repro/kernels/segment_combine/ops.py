@@ -1,0 +1,58 @@
+"""jit'd wrapper + host-side edge packing for the segment_combine kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_combine.kernel import segment_combine_blocks
+from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
+
+_ID = {"sum": 0.0, "min": 3.0e38, "max": -3.0e38}
+
+
+def pack_edges(dst: np.ndarray, n_out: int, nb: int = 256,
+               eb_align: int = 512):
+    """Host-side, once per graph: sort edges by destination block and pad
+    each block's edge list to a common multiple-of-``eb_align`` length.
+
+    Returns (order, idx_local (n_blocks, Eb) int32 with -1 padding) where
+    ``order`` permutes per-edge values into packed layout."""
+    n_blocks = -(-n_out // nb)
+    blk = dst // nb
+    order = np.argsort(blk, kind="stable")
+    counts = np.bincount(blk, minlength=n_blocks)
+    eb = max(int(counts.max()), 1)
+    eb = -(-eb // eb_align) * eb_align
+    idx_local = np.full((n_blocks, eb), -1, np.int32)
+    starts = np.zeros(n_blocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    sdst = dst[order]
+    for b in range(n_blocks):
+        seg = sdst[starts[b]:starts[b + 1]]
+        idx_local[b, :len(seg)] = seg - b * nb
+    return order, idx_local
+
+
+def pack_values(vals: np.ndarray, order: np.ndarray, idx_local: np.ndarray,
+                op: str = "sum") -> np.ndarray:
+    """Scatter per-edge values into the packed (n_blocks, Eb) layout."""
+    n_blocks, eb = idx_local.shape
+    out = np.full((n_blocks, eb), _ID[op], np.float32)
+    sv = vals[order]
+    pos = 0
+    for b in range(n_blocks):
+        k = int((idx_local[b] >= 0).sum())
+        out[b, :k] = sv[pos:pos + k]
+        pos += k
+    return out
+
+
+def segment_combine(packed_vals: jax.Array, packed_idx: jax.Array, op: str,
+                    nb: int, n_out: int, use_kernel: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """Combine packed edge messages into (n_out,) destination values."""
+    fn = segment_combine_blocks if use_kernel else segment_combine_blocks_ref
+    out = fn(packed_vals, packed_idx, op, nb,
+             **({"interpret": interpret} if use_kernel else {}))
+    return out.reshape(-1)[:n_out]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the segment_combine kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_ID = {"sum": 0.0, "min": 3.0e38, "max": -3.0e38}
+
+
+def segment_combine_blocks_ref(vals, idx, op: str, nb: int):
+    n_blocks, eb = vals.shape
+    ident = jnp.asarray(_ID[op], vals.dtype)
+    out = jnp.full((n_blocks, nb), ident, vals.dtype)
+    safe = jnp.clip(idx, 0, nb - 1)
+    v = jnp.where(idx >= 0, vals, ident)
+    rows = jnp.arange(n_blocks)[:, None] + jnp.zeros_like(idx)
+    if op == "sum":
+        return out.at[rows, safe].add(v)
+    if op == "min":
+        return out.at[rows, safe].min(v)
+    return out.at[rows, safe].max(v)

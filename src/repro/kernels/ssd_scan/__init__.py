@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import ssd_scan  # noqa
+from repro.kernels.ssd_scan.ref import ssd_scan_ref  # noqa

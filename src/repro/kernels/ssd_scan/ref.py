@@ -1,0 +1,27 @@
+"""Naive recurrent oracle for the SSD scan (the definition, O(S) steps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """x: (BH, S, P); dt: (BH, S); A: (BH,); B, C: (BH, S, N)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dtt * A)[:, None, None]
+        state = decay * state + (dtt[:, None] * xt)[:, :, None] * Bt[:, None, :]
+        y = jnp.einsum("bpn,bn->bp", state, Ct)
+        return state, y
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices and extract the roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama_1_1b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+
+The first two lines above MUST run before any jax import: jax locks the
+device count at first init.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch import shardings as sh
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops
+from repro.models import model_zoo as zoo
+from repro.models.transformer import ModelContext
+from repro.train.train_step import (StepConfig, abstract_train_state,
+                                    make_decode_step, make_prefill_step,
+                                    make_train_step)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               embed_method: str = "rr", remat: str = "full",
+               zero1: bool = False, n_micro: int = 1, q_chunk: int = 1024,
+               extra_tag: str = "", scan_layers: bool = False,
+               moe_mirror: int = -1, fsdp: bool = False):
+    """Lower + compile one cell; returns the artifact dict."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if moe_mirror >= 0 and cfg.is_moe:
+        cfg = _dc.replace(cfg, moe=_dc.replace(
+            cfg.moe, n_mirrored_experts=moe_mirror))
+    shape = SHAPES[shape_name]
+    ok, why = cfg.shape_supported(shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.flatten())
+    mp = mesh.shape["model"]
+    ctx = ModelContext(mesh=mesh, dp_axes=sh.dp_axes(mesh),
+                       embed_method=embed_method, remat=remat,
+                       q_chunk=q_chunk, scan_layers=scan_layers)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            state = abstract_train_state(cfg, mp, jnp.bfloat16)
+            sspecs = sh.train_state_specs(cfg, mesh, state, zero1=zero1,
+                                          fsdp=fsdp)
+            bspecs = sh.batch_specs(cfg, shape, mesh)
+            inputs = zoo.input_specs(cfg, shape)
+            step = make_train_step(cfg, ctx, StepConfig(n_microbatches=n_micro))
+            jitted = jax.jit(step,
+                             in_shardings=(sh.named(mesh, sspecs),
+                                           sh.named(mesh, bspecs)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, inputs)
+        elif shape.kind == "prefill":
+            params = zoo.abstract_params(cfg, mp, jnp.bfloat16)
+            pspecs = sh.param_specs(cfg, mesh, params)
+            bspecs = sh.batch_specs(cfg, shape, mesh)
+            inputs = zoo.input_specs(cfg, shape)
+            cache = zoo.build_cache(cfg, shape.global_batch, shape.seq_len,
+                                    ctx, abstract=True)
+            cspecs = sh.cache_specs(cfg, shape, mesh, cache)
+            lspec = sh.logits_spec(cfg, shape, mesh)
+            fn = make_prefill_step(cfg, ctx, max_len=shape.seq_len)
+            jitted = jax.jit(fn,
+                             in_shardings=(sh.named(mesh, pspecs),
+                                           sh.named(mesh, bspecs)),
+                             out_shardings=(NamedSharding(mesh, lspec),
+                                            sh.named(mesh, cspecs)))
+            lowered = jitted.lower(params, inputs)
+        else:  # decode
+            params = zoo.abstract_params(cfg, mp, jnp.bfloat16)
+            pspecs = sh.param_specs(cfg, mesh, params)
+            cache = zoo.build_cache(cfg, shape.global_batch, shape.seq_len,
+                                    ctx, abstract=True)
+            cspecs = sh.cache_specs(cfg, shape, mesh, cache)
+            token = zoo.input_specs(cfg, shape)["token"]
+            tspec = sh.batch_specs(cfg, shape, mesh)["token"]
+            lspec = sh.logits_spec(cfg, shape, mesh)
+            fn = make_decode_step(cfg, ctx)
+            jitted = jax.jit(fn,
+                             in_shardings=(sh.named(mesh, pspecs),
+                                           NamedSharding(mesh, tspec),
+                                           sh.named(mesh, cspecs)),
+                             out_shardings=(NamedSharding(mesh, lspec),
+                                            sh.named(mesh, cspecs)),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params, token, cache)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        print(ma)
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, f):
+                mem[f] = int(getattr(ma, f))
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+
+    cost = compiled.cost_analysis() or {}
+    print({k: cost[k] for k in ("flops", "bytes accessed")
+           if k in cost})
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rl = analyze(cfg, shape, n_chips, flops, hbm_bytes,
+                 coll["total"]["bytes"])
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "options": {"embed_method": embed_method, "remat": remat,
+                    "zero1": zero1, "n_micro": n_micro, "q_chunk": q_chunk,
+                    "tag": extra_tag},
+        "n_chips": n_chips,
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "collectives": coll,
+        "memory_analysis": mem,
+        "roofline": {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dominant": rl.dominant,
+            "model_flops": rl.model_flops, "useful_ratio": rl.useful_ratio,
+            "roofline_fraction": rl.roofline_fraction,
+        },
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS + ["all"])
+    ap.add_argument("--shape", required=True, choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--embed-method", default="rr",
+                    choices=["gather", "onehot", "rr"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="also shard params over data (weight-gathered DP)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--scan-layers", action="store_true",
+                    help="scan layer stacks (fast compile, but XLA "
+                         "under-counts while-body cost); default unrolled")
+    ap.add_argument("--moe-mirror", type=int, default=-1,
+                    help="override n_mirrored_experts (paper Thm-2 analog)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            name = f"{arch}.{shape}.{'2x16x16' if args.multi_pod else '16x16'}"
+            if args.tag:
+                name += f".{args.tag}"
+            try:
+                art = lower_cell(arch, shape, args.multi_pod,
+                                 args.embed_method, args.remat, args.zero1,
+                                 args.microbatches, args.q_chunk, args.tag,
+                                 scan_layers=args.scan_layers,
+                                 moe_mirror=args.moe_mirror, fsdp=args.fsdp)
+            except Exception:
+                failures += 1
+                art = {"arch": arch, "shape": shape, "status": "error",
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "trace": traceback.format_exc()}
+                print(f"[FAIL] {name}\n{art['trace']}")
+            (outdir / f"{name}.json").write_text(json.dumps(art, indent=1))
+            if art["status"] == "ok":
+                r = art["roofline"]
+                print(f"[OK] {name}: dominant={r['dominant']} "
+                      f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                      f"collective={r['collective_s']:.3e}s "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"(compile {art['timing']['compile_s']:.1f}s)")
+            elif art["status"] == "skipped":
+                print(f"[SKIP] {name}: {art['reason']}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``cost_analysis`` has FLOPs and bytes but NOT collective traffic, so we scan
+the optimized per-device HLO for every collective op and sum operand sizes
+(the bytes each chip injects into the interconnect).
+
+CPU-HLO text does not inline operand types, so we build a symbol table
+(name -> bytes) in a first pass and resolve operands in a second.
+NOTE (documented XLA limitation): HloCostAnalysis visits while-loop bodies
+once, so scanned-layer modules under-count; the dry-run therefore lowers
+with unrolled layer stacks (ModelContext.scan_layers=False) when costing.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?)(.*)$")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_section_bytes(rest: str) -> int:
+    """Bytes of the result type(s) at the start of the RHS (handles tuples)."""
+    # type section ends at the op name (first space after the closing
+    # bracket/paren run); just grab shapes before the first '(' that is a
+    # call — conservative: shapes up to the op-name token.
+    m = re.match(r"(\(?[a-z0-9]+\[[0-9,]*\][^=]*?)\s+[a-z][a-z0-9\-]*\(", rest)
+    section = m.group(1) if m else rest.split(" ")[0]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(section))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {bytes, count} from optimized HLO text.
+    Async ``-start``/``-done`` pairs are counted once (on -start)."""
+    table: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, _, rest = m.groups()
+        table[name] = _type_section_bytes(rest)
+
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    for line in lines:
+        s = line.strip()
+        m = re.search(r"=\s+.*?\s([a-z][a-z\-]*)\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.replace("-start", "")
+        if base not in COLLECTIVES or op.endswith("-done"):
+            continue
+        call = s[s.index(op + "(") + len(op) + 1:]
+        depth, end = 1, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = call[:end]
+        inline = sum(_shape_bytes(d, sh) for d, sh in _SHAPE_RE.findall(args))
+        if inline:
+            b = inline
+        else:
+            b = sum(table.get(nm, 0) for nm in _OPND_RE.findall(args))
+        out[base]["bytes"] += b
+        out[base]["count"] += 1
+    out["total"] = {"bytes": sum(v["bytes"] for v in out.values()),
+                    "count": sum(v["count"] for v in out.values())}
+    return out

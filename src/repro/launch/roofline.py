@@ -1,0 +1,75 @@
+"""Three-term roofline model for TPU v5e, fed by the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / ICI_BW
+
+All inputs come from the per-device compiled module (cost_analysis + HLO
+text), so "per chip" is what the artifacts already contain.  MODEL_FLOPS
+(6·N·D for train, 2·N_active per decoded token) gives the useful-compute
+ratio that catches remat/dispatch overcompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (≈ per-chip injection, 1 link)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Paper-standard useful FLOPs for the whole cell (all chips)."""
+    pc = cfg.param_counts()
+    n_active = pc["active"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_chip: float
+    useful_ratio: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (higher = closer to
+        the compute roofline with zero overhead)."""
+        ideal = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return ideal / max(self.bound_s, 1e-30)
+
+
+def analyze(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
+            flops_per_chip: float, bytes_per_chip: float,
+            coll_bytes_per_chip: float) -> Roofline:
+    mf = model_flops(cfg, shape)
+    return Roofline(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / ICI_BW,
+        model_flops=mf,
+        hlo_flops_per_chip=flops_per_chip,
+        useful_ratio=mf / max(flops_per_chip * n_chips, 1e-30),
+        n_chips=n_chips,
+    )

@@ -1,0 +1,211 @@
+"""Sharding rules: parameter PartitionSpecs by path, batch/cache specs by
+shape cell.  Rule-based so every assigned architecture (including those whose
+head counts don't divide the TP axis) lowers cleanly:
+
+* shard a dim only when it divides the axis size — otherwise replicate that
+  tensor (e.g. hymba's 25 heads, gemma3's 8 heads stay replicated on TP=16
+  while their MLPs shard; noted in DESIGN.md §Arch-applicability);
+* ``long_500k`` (batch=1) shards the KV-cache/sequence axis over every mesh
+  axis instead of the batch axis (flash-decode style — softmax stats become
+  tiny all-reduces);
+* ``zero1=True`` additionally shards optimizer moments/master over the data
+  axis (ZeRO-1), the main beyond-paper memory lever.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model_zoo as zoo
+from repro.models.transformer import build_stages
+
+
+def _axsize(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    return math.prod(_axsize(mesh, a) for a in dp_axes(mesh))
+
+
+def param_spec_for(path_names, shape, cfg: ArchConfig, mp: int) -> P:
+    """PartitionSpec for one parameter leaf, by its path and shape."""
+    name = path_names[-1]
+    div = lambda d: d % mp == 0
+    none = P(*([None] * len(shape)))
+    if name in ("embed", "out_embed"):
+        return P("model", None)
+    if name in ("final_norm",):
+        return P(None)
+    parent = path_names[-2] if len(path_names) >= 2 else ""
+    if parent in ("attn", "cross"):
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        if name == "wq":
+            return P(None, None, "model", None) if div(H) else none
+        if name in ("wk", "wv"):
+            return P(None, None, "model", None) if div(K) else none
+        if name == "wo":
+            return P(None, "model", None, None) if div(H) else none
+    if parent == "mlp":
+        if name in ("w_gate", "w_up"):
+            return P(None, None, "model") if div(shape[-1]) else none
+        if name == "w_down":
+            return P(None, "model", None) if div(shape[-2]) else none
+    if parent == "moe":
+        E = cfg.moe.n_experts
+        if name == "router":
+            return none
+        if name.endswith("_m"):
+            return none  # mirrored experts are replicated BY DESIGN (paper)
+        return P(None, "model", None, None) if div(E) else none
+    if parent == "ssm":
+        di, hd = cfg.d_inner, cfg.ssm.head_dim
+        ok = div(di) and (di // mp) % hd == 0
+        h_ok = ok and div(cfg.n_ssm_heads)
+        if name in ("wz", "wx"):
+            return P(None, None, "model") if ok else none
+        if name == "conv_x":
+            return P(None, None, "model") if ok else none
+        if name == "out_proj":
+            return P(None, "model", None) if ok else none
+        if name == "norm":
+            return P(None, "model") if ok else none
+        if name == "wdt":
+            return P(None, None, "model") if h_ok else none
+        if name in ("A_log", "D_skip", "dt_bias"):
+            return P(None, "model") if h_ok else none
+        return none  # wB/wC/conv_B/conv_C (shared across heads)
+    return none
+
+
+def _path_names(path) -> tuple:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(cfg: ArchConfig, mesh, abstract_tree) -> Any:
+    mp = _axsize(mesh, "model")
+
+    def one(path, leaf):
+        return param_spec_for(_path_names(path), leaf.shape, cfg, mp)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_tree)
+
+
+def _zero1_spec(spec: P, shape, mesh) -> P:
+    """Extend a param spec with data-axis sharding on the first free,
+    divisible dim (ZeRO-1 optimizer-state sharding)."""
+    dsz = dp_size(mesh)
+    if dsz <= 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (pp, d) in enumerate(zip(parts, shape)):
+        if pp is None and d % dsz == 0:
+            parts[i] = dp_axes(mesh) if len(dp_axes(mesh)) > 1 else dp_axes(mesh)[0]
+            return P(*parts)
+    return P(*parts)
+
+
+def train_state_specs(cfg: ArchConfig, mesh, abstract_state,
+                      zero1: bool = False, fsdp: bool = False) -> Dict[str, Any]:
+    """zero1: shard optimizer moments/master over the data axis.
+    fsdp: additionally shard the parameters themselves over data (GSPMD
+    all-gathers them per use — weight-gathered data parallelism).  Required
+    for the >=15B archs to fit 16 GB/chip (EXPERIMENTS §Dry-run)."""
+    def z1(path, leaf):
+        base = param_spec_for(_path_names(path), leaf.shape, cfg,
+                              _axsize(mesh, "model"))
+        return _zero1_spec(base, leaf.shape, mesh)
+
+    zspecs = jax.tree_util.tree_map_with_path(z1, abstract_state["params"])
+    pspecs = (zspecs if fsdp
+              else param_specs(cfg, mesh, abstract_state["params"]))
+    if zero1 or fsdp:
+        ospec = {"master": zspecs, "m": zspecs, "v": zspecs, "step": P()}
+    else:
+        base = param_specs(cfg, mesh, abstract_state["params"])
+        ospec = {"master": base, "m": base, "v": base, "step": P()}
+    return {"params": pspecs, "opt": ospec}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict[str, P]:
+    B = shape.global_batch
+    dp = dp_axes(mesh)
+    bax = dp if (dp and B % dp_size(mesh) == 0) else None
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": P(bax, None)}
+        if cfg.enc_dec:
+            specs["enc_embeds"] = P(bax, None, None)
+        return specs
+    return {"token": P(bax, None)}
+
+
+def logits_spec(cfg: ArchConfig, shape: ShapeConfig, mesh) -> P:
+    """(B, V_pad) last-token logits: batch on dp, vocab on model."""
+    dp = dp_axes(mesh)
+    B = shape.global_batch
+    bax = dp if (dp and B % dp_size(mesh) == 0) else None
+    return P(bax, "model")
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                abstract_cache) -> Any:
+    """Spec tree mirroring build_cache structure."""
+    B = shape.global_batch
+    dp = dp_axes(mesh)
+    batch_ok = dp and B % dp_size(mesh) == 0
+    bax = dp if batch_ok else None
+    mp = _axsize(mesh, "model")
+    all_axes = tuple(mesh.axis_names)
+    nall = math.prod(mesh.shape.values())
+
+    def seq_ax(clen: int):
+        if not batch_ok:
+            # long-context single-sequence: shard the cache/seq axis on
+            # everything that divides (flash-decode style)
+            if clen % nall == 0:
+                return all_axes
+        return "model" if clen % mp == 0 else None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        shp = leaf.shape
+        name = names[-1]
+        if name == "pos":
+            return P(bax)
+        if name == "enc_out":
+            return P(bax, None, None)
+        if name in ("k", "v"):   # (L, B, clen, K, hd)
+            return P(None, bax, seq_ax(shp[2]), None, None)
+        if name == "k_pos":      # (B, clen)
+            return P(bax, seq_ax(shp[1]))
+        if name == "state":      # (L, B, H, P, N)
+            h_ok = cfg.n_ssm_heads % mp == 0
+            return P(None, bax, "model" if h_ok else None, None, None)
+        if "conv" in names:      # (L, B, w-1, C)
+            di_ok = shp[-1] % mp == 0 and shp[-1] == cfg.d_inner
+            return P(None, bax, None, "model" if di_ok else None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,87 @@
+"""LM training driver: checkpointed, restartable, CPU-runnable on reduced
+configs and mesh-ready for the full ones.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.transformer import ModelContext
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import StepConfig, init_train_state, make_train_step
+
+
+def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
+        ckpt_dir: str, ckpt_every: int = 50, lr: float = 3e-4,
+        seed: int = 0, log_every: int = 10, embed_method: str = "rr"):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    ctx = ModelContext(mesh=None, remat="none", embed_method=embed_method,
+                       q_chunk=max(seq, 64))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch, seed=seed))
+    step_fn = jax.jit(make_train_step(
+        cfg, ctx, StepConfig(opt=OptConfig(lr=lr, warmup_steps=20,
+                                           total_steps=steps))),
+        donate_argnums=(0,))
+
+    def init():
+        return init_train_state(cfg, jax.random.PRNGKey(seed), 1, jnp.float32)
+
+    state, start = ckpt.restore_or_init(ckpt_dir, init)
+    if start:
+        print(f"[train] resumed from step {start}")
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = data.batch_at(step)
+        if cfg.enc_dec:
+            rng = np.random.RandomState(step)
+            batch_np["enc_embeds"] = rng.randn(
+                batch, cfg.enc_seq, cfg.d_model).astype(np.float32)
+        state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+        if ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, state)
+    if ckpt_every:
+        ckpt.save(ckpt_dir, steps, state)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--embed-method", default="rr",
+                    choices=["gather", "onehot", "rr"])
+    args = ap.parse_args()
+    run(args.arch, args.reduced, args.steps, args.batch, args.seq,
+        args.ckpt_dir, args.ckpt_every, args.lr,
+        embed_method=args.embed_method)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""ArchConfig -> runnable model: param init (real or abstract), train loss,
+prefill and decode entry points, KV/SSM cache construction.
+
+Param pytree layout (all per-stage weights stacked on a leading layer axis):
+
+    params = {
+      'embed':      (V_pad, D),
+      'out_embed':  (V_pad, D),            # == embed when tie_embeddings
+      'final_norm': (D,),
+      'stages':     [ {'layers': {...stacked...}}, ... ],
+      'enc':        {'stages': [...], 'final_norm': (D,)}   # enc_dec only
+    }
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import embedding as emb
+from repro.models.layers import rms_norm
+from repro.models.transformer import (ModelContext, StageSpec,
+                                      apply_stage_decode, apply_stage_seq,
+                                      build_stages, enc_stage, stage_kpos)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ArchConfig, L: int) -> Dict[str, tuple]:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {"wq": (L, D, H, hd), "wk": (L, D, K, hd),
+            "wv": (L, D, K, hd), "wo": (L, H, hd, D)}
+
+
+def _ssm_shapes(cfg: ArchConfig, L: int) -> Dict[str, tuple]:
+    D = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    h = cfg.n_ssm_heads
+    w = cfg.ssm.conv_width
+    return {"wz": (L, D, di), "wx": (L, D, di), "wB": (L, D, g * n),
+            "wC": (L, D, g * n), "wdt": (L, D, h),
+            "conv_x": (L, w, di), "conv_B": (L, w, g * n), "conv_C": (L, w, g * n),
+            "A_log": (L, h), "D_skip": (L, h), "dt_bias": (L, h),
+            "norm": (L, di), "out_proj": (L, di, D)}
+
+
+def _mlp_shapes(cfg: ArchConfig, L: int) -> Dict[str, tuple]:
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_gate": (L, D, F), "w_up": (L, D, F), "w_down": (L, F, D)}
+
+
+def _moe_shapes(cfg: ArchConfig, L: int) -> Dict[str, tuple]:
+    D, E, F = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_ff_expert
+    m = max(cfg.moe.n_mirrored_experts, 1)  # keep a non-empty leaf for pytrees
+    return {"router": (L, D, E),
+            "w_gate": (L, E, D, F), "w_up": (L, E, D, F), "w_down": (L, E, F, D),
+            "w_gate_m": (L, m, D, F), "w_up_m": (L, m, D, F),
+            "w_down_m": (L, m, F, D)}
+
+
+def stage_param_shapes(cfg: ArchConfig, stage: StageSpec) -> Dict[str, Any]:
+    L, D = stage.n_layers, cfg.d_model
+    out: Dict[str, Any] = {"norm1": (L, D)}
+    if stage.kind == "ssm":
+        out["ssm"] = _ssm_shapes(cfg, L)
+        return out
+    out["norm2"] = (L, D)
+    if stage.kind == "hybrid":
+        out["attn"] = _attn_shapes(cfg, L)
+        out["ssm"] = _ssm_shapes(cfg, L)
+        out["mlp"] = _mlp_shapes(cfg, L)
+        return out
+    out["attn"] = _attn_shapes(cfg, L)
+    if stage.kind == "moe":
+        out["moe"] = _moe_shapes(cfg, L)
+    else:
+        out["mlp"] = _mlp_shapes(cfg, L)
+    if stage.kind == "dec_cross":
+        out["norm_cross"] = (L, D)
+        out["cross"] = _attn_shapes(cfg, L)
+    return out
+
+
+def param_shapes(cfg: ArchConfig, model_parallel: int = 1) -> Dict[str, Any]:
+    V = cfg.padded_vocab(model_parallel)
+    D = cfg.d_model
+    shapes: Dict[str, Any] = {
+        "embed": (V, D),
+        "out_embed": (V, D),
+        "final_norm": (D,),
+        "stages": [{"layers": stage_param_shapes(cfg, s)}
+                   for s in build_stages(cfg)],
+    }
+    es = enc_stage(cfg)
+    if es is not None:
+        shapes["enc"] = {"stages": [{"layers": stage_param_shapes(cfg, es)}],
+                         "final_norm": (D,)}
+    return shapes
+
+
+_NO_INIT_SCALE = {"norm1", "norm2", "norm_cross", "final_norm", "norm",
+                  "A_log", "D_skip", "dt_bias"}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, model_parallel: int = 1,
+                dtype=jnp.float32) -> Dict[str, Any]:
+    """Real initialization (smoke tests / the training examples)."""
+    shapes = param_shapes(cfg, model_parallel)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes,
+                                                           is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    D = cfg.d_model
+
+    def make(path, shape, k):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("norm1", "norm2", "norm_cross", "final_norm", "norm"):
+            return jnp.zeros(shape, dtype)
+        if name == "A_log":
+            return jnp.log(jnp.broadcast_to(
+                jnp.arange(1, shape[-1] + 1, dtype=jnp.float32), shape)).astype(jnp.float32)
+        if name == "D_skip":
+            return jnp.ones(shape, jnp.float32)
+        if name == "dt_bias":
+            return jnp.full(shape, math.log(math.expm1(0.01)), jnp.float32)
+        fan_in = shape[-2] if len(shape) >= 2 else D
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    vals = [make(p, s, k) for (p, s), k in zip(leaves, keys)]
+    params = jax.tree_util.tree_unflatten(treedef, vals)
+    if cfg.tie_embeddings:
+        params["out_embed"] = params["embed"]
+    return params
+
+
+def abstract_params(cfg: ArchConfig, model_parallel: int = 1,
+                    dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation).
+    Norm-ish / SSM scalar-family params stay fp32 (matching init)."""
+    def make(path, shape):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dt = jnp.float32 if name in _NO_INIT_SCALE else dtype
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    shapes = param_shapes(cfg, model_parallel)
+    return jax.tree_util.tree_map_with_path(
+        make, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, ids, ctx: ModelContext):
+    if ctx.mesh is not None and ctx.embed_method == "rr" and ids.ndim == 2:
+        h = emb.embed_lookup_sharded(params["embed"], ids, ctx.mesh,
+                                     ctx.dp_axes, ctx.ep_axis)
+    else:
+        h = emb.embed_lookup(params["embed"], ids, method=ctx.embed_method)
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def _run_encoder(params, cfg, ctx, enc_embeds):
+    es = enc_stage(cfg)
+    B, Se, _ = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    h = enc_embeds
+    h, _, _ = apply_stage_seq(h, params["enc"]["stages"][0], es, cfg, ctx, pos)
+    return rms_norm(h, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def _mask_pad_vocab(logits, vocab):
+    V = logits.shape[-1]
+    if V == vocab:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < vocab, logits, NEG_INF_F32)
+
+
+NEG_INF_F32 = -2.0 ** 30
+
+
+def forward_logits(params, cfg: ArchConfig, ctx: ModelContext, tokens,
+                   enc_embeds=None):
+    """tokens: (B, S) -> logits (B, S, V_pad) fp32 (vocab-sharded under jit)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed_in(params, cfg, tokens, ctx)
+    enc_out = _run_encoder(params, cfg, ctx, enc_embeds) if cfg.enc_dec else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for sp, stage in zip(params["stages"], build_stages(cfg)):
+        h, _, aux = apply_stage_seq(h, sp, stage, cfg, ctx, pos, enc_out=enc_out)
+        aux_total = aux_total + aux
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = emb.logits_matmul(h, params["out_embed"])
+    return _mask_pad_vocab(logits, cfg.vocab), aux_total
+
+
+def loss_fn(params, cfg: ArchConfig, ctx: ModelContext, batch,
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward_logits(params, cfg, ctx, tokens,
+                                 enc_embeds=batch.get("enc_embeds"))
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    nll = emb.softmax_xent(logits, labels, mask)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache build, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _stage_cache_len(stage: StageSpec, seq_len: int) -> int:
+    return min(stage.window, seq_len) if stage.window else seq_len
+
+
+def build_cache(cfg: ArchConfig, B: int, seq_len: int, ctx: ModelContext,
+                dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache pytree (arrays or ShapeDtypeStructs) for decode at context
+    ``seq_len``."""
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+         (lambda s, dt: jnp.zeros(s, dt))
+    K, hd = cfg.n_kv_heads, cfg.hd
+    caches = []
+    for stage in build_stages(cfg):
+        L = stage.n_layers
+        c: Dict[str, Any] = {}
+        clen = _stage_cache_len(stage, seq_len)
+        if stage.kind in ("dense", "moe", "dec_cross", "hybrid"):
+            c["k"] = mk((L, B, clen, K, hd), dtype)
+            c["v"] = mk((L, B, clen, K, hd), dtype)
+            c["k_pos"] = mk((B, clen), jnp.int32)
+        if stage.kind in ("ssm", "hybrid"):
+            di, gn = cfg.d_inner, cfg.ssm.n_groups * cfg.ssm.d_state
+            w = cfg.ssm.conv_width
+            c["conv"] = (mk((L, B, w - 1, di), dtype),
+                         mk((L, B, w - 1, gn), dtype),
+                         mk((L, B, w - 1, gn), dtype))
+            c["state"] = mk((L, B, cfg.n_ssm_heads,
+                             cfg.ssm.head_dim, cfg.ssm.d_state), jnp.float32)
+        caches.append(c)
+    out = {"stages": caches, "pos": mk((B,), jnp.int32)}
+    if cfg.enc_dec:
+        out["enc_out"] = mk((B, cfg.enc_seq, cfg.d_model), dtype)
+    return out
+
+
+def prefill(params, cfg: ArchConfig, ctx: ModelContext, tokens,
+            enc_embeds=None, max_len: int = 0):
+    """tokens: (B, S). Returns (last-token logits (B, V), cache).
+
+    ``max_len`` sets global-attention cache capacity (>= S + expected decode
+    steps); window stages always hold exactly ``window`` slots."""
+    B, S = tokens.shape
+    max_len = max(max_len, S)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _embed_in(params, cfg, tokens, ctx)
+    enc_out = _run_encoder(params, cfg, ctx, enc_embeds) if cfg.enc_dec else None
+    caches = []
+    for sp, stage in zip(params["stages"], build_stages(cfg)):
+        clen = _stage_cache_len(stage, max_len)
+        h, cache, _ = apply_stage_seq(h, sp, stage, cfg, ctx, pos,
+                                      enc_out=enc_out, want_cache=True,
+                                      cache_len=clen)
+        if stage.kind != "ssm":
+            cache["k_pos"] = stage_kpos(B, S, clen)
+        caches.append(cache)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = emb.logits_matmul(h[:, -1:], params["out_embed"])[:, 0]
+    out = {"stages": caches, "pos": jnp.full((B,), S, jnp.int32)}
+    if cfg.enc_dec:
+        out["enc_out"] = enc_out
+    return _mask_pad_vocab(logits, cfg.vocab), out
+
+
+def decode_step(params, cfg: ArchConfig, ctx: ModelContext, token, cache):
+    """token: (B, 1) int32; cache from prefill/build_cache.
+    Returns (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    h = _embed_in(params, cfg, token, ctx)
+    enc_out = cache.get("enc_out")
+    new_stages = []
+    for sp, stage, sc in zip(params["stages"], build_stages(cfg),
+                             cache["stages"]):
+        h, nc = apply_stage_decode(h, sp, stage, cfg, ctx, pos, sc,
+                                   enc_out=enc_out)
+        new_stages.append(nc)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = emb.logits_matmul(h, params["out_embed"])[:, 0]
+    new_cache = {"stages": new_stages, "pos": pos + 1}
+    if cfg.enc_dec:
+        new_cache["enc_out"] = enc_out
+    return _mask_pad_vocab(logits, cfg.vocab), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            specs["enc_embeds"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            specs["enc_embeds"] = sds((B, cfg.enc_seq, cfg.d_model), dtype)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"token": sds((B, 1), jnp.int32)}

@@ -1,0 +1,187 @@
+"""Mamba-2 SSD (state-space duality) block: chunked parallel scan for
+train/prefill, O(1)-state recurrent step for decode.
+
+Math (per head h, state dim N, head dim P):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * B_t x_t^T        (S: P x N)
+    y_t = C_t . S_t + D_skip * x_t
+
+The chunked algorithm follows arXiv:2405.21060 §6: within-chunk attention-like
+term via the 1-semiseparable mask L = exp(segsum(dtA)), plus inter-chunk
+state recurrence.  A naive recurrent oracle lives in
+``repro.kernels.ssd_scan.ref`` (tests assert allclose, and the Pallas kernel
+tiles the same chunk structure for VMEM).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rms_norm
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]
+    (lower-triangular; -inf above the diagonal)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'd, >0);
+    A: (h,) (negative); B, C: (b, s, g, n) with h % g == 0.
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    # chunk reshape: (b, c, l, ...)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,c,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dtA = (dtc * A[None, None, None, :]).astype(jnp.float32)  # (b,c,l,h) <= 0
+    xdt = xc * dtc[..., None].astype(xc.dtype)
+
+    # ---- intra-chunk (diagonal) term -------------------------------------
+    Lmat = jnp.exp(segsum(dtA.transpose(0, 1, 3, 2)))  # (b,c,h,l,l)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchlm,bchlm,bcmhp->bclhp", scores, Lmat,
+                        xdt.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+    # ---- per-chunk final states ------------------------------------------
+    cum = jnp.cumsum(dtA, axis=2)                       # (b,c,l,h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (b,c,l,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh,
+                        decay_to_end, xdt.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # (b,c,h,p,n)
+
+    # ---- inter-chunk recurrence (scan over chunks) ------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (b,c,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = st + dec[:, :, None, None] * carry
+        return new, carry  # emit state *entering* the chunk
+
+    final, prev_states = lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # ---- inter-chunk (off-diagonal) output term ---------------------------
+    decay_from_start = jnp.exp(cum)                      # (b,c,l,h)
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp", Ch, decay_from_start,
+                       prev_states, preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    return y, final.astype(jnp.float32)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrent step. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B, C: (b,g,n). Returns (y (b,h,p), new_state)."""
+    g = B.shape[1]
+    rep = state.shape[1] // g
+    Bh = jnp.repeat(B, rep, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dtA = (dt * A[None, :]).astype(jnp.float32)
+    new = (jnp.exp(dtA)[:, :, None, None] * state
+           + (dt.astype(jnp.float32))[:, :, None, None]
+           * x.astype(jnp.float32)[:, :, :, None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (projections + causal depthwise conv + SSD + gate)
+# ---------------------------------------------------------------------------
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           state: Optional[jax.Array] = None):
+    """x: (b, s, c); w: (width, c). Returns (y, new_state (b, width-1, c))."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: unrolled taps
+        y = y + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+def mamba_block(x: jax.Array, w: dict, cfg: SSMConfig, d_model: int,
+                conv_state=None, ssm_state=None, decode: bool = False):
+    """Mamba-2 mixer. x: (b, s, d_model). Weights:
+      wz/wx (D, d_inner), wB/wC (D, g*n), wdt (D, h),
+      conv_x (width, d_inner), conv_B/conv_C (width, g*n),
+      A_log (h,), D_skip (h,), dt_bias (h,), norm (d_inner,),
+      out_proj (d_inner, D).
+    Returns (y, (conv_states, ssm_state)).
+    """
+    b, s, _ = x.shape
+    d_inner = w["wx"].shape[1]
+    h = w["A_log"].shape[0]
+    p = d_inner // h
+    g = w["wB"].shape[1] // cfg.d_state
+    n = cfg.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, w["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, w["wx"])
+    Bv = jnp.einsum("bsd,de->bse", x, w["wB"])
+    Cv = jnp.einsum("bsd,de->bse", x, w["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, w["wdt"])
+
+    cs = conv_state if conv_state is not None else (None, None, None)
+    xs, cx = _causal_depthwise_conv(xs, w["conv_x"], cs[0])
+    Bv, cb = _causal_depthwise_conv(Bv, w["conv_B"], cs[1])
+    Cv, cc = _causal_depthwise_conv(Cv, w["conv_C"], cs[2])
+    xs, Bv, Cv = jax.nn.silu(xs), jax.nn.silu(Bv), jax.nn.silu(Cv)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + w["dt_bias"].astype(jnp.float32)[None, None])
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, s, h, p)
+    Bh = Bv.reshape(b, s, g, n)
+    Ch = Cv.reshape(b, s, g, n)
+
+    if decode:
+        y1, new_state = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0].astype(jnp.float32), A,
+            Bh[:, 0], Ch[:, 0])
+        y = y1[:, None]
+    else:
+        chunk = cfg.chunk if s % cfg.chunk == 0 else s
+        y, new_state = ssd_chunked(xh, dt.astype(jnp.float32), A, Bh, Ch,
+                                   chunk, init_state=ssm_state)
+    y = y + xh * w["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), w["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, w["out_proj"])
+    return out, ((cx, cb, cc), new_state)

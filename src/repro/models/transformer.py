@@ -1,0 +1,314 @@
+"""Stage-structured transformer backbone for every assigned architecture.
+
+A model is a list of **stages**; each stage is a stack of homogeneous layers
+whose parameters are stacked on a leading axis and applied with ``lax.scan``
+(compile time stays O(#stage kinds), not O(#layers)).  Heterogeneous layer
+patterns (gemma3's 5:1 local:global windows, hymba's sparse global layers)
+become multiple stages; caches are per-stage so sliding-window stages only
+hold ``window`` KV slots — that is what makes ``long_500k`` sub-quadratic.
+
+Modes:
+  train   — full causal forward, logits for the shifted-token loss
+  prefill — same forward, also emits the KV/SSM caches + last-position logits
+  decode  — one token against the caches (ring-buffer windows, SSM state)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (AttnSpec, NEG_INF, apply_rope, attn_block,
+                                 rms_norm, swiglu)
+from repro.models.moe import MoEContext, moe_ffn_ep, moe_ffn_ref
+from repro.models.ssm import mamba_block
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    kind: str        # 'dense' | 'moe' | 'ssm' | 'hybrid' | 'enc' | 'dec_cross'
+    n_layers: int
+    window: int = 0  # 0 = global attention
+
+
+def build_stages(cfg: ArchConfig) -> List[StageSpec]:
+    if cfg.family == "ssm":
+        return [StageSpec("ssm", cfg.n_layers)]
+    if cfg.is_moe:
+        return [StageSpec("moe", cfg.n_layers)]
+    kind = "hybrid" if cfg.family == "hybrid" else "dense"
+    if cfg.enc_dec:
+        kind = "dec_cross"
+    if not cfg.sliding_window:
+        return [StageSpec(kind, cfg.n_layers)]
+    stages, run_w, run_n = [], None, 0
+    for i in range(1, cfg.n_layers + 1):
+        w = 0 if (cfg.global_every and i % cfg.global_every == 0) else cfg.sliding_window
+        if w == run_w:
+            run_n += 1
+        else:
+            if run_n:
+                stages.append(StageSpec(kind, run_n, run_w))
+            run_w, run_n = w, 1
+    stages.append(StageSpec(kind, run_n, run_w))
+    return stages
+
+
+def enc_stage(cfg: ArchConfig) -> Optional[StageSpec]:
+    return StageSpec("enc", cfg.n_enc_layers) if cfg.enc_dec else None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    """Distribution/implementation knobs. mesh=None => local smoke mode."""
+    mesh: Optional[Any] = None
+    dp_axes: tuple = ("data",)
+    ep_axis: str = "model"
+    embed_method: str = "rr"       # gather | onehot | rr  (paper technique)
+    remat: str = "full"            # 'full' | 'dots' | 'none'
+    q_chunk: int = 1024
+    # causal/window skip through static per-chunk KV slices (exact but
+    # measured slower on the dry-run byte metric — §Perf iterations 3/4)
+    attn_sliced: bool = False
+    # scan=True keeps compile time O(1) in depth; the dry-run unrolls
+    # (False) because XLA's HloCostAnalysis visits while bodies only once.
+    scan_layers: bool = True
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.mesh.shape.values()) if self.mesh is not None else 1
+
+
+def _attn_spec(cfg, window, causal=True, ctx: ModelContext = None):
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                    causal=causal, window=window,
+                    q_chunk=(ctx.q_chunk if ctx else 1024),
+                    sliced=(ctx.attn_sliced if ctx else True))
+
+
+def _moe_call(x2d, w, cfg: ArchConfig, ctx: ModelContext):
+    if ctx.mesh is None:
+        return moe_ffn_ref(x2d, w, cfg.moe)
+    mctx = MoEContext(mesh=ctx.mesh, ep_axis=ctx.ep_axis, dp_axes=ctx.dp_axes)
+    return moe_ffn_ep(x2d, w, cfg.moe, mctx)
+
+
+def _cross_attend(h, w, spec, cfg, q_pos, enc_out):
+    B = h.shape[0]
+    cpos = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                            (B, enc_out.shape[1]))
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out, w["cross"]["wk"])
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out, w["cross"]["wv"])
+    cspec = dataclasses.replace(spec, causal=False, window=0)
+    return attn_block(rms_norm(h, w["norm_cross"], cfg.norm_eps),
+                      w["cross"], cspec, q_pos,
+                      cross_kv=(ck, cv), cross_pos=cpos)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence stage application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_stage_seq(h, sp, stage: StageSpec, cfg: ArchConfig,
+                    ctx: ModelContext, positions,
+                    enc_out=None, want_cache=False, cache_len=0):
+    """Run one stacked stage over the full sequence.
+    Returns (h, stacked_layer_caches: dict, aux_loss: scalar)."""
+    spec = _attn_spec(cfg, stage.window, causal=stage.kind != "enc", ctx=ctx)
+    B, S, D = h.shape
+    T_pad = ctx.n_devices
+
+    def layer(h, w):
+        aux = jnp.zeros((), jnp.float32)
+        cache = {}
+        if stage.kind == "ssm":
+            xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+            y, (cst, sst) = mamba_block(xn, w["ssm"], cfg.ssm, cfg.d_model)
+            h = h + y
+            if want_cache:
+                cache = {"conv": cst, "state": sst}
+            return h, aux, cache
+        if stage.kind == "hybrid":
+            xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+            a = attn_block(xn, w["attn"], spec, positions,
+                           return_kv=want_cache)
+            if want_cache:
+                a, (kf, vf) = a
+            m, (cst, sst) = mamba_block(xn, w["ssm"], cfg.ssm, cfg.d_model)
+            h = h + a + m
+            h = h + swiglu(rms_norm(h, w["norm2"], cfg.norm_eps), w["mlp"])
+            if want_cache:
+                kc, vc = _tail_cache(kf, vf, cache_len)
+                cache = {"k": kc, "v": vc, "conv": cst, "state": sst}
+            return h, aux, cache
+        # attention-based stages
+        xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+        a = attn_block(xn, w["attn"], spec, positions, return_kv=want_cache)
+        if want_cache:
+            a, (kf, vf) = a
+        h = h + a
+        if stage.kind == "dec_cross":
+            h = h + _cross_attend(h, w, spec, cfg, positions, enc_out)
+        if stage.kind == "moe":
+            xm = rms_norm(h, w["norm2"], cfg.norm_eps)
+            x2 = xm.reshape(B * S, D)
+            if (B * S) % T_pad:
+                x2 = jnp.pad(x2, ((0, T_pad - (B * S) % T_pad), (0, 0)))
+            y, aux = _moe_call(x2, w["moe"], cfg, ctx)
+            h = h + y[:B * S].reshape(B, S, D)
+        else:
+            h = h + swiglu(rms_norm(h, w["norm2"], cfg.norm_eps), w["mlp"])
+        if want_cache:
+            kc, vc = _tail_cache(kf, vf, cache_len)
+            cache = {"k": kc, "v": vc}
+        return h, aux, cache
+
+    run = layer
+    if not want_cache and ctx.remat != "none":
+        if ctx.remat == "dots":
+            run = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            run = jax.checkpoint(layer)
+
+    def scan_body(carry, w):
+        h, aux_acc = carry
+        h2, aux, cache = run(h, w)
+        return (h2, aux_acc + aux), cache
+
+    if ctx.scan_layers:
+        (h, aux_total), caches = lax.scan(
+            scan_body, (h, jnp.zeros((), jnp.float32)), sp["layers"])
+        return h, caches, aux_total
+    aux_total = jnp.zeros((), jnp.float32)
+    per_layer = []
+    for i in range(stage.n_layers):
+        w_i = jax.tree.map(lambda x, i=i: x[i], sp["layers"])
+        h, aux, cache = run(h, w_i)
+        aux_total = aux_total + aux
+        per_layer.append(cache)
+    caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+              if per_layer and per_layer[0] else {})
+    return h, caches, aux_total
+
+
+def _tail_cache(k, v, cache_len: int):
+    """Keep the last ``cache_len`` positions of already-computed rotated K/V
+    in ring-buffer layout (slot = pos % cache_len)."""
+    S = k.shape[1]
+    if cache_len >= S:
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return k, v
+    tail_k, tail_v = k[:, -cache_len:], v[:, -cache_len:]
+    shift = S % cache_len
+    return (jnp.roll(tail_k, shift, axis=1), jnp.roll(tail_v, shift, axis=1))
+
+
+def stage_kpos(B: int, S: int, clen: int) -> jax.Array:
+    """Positions held by each ring-buffer slot after prefilling S tokens."""
+    slots = jnp.arange(clen)
+    if clen >= S:
+        return jnp.broadcast_to(jnp.where(slots < S, slots, -1), (B, clen))
+    # largest p < S with p % clen == slot
+    last = S - 1 - (S - 1 - slots) % clen
+    p = jnp.where(last >= S, last - clen, last)
+    return jnp.broadcast_to(p, (B, clen))
+
+
+# ---------------------------------------------------------------------------
+# single-token decode stage application
+# ---------------------------------------------------------------------------
+
+def apply_stage_decode(h, sp, stage: StageSpec, cfg: ArchConfig,
+                       ctx: ModelContext, pos, cache, enc_out=None):
+    """h: (B, 1, D); pos: (B,); cache: stage cache {layers..., 'k_pos'?}.
+    Returns (h, new_cache)."""
+    spec = _attn_spec(cfg, stage.window, ctx=ctx)
+    B = h.shape[0]
+    T_pad = ctx.n_devices
+    k_pos = cache.get("k_pos")
+    new_k_pos = None
+    if k_pos is not None:
+        clen = k_pos.shape[1]
+        new_k_pos = k_pos.at[jnp.arange(B), pos % clen].set(pos)
+
+    def attend_cached(xn, w, kc, vc):
+        q = jnp.einsum("bsd,dhk->bshk", xn, w["wq"])
+        q = apply_rope(q, pos[:, None], spec.rope_theta)
+        k_new = apply_rope(jnp.einsum("bsd,dhk->bshk", xn, w["wk"]),
+                           pos[:, None], spec.rope_theta)
+        v_new = jnp.einsum("bsd,dhk->bshk", xn, w["wv"])
+        clen = kc.shape[1]
+        slot = pos % clen
+        bidx = jnp.arange(B)
+        kc = kc.at[bidx, slot].set(k_new[:, 0])
+        vc = vc.at[bidx, slot].set(v_new[:, 0])
+        n_rep = spec.n_heads // spec.n_kv_heads
+        kf = jnp.repeat(kc, n_rep, axis=2) if n_rep > 1 else kc
+        vf = jnp.repeat(vc, n_rep, axis=2) if n_rep > 1 else vc
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf,
+                            preferred_element_type=jnp.float32) * spec.head_dim ** -0.5
+        valid = (new_k_pos >= 0) & (new_k_pos <= pos[:, None])
+        if spec.window:
+            valid &= new_k_pos > (pos[:, None] - spec.window)
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vf.dtype), vf,
+                       preferred_element_type=jnp.float32).astype(xn.dtype)
+        return jnp.einsum("bshk,hkd->bsd", o, w["wo"]), kc, vc
+
+    def layer(h, per_layer):
+        w, lc = per_layer
+        if stage.kind == "ssm":
+            xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+            y, (cst, sst) = mamba_block(xn, w["ssm"], cfg.ssm, cfg.d_model,
+                                        conv_state=lc["conv"],
+                                        ssm_state=lc["state"], decode=True)
+            return h + y, {"conv": cst, "state": sst}
+        if stage.kind == "hybrid":
+            xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+            a, kc, vc = attend_cached(xn, w["attn"], lc["k"], lc["v"])
+            m, (cst, sst) = mamba_block(xn, w["ssm"], cfg.ssm, cfg.d_model,
+                                        conv_state=lc["conv"],
+                                        ssm_state=lc["state"], decode=True)
+            h = h + a + m
+            h = h + swiglu(rms_norm(h, w["norm2"], cfg.norm_eps), w["mlp"])
+            return h, {"k": kc, "v": vc, "conv": cst, "state": sst}
+        xn = rms_norm(h, w["norm1"], cfg.norm_eps)
+        a, kc, vc = attend_cached(xn, w["attn"], lc["k"], lc["v"])
+        h = h + a
+        if stage.kind == "dec_cross":
+            h = h + _cross_attend(h, w, spec, cfg, pos[:, None], enc_out)
+        if stage.kind == "moe":
+            xm = rms_norm(h, w["norm2"], cfg.norm_eps)
+            x2 = xm.reshape(B, -1)
+            if B % T_pad:
+                x2 = jnp.pad(x2, ((0, T_pad - B % T_pad), (0, 0)))
+            y, _ = _moe_call(x2, w["moe"], cfg, ctx)
+            h = h + y[:B].reshape(B, 1, -1)
+        else:
+            h = h + swiglu(rms_norm(h, w["norm2"], cfg.norm_eps), w["mlp"])
+        return h, {"k": kc, "v": vc}
+
+    layer_caches = {k: v for k, v in cache.items() if k != "k_pos"}
+    if ctx.scan_layers:
+        h, new_caches = lax.scan(layer, h, (sp["layers"], layer_caches))
+    else:
+        per_layer = []
+        for i in range(stage.n_layers):
+            xi = jax.tree.map(lambda x, i=i: x[i], (sp["layers"], layer_caches))
+            h, nc = layer(h, xi)
+            per_layer.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    out = dict(new_caches)
+    if new_k_pos is not None:
+        out["k_pos"] = new_k_pos
+    return h, out

@@ -1,0 +1,103 @@
+"""AdamW with global-norm clipping and cosine LR — hand-rolled on pytrees
+(no optax in this environment), mixed-precision aware: bf16 params are
+updated through an fp32 master copy carried in the optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _decay_mask(p: jax.Array) -> bool:
+    return p.ndim >= 2  # no weight decay on norms / per-head vectors
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    # copy=True / fresh buffers everywhere: XLA dedups identical constants
+    # and a no-op astype aliases its input — donated train states must not
+    # contain twice-donated buffers.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+
+    def fresh_zeros(p):
+        import numpy as _np
+        return jnp.asarray(_np.zeros(p.shape, _np.float32))
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(fresh_zeros, params),
+        "v": jax.tree.map(fresh_zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(params: Any) -> Dict[str, Any]:
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"master": jax.tree.map(sds, params),
+            "m": jax.tree.map(sds, params),
+            "v": jax.tree.map(sds, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(grads: Any) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(params: Any, grads: Any, opt: Dict[str, Any],
+                 cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if _decay_mask(p):
+            update = update + cfg.weight_decay * master
+        new_master = master - lr * update
+        return new_master.astype(p.dtype), new_master, m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt["master"], opt["m"], opt["v"])
+    leaves = jax.tree_util.tree_structure(params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree_util.tree_map(lambda t: t[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[3], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,99 @@
+"""Train/serve step factories used by the launchers and the dry-run.
+
+``make_train_step`` builds the canonical fused step:
+    loss -> grad (remat per layer) -> clip -> AdamW -> new state
+with optional gradient accumulation over microbatches (a ``lax.scan`` whose
+carry is the grad accumulator — the memory lever for big cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo as zoo
+from repro.models.transformer import ModelContext
+from repro.train.optimizer import (OptConfig, abstract_opt_state,
+                                   adamw_update, init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    n_microbatches: int = 1
+    opt: OptConfig = OptConfig()
+    aux_weight: float = 0.01
+
+
+def init_train_state(cfg: ArchConfig, key, model_parallel=1,
+                     dtype=jnp.float32) -> Dict[str, Any]:
+    params = zoo.init_params(cfg, key, model_parallel, dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_train_state(cfg: ArchConfig, model_parallel=1,
+                         dtype=jnp.bfloat16) -> Dict[str, Any]:
+    params = zoo.abstract_params(cfg, model_parallel, dtype)
+    return {"params": params, "opt": abstract_opt_state(params)}
+
+
+def make_train_step(cfg: ArchConfig, ctx: ModelContext,
+                    step_cfg: StepConfig = StepConfig()):
+    def loss(params, batch):
+        l, metrics = zoo.loss_fn(params, cfg, ctx, batch,
+                                 aux_weight=step_cfg.aux_weight)
+        return l, metrics
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def single(params, batch):
+        (l, metrics), grads = grad_fn(params, batch)
+        return l, metrics, grads
+
+    def accumulated(params, batch):
+        n = step_cfg.n_microbatches
+
+        def split(x):
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+        def body(acc, mb):
+            (l, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / n,
+                               acc, grads)
+            return acc, (l, metrics)
+
+        grads, (ls, ms) = lax.scan(body, zero, micro)
+        metrics = jax.tree.map(lambda x: x.mean(), ms)
+        return ls.mean(), metrics, grads
+
+    def train_step(state, batch):
+        fn = single if step_cfg.n_microbatches == 1 else accumulated
+        l, metrics, grads = fn(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], step_cfg.opt)
+        metrics = dict(metrics, loss=l, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ModelContext, max_len: int = 0):
+    def prefill_step(params, batch):
+        return zoo.prefill(params, cfg, ctx, batch["tokens"],
+                           enc_embeds=batch.get("enc_embeds"),
+                           max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, ctx: ModelContext):
+    def serve_step(params, token, cache):
+        return zoo.decode_step(params, cfg, ctx, token, cache)
+    return serve_step

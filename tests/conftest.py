@@ -1,0 +1,56 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# separate process).  Keep compilation caches warm across tests.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+def union_find_cc(n, src, dst):
+    p = np.arange(n)
+
+    def find(x):
+        while p[x] != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return x
+
+    for s, d in zip(src, dst):
+        a, b = find(s), find(d)
+        if a != b:
+            p[max(a, b)] = min(a, b)
+    return np.array([find(i) for i in range(n)])
+
+
+def kruskal_msf(n, src, dst, w):
+    pairs = {}
+    for s, d, ww in zip(src, dst, w):
+        a, b = min(s, d), max(s, d)
+        pairs[(a, b)] = min(pairs.get((a, b), np.inf), ww)
+    edges = sorted((ww, a, b) for (a, b), ww in pairs.items())
+    p = np.arange(n)
+
+    def find(x):
+        while p[x] != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return x
+
+    tw, ne = 0.0, 0
+    for ww, a, b in edges:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            p[max(ra, rb)] = min(ra, rb)
+            tw += ww
+            ne += 1
+    return tw, ne
+
+
+@pytest.fixture(scope="session")
+def oracles():
+    return {"cc": union_find_cc, "msf": kruskal_msf}

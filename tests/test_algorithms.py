@@ -1,0 +1,140 @@
+"""Algorithm correctness vs numpy oracles (+ hypothesis randomization)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms.attr_bcast import attribute_broadcast
+from repro.algorithms.hashmin import hashmin
+from repro.algorithms.msf import msf
+from repro.algorithms.pagerank import pagerank
+from repro.algorithms.sssp import sssp
+from repro.algorithms.sv import sv
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+
+def _check_cc(g, pg, labels, cc_oracle):
+    flat = np.asarray(labels).reshape(-1)
+    mine = flat[pg.perm]  # per original vertex
+    oc = cc_oracle(g.n, g.src, g.dst)
+    groups = {}
+    for v in range(g.n):
+        groups.setdefault(oc[v], set()).add(int(mine[v]))
+    assert all(len(s) == 1 for s in groups.values())
+    labs = [next(iter(s)) for s in groups.values()]
+    assert len(set(labs)) == len(labs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 8]),
+       st.sampled_from(["powerlaw", "two_cliques", "chain"]))
+def test_hashmin_cc(seed, M, kind, ):
+    if kind == "powerlaw":
+        g = gen.powerlaw(400, avg_deg=5, seed=seed).symmetrized()
+    elif kind == "two_cliques":
+        g = gen.two_cliques(20)
+    else:
+        g = gen.chain(64)
+    pg = partition(g, M, tau=16, seed=seed % 7)
+    labels, stats, n = hashmin(pg)
+    from conftest import union_find_cc
+    _check_cc(g, pg, labels, union_find_cc)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 8]))
+def test_sv_cc(seed, M):
+    g = gen.powerlaw(400, avg_deg=5, seed=seed).symmetrized()
+    pg = partition(g, M, tau=None, seed=seed % 5)
+    labels, stats, n = sv(pg)
+    from conftest import union_find_cc
+    _check_cc(g, pg, labels, union_find_cc)
+    # request-respond strictly reduces messages in S-V (Fig. 13)
+    assert int(stats["msgs_rr"]) < int(stats["msgs_basic"])
+
+
+def test_sv_logarithmic_rounds():
+    """S-V on a long chain converges in O(log n), not O(diameter)."""
+    g = gen.chain(1024)
+    pg = partition(g, 8, tau=None, seed=0)
+    _, _, n_rounds = sv(pg)
+    assert int(n_rounds) <= 25  # ~log2(1024) + slack; diameter is 1023
+    _, _, n_hm = hashmin(pg)
+    assert int(n_hm) > int(n_rounds)  # Hash-Min needs O(diameter)
+
+
+def test_pagerank_matches_power_iteration():
+    g = gen.powerlaw(800, avg_deg=7, seed=2).symmetrized()
+    pg = partition(g, 8, tau=32, seed=1)
+    pr, _, _ = pagerank(pg, n_iters=20, tol=1e-12)
+    mine = np.asarray(pr).reshape(-1)[pg.perm]
+    deg = np.bincount(g.src, minlength=g.n)
+    x = np.full(g.n, 1.0 / g.n)
+    for _ in range(20):
+        contrib = np.where(deg > 0, x / np.maximum(deg, 1), 0.0)
+        inbox = np.zeros(g.n)
+        np.add.at(inbox, g.dst, contrib[g.src])
+        x = 0.15 / g.n + 0.85 * inbox
+    np.testing.assert_allclose(mine, x, rtol=1e-4, atol=1e-7)
+
+
+def test_pagerank_mirroring_same_result():
+    g = gen.powerlaw(600, avg_deg=8, seed=4, alpha=1.8).symmetrized()
+    pg = partition(g, 8, tau=10, seed=0)
+    pr1, s1, _ = pagerank(pg, n_iters=10, tol=1e-12, use_mirroring=True)
+    pr2, s2, _ = pagerank(pg, n_iters=10, tol=1e-12, use_mirroring=False)
+    np.testing.assert_allclose(np.asarray(pr1), np.asarray(pr2),
+                               rtol=1e-5, atol=1e-9)
+    assert int(s1["msgs_total"]) < int(s2["msgs_combined"])
+
+
+def test_sssp_matches_bellman_ford():
+    g = gen.grid_road(20, weighted=True)
+    pg = partition(g, 8, tau=None, seed=0)
+    src_new = int(pg.perm[0])
+    dist, _, _ = sssp(pg, src_new)
+    mine = np.asarray(dist).reshape(-1)[pg.perm]
+    dd = np.full(g.n, np.inf)
+    dd[0] = 0.0
+    for _ in range(500):
+        nd = dd.copy()
+        np.minimum.at(nd, g.dst, dd[g.src] + g.weight)
+        if np.allclose(nd, dd):
+            break
+        dd = nd
+    np.testing.assert_allclose(mine, dd, rtol=1e-5, atol=1e-5)
+
+
+def test_sssp_relay_with_mirroring():
+    """relay() adds edge weights at the mirror: same result either channel."""
+    g = gen.powerlaw(400, avg_deg=8, seed=6, weighted=True).symmetrized()
+    pg = partition(g, 8, tau=8, seed=0)
+    s = int(pg.perm[0])
+    d1, _, _ = sssp(pg, s, use_mirroring=True)
+    d2, _, _ = sssp(pg, s, use_mirroring=False)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_msf_matches_kruskal(seed):
+    g = gen.powerlaw(300, avg_deg=5, seed=seed, weighted=True).symmetrized()
+    pg = partition(g, 8, tau=None, seed=seed % 3)
+    (res, stats, n) = msf(pg)
+    _, tw, ne = res
+    from conftest import kruskal_msf
+    tw_o, ne_o = kruskal_msf(g.n, g.src, g.dst, g.weight)
+    assert int(ne) == ne_o
+    assert abs(float(tw) - tw_o) < 1e-3
+    assert int(stats["msgs_rr"]) < int(stats["msgs_basic"])
+
+
+def test_attr_broadcast_annotates_adjacency():
+    g = gen.powerlaw(500, avg_deg=6, seed=1).symmetrized()
+    pg = partition(g, 8, tau=None, seed=0)
+    attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc) * 2
+    out, stats = attribute_broadcast(pg, attr)
+    o, d, m = np.asarray(out), np.asarray(pg.all_dst), np.asarray(pg.all_mask)
+    np.testing.assert_allclose(o[m], 2.0 * d[m])
+    assert int(stats["msgs_rr"]) <= int(stats["msgs_basic"])

@@ -1,0 +1,153 @@
+"""Channel semantics + theorem properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model
+from repro.core.channels import (broadcast, push_combined, rr_gather,
+                                 scatter_combine)
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+
+def _rand_pg(n, M, tau, seed, avg_deg=6):
+    g = gen.powerlaw(n, avg_deg=avg_deg, seed=seed).symmetrized()
+    return g, partition(g, M, tau=tau, seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(40, 400))
+def test_push_combined_matches_numpy(seed, M, n):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    n_loc = -(-n // M)
+    K = 30
+    targets = rng.randint(0, n, (M, K)).astype(np.int32)
+    values = rng.randn(M, K).astype(np.float32)
+    mask = rng.rand(M, K) > 0.3
+    for op, ident, red in [("sum", 0.0, np.add), ("min", np.inf, np.minimum),
+                           ("max", -np.inf, np.maximum)]:
+        inbox, stats = push_combined(jnp.asarray(targets),
+                                     jnp.asarray(values),
+                                     jnp.asarray(mask), op, M, n_loc)
+        ref = np.full(M * n_loc, ident, np.float32)
+        red.at(ref, targets[mask], values[mask])
+        np.testing.assert_allclose(np.asarray(inbox).reshape(-1), ref,
+                                   rtol=1e-6, atol=1e-6)
+        # combined <= basic (Theorem: combining only reduces)
+        assert int(stats["msgs_combined"]) <= int(stats["msgs_basic"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rr_gather_matches_take_and_thm3(seed):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    M, n_loc, R = 6, 50, 80
+    vals = rng.randn(M, n_loc).astype(np.float32)
+    targets = rng.randint(0, M * n_loc, (M, R)).astype(np.int32)
+    # skew: half the targets hit one hot vertex (the S-V pattern)
+    hot = rng.randint(0, M * n_loc)
+    targets[:, : R // 2] = hot
+    mask = rng.rand(M, R) > 0.2
+    out, stats = rr_gather(jnp.asarray(vals), jnp.asarray(targets),
+                           jnp.asarray(mask), M, n_loc)
+    ref = vals.reshape(-1)[targets]
+    np.testing.assert_allclose(np.asarray(out)[mask], ref[mask], rtol=1e-6)
+    # Theorem 3: per-target messages bounded by 2*min(M, l)
+    assert int(stats["msgs_rr"]) <= int(stats["msgs_basic"])
+    # the hot target contributes at most 2*M to msgs_rr but l to basic
+    l_hot = int((mask[:, : R // 2]).sum())
+    if l_hot > 2 * M:
+        assert int(stats["msgs_basic"]) - int(stats["msgs_rr"]) >= \
+            (l_hot - 2 * M) // 2
+
+
+def test_mirror_bound_thm1():
+    """Each active mirrored vertex sends <= min(M, d(v)) messages."""
+    g, pg = _rand_pg(600, 8, tau=10, seed=1)
+    vals = jnp.where(pg.vmask, 1.0, 0.0)
+    _, stats = broadcast(pg, vals, pg.vmask, op="sum", use_mirroring=True)
+    nmir = int((np.asarray(pg.mir_ids) < pg.n_pad).sum())
+    assert nmir > 0, "test graph must have mirrored vertices"
+    assert int(stats["msgs_mirror"]) <= nmir * min(pg.M, int(pg.deg.max()))
+    per_v = np.asarray(pg.mir_nworkers)[:nmir]
+    assert (per_v <= pg.M).all()
+
+
+def test_mirroring_equivalence():
+    """Mirroring is transparent: same inbox values with/without."""
+    g, pg = _rand_pg(500, 8, tau=12, seed=3)
+    vals = jnp.asarray(
+        np.random.RandomState(0).randn(pg.M, pg.n_loc).astype(np.float32))
+    for op in ["sum", "min", "max"]:
+        a, _ = broadcast(pg, vals, pg.vmask, op=op, use_mirroring=True)
+        b, _ = broadcast(pg, vals, pg.vmask, op=op, use_mirroring=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mirroring_reduces_messages_on_skewed_graph():
+    """The paper's headline effect (Fig. 12, BTC/Hash-Min)."""
+    g = gen.powerlaw(3000, avg_deg=8, seed=5, alpha=1.8).symmetrized()
+    M = 16
+    tau = cost_model.choose_tau(g.out_degrees(), M)
+    pg_mir = partition(g, M, tau=tau, seed=0)
+    vals = jnp.where(pg_mir.vmask, 1.0, 0.0)
+    _, s_mir = broadcast(pg_mir, vals, pg_mir.vmask, "sum",
+                         use_mirroring=True)
+    _, s_nom = broadcast(pg_mir, vals, pg_mir.vmask, "sum",
+                         use_mirroring=False)
+    total_mir = int(s_mir["msgs_total"])
+    total_nom = int(s_nom["msgs_combined"])
+    basic = int(s_nom["msgs_basic"])
+    assert total_mir < total_nom < basic
+
+
+def test_scatter_combine_matches_numpy():
+    rng = np.random.RandomState(0)
+    M, n_loc, K = 4, 20, 15
+    vals = rng.randint(0, 100, (M, n_loc)).astype(np.int32)
+    targets = rng.randint(0, M * n_loc, (M, K)).astype(np.int32)
+    upd = rng.randint(0, 100, (M, K)).astype(np.int32)
+    mask = rng.rand(M, K) > 0.3
+    out, _ = scatter_combine(jnp.asarray(vals), jnp.asarray(targets),
+                             jnp.asarray(upd), jnp.asarray(mask),
+                             "min", M, n_loc)
+    ref = vals.reshape(-1).copy()
+    np.minimum.at(ref, targets[mask], upd[mask])
+    np.testing.assert_array_equal(np.asarray(out).reshape(-1), ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 512), st.floats(0.5, 60.0))
+def test_thm2_threshold_properties(M, deg_avg):
+    tau = cost_model.mirror_threshold(M, deg_avg)
+    assert tau >= M  # never mirror below M messages' worth of degree
+    # threshold grows with deg_avg (denser graphs combine better)
+    assert cost_model.mirror_threshold(M, deg_avg + 1) > tau
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 10 ** 6))
+def test_thm1_thm3_bounds(M, d):
+    assert cost_model.thm1_bound(M, d) == min(M, d)
+    assert cost_model.thm3_bound(M, d) == 2 * min(M, d)
+
+
+def test_cost_model_tau_is_near_optimal():
+    """Sweeping tau on a skewed graph: the Thm-2 tau is within 20% of the
+    best tested threshold's message count (paper §7.1 claim)."""
+    g = gen.powerlaw(4000, avg_deg=8, seed=9, alpha=1.8).symmetrized()
+    M = 16
+    deg = g.out_degrees()
+    taus = [1, 10, 100, 1000, cost_model.choose_tau(deg, M)]
+    counts = {}
+    for tau in taus:
+        pg = partition(g, M, tau=tau, seed=0)
+        vals = jnp.where(pg.vmask, 1.0, 0.0)
+        _, s = broadcast(pg, vals, pg.vmask, "sum", use_mirroring=True)
+        counts[tau] = int(s["msgs_total"])
+    best = min(counts.values())
+    auto = counts[cost_model.choose_tau(deg, M)]
+    assert auto <= 1.2 * best, counts

@@ -1,0 +1,103 @@
+"""Sharding-rule regression tests: lower + compile the real train/serve
+steps on a small fake mesh (subprocess, 8 devices) and assert batch
+sharding survives the embedding (the §Perf iteration-1 defect class)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str, timeout=900):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, cwd=".",
+                       timeout=timeout)
+    assert r.returncode == 0, r.stderr[-4000:]
+    return r.stdout
+
+
+def test_train_step_lowers_sharded():
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, dataclasses, re
+        from repro.configs.base import get_config
+        from repro.launch import shardings as sh
+        from repro.models.transformer import ModelContext
+        from repro.train.train_step import (StepConfig, abstract_train_state,
+                                            make_train_step)
+        from repro.models import model_zoo as zoo
+        from repro.configs.base import ShapeConfig
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(
+            get_config("tinyllama_1_1b").reduced(), vocab=256)
+        ctx = ModelContext(mesh=mesh, dp_axes=("data",), remat="full",
+                           q_chunk=16, scan_layers=True)
+        state = abstract_train_state(cfg, 4, jnp.bfloat16)
+        sspecs = sh.train_state_specs(cfg, mesh, state)
+        shape = ShapeConfig("t", 32, 8, "train")
+        bspecs = sh.batch_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, ctx, StepConfig())
+        inputs = zoo.input_specs(cfg, shape)
+        lowered = jax.jit(step, in_shardings=(sh.named(mesh, sspecs),
+                                              sh.named(mesh, bspecs)),
+                          donate_argnums=(0,)).lower(state, inputs)
+        compiled = lowered.compile()
+        txt = compiled.as_text()
+        assert "all-reduce" in txt or "all-gather" in txt
+        # batch stays sharded: no full-batch (8, 32, d_model) activations
+        # should be all-reduced; 4/chip is the sharded size
+        assert not re.search(r"f32\\[8,32,64\\][^)]*all-reduce", txt)
+        print("train lower OK")
+    """)
+    assert "train lower OK" in out
+
+
+def test_decode_step_lowers_with_cache_specs():
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, dataclasses
+        from jax.sharding import NamedSharding
+        from repro.configs.base import get_config, ShapeConfig
+        from repro.launch import shardings as sh
+        from repro.models import model_zoo as zoo
+        from repro.models.transformer import ModelContext
+        from repro.train.train_step import make_decode_step
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(
+            get_config("gemma3_4b").reduced(), vocab=256)
+        ctx = ModelContext(mesh=mesh, dp_axes=("data",), q_chunk=16,
+                           scan_layers=True)
+        shape = ShapeConfig("d", 64, 8, "decode")
+        params = zoo.abstract_params(cfg, 4, jnp.bfloat16)
+        pspecs = sh.param_specs(cfg, mesh, params)
+        cache = zoo.build_cache(cfg, 8, 64, ctx, abstract=True)
+        cspecs = sh.cache_specs(cfg, shape, mesh, cache)
+        token = zoo.input_specs(cfg, shape)["token"]
+        tspec = sh.batch_specs(cfg, shape, mesh)["token"]
+        fn = make_decode_step(cfg, ctx)
+        compiled = jax.jit(
+            fn, in_shardings=(sh.named(mesh, pspecs),
+                              NamedSharding(mesh, tspec),
+                              sh.named(mesh, cspecs))
+        ).lower(params, token, cache).compile()
+        print("decode lower OK", int(compiled.cost_analysis()["flops"]))
+    """)
+    assert "decode lower OK" in out
+
+
+def test_collective_parser():
+    from repro.launch.hlo_stats import collective_bytes
+    hlo = """
+      %p = f32[16,8]{1,0} parameter(0)
+      %ar = f32[16,8]{1,0} all-reduce(%p), replica_groups={}
+      %ag = f32[64,8]{1,0} all-gather(%p), dimensions={0}
+      %done = f32[16,8]{1,0} all-reduce-done(%ar)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-reduce"]["bytes"] == 16 * 8 * 4
+    assert out["all-reduce"]["count"] == 1  # -done not double counted
+    assert out["all-gather"]["bytes"] == 16 * 8 * 4  # operand, not output

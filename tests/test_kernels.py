@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.segment_combine.kernel import segment_combine_blocks
+from repro.kernels.segment_combine.ops import (pack_edges, pack_values,
+                                               segment_combine)
+from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# segment_combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+@pytest.mark.parametrize("nb,eb,n_blocks", [(128, 256, 3), (256, 128, 2),
+                                            (64, 512, 5)])
+def test_segment_combine_blocks_vs_ref(op, nb, eb, n_blocks):
+    rng = np.random.RandomState(0)
+    idx = rng.randint(-1, nb, (n_blocks, eb)).astype(np.int32)
+    vals = rng.randn(n_blocks, eb).astype(np.float32)
+    out = segment_combine_blocks(jnp.asarray(vals), jnp.asarray(idx), op, nb)
+    ref = segment_combine_blocks_ref(jnp.asarray(vals), jnp.asarray(idx),
+                                     op, nb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["sum", "min", "max"]),
+       st.integers(10, 2000), st.integers(50, 900))
+def test_segment_combine_end_to_end(seed, op, E, N):
+    rng = np.random.RandomState(seed)
+    dst = rng.randint(0, N, E)
+    vals = rng.randn(E).astype(np.float32)
+    order, idxl = pack_edges(dst, N, nb=128, eb_align=128)
+    pv = pack_values(vals, order, idxl, op)
+    out = np.asarray(segment_combine(jnp.asarray(pv), jnp.asarray(idxl),
+                                     op, 128, N))
+    red = {"sum": np.add, "min": np.minimum, "max": np.maximum}[op]
+    ref = np.full(N, {"sum": 0., "min": 3e38, "max": -3e38}[op], np.float32)
+    red.at(ref, dst, vals)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,K,hd,causal,window,dtype", [
+    (2, 256, 4, 2, 32, True, 0, jnp.float32),
+    (1, 512, 4, 4, 64, True, 128, jnp.float32),
+    (2, 128, 8, 2, 16, False, 0, jnp.float32),
+    (1, 256, 4, 1, 32, True, 0, jnp.bfloat16),   # MQA, bf16
+    (1, 128, 2, 2, 128, True, 64, jnp.float32),  # hd = lane width
+])
+def test_flash_attention_vs_ref(B, S, H, K, hd, causal, window, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    o1 = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    o2 = flash_attention(q, k, v, causal=causal, window=window,
+                         use_kernel=False)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.abs(o1.astype(jnp.float32)
+                         - o2.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel == the model's chunked_attention == plain attention."""
+    from repro.models.layers import AttnSpec, attention, chunked_attention
+    key = jax.random.PRNGKey(1)
+    B, S, H, K, hd = 2, 128, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    spec = AttnSpec(n_heads=H, n_kv_heads=K, head_dim=hd, causal=True,
+                    window=0, q_chunk=32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = attention(q, k, v, spec, pos, pos)
+    c = chunked_attention(q, k, v, spec, pos, pos)
+    f = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    assert float(jnp.abs(a - c).max()) < 1e-5
+    assert float(jnp.abs(a - f).max()) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 16, 32, 64),
+    (1, 128, 2, 64, 128, 128),   # full-size head dims
+    (3, 64, 8, 8, 16, 16),
+])
+def test_ssd_kernel_vs_recurrent(b, s, h, p, n, chunk):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y1 = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y2 = ssd_scan(x, dt, A, B, C, use_kernel=False)
+    assert float(jnp.abs(y1 - y2).max()) < 5e-3
+
+
+def test_ssd_model_impl_matches_kernel():
+    key = jax.random.PRNGKey(3)
+    b, s, h, p, n, chunk = 2, 128, 4, 16, 32, 32
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    ym, _ = ssd_chunked(x, dt, A, B, C, chunk)
+    yk = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    assert float(jnp.abs(ym - yk).max()) < 5e-3
+
+
+def test_ssd_decode_matches_scan():
+    """The O(1) decode recurrence continues the chunked scan exactly."""
+    from repro.models.ssm import ssd_decode_step
+    key = jax.random.PRNGKey(4)
+    b, s, h, p, n = 1, 64, 2, 8, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s + 1, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s + 1, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s + 1, 1, n))
+    C = jax.random.normal(ks[4], (b, s + 1, 1, n))
+    y_full, _ = ssd_chunked(x, dt.astype(jnp.float32), A, B, C, chunk=s + 1)
+    _, state = ssd_chunked(x[:, :s], dt[:, :s].astype(jnp.float32), A,
+                           B[:, :s], C[:, :s], chunk=s)
+    rep = h // 1
+    y1, _ = ssd_decode_step(state, x[:, s], dt[:, s].astype(jnp.float32), A,
+                            B[:, s], C[:, s])
+    assert float(jnp.abs(y1 - y_full[:, s]).max()) < 1e-3

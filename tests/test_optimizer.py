@@ -1,0 +1,59 @@
+"""AdamW + LR schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
+                                   init_opt_state, lr_at)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=110,
+                    min_lr_frac=0.1)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 115, 5)]
+    assert lrs[0] < lrs[1] <= 1e-3 + 1e-9          # warmup rises
+    assert abs(lrs[2] - 1e-3) < 1e-7               # peak at warmup end
+    assert lrs[-1] <= lrs[-2] + 1e-12              # decays
+    assert lrs[-1] >= 0.1 * 1e-3 - 1e-9            # floor
+
+
+def test_global_norm():
+    g = {"a": jnp.ones((2, 2)), "b": jnp.ones((5,))}
+    assert abs(float(global_norm(g)) - 3.0) < 1e-6
+
+
+def test_adamw_first_step_is_lr_sized():
+    """With bias correction, |update| ~= lr for a fresh state (no decay)."""
+    params = {"w": jnp.zeros((4,))}  # ndim<2 -> no weight decay
+    opt = init_opt_state(params)
+    grads = {"w": jnp.ones((4,)) * 0.5}
+    cfg = OptConfig(lr=1e-2, warmup_steps=1, total_steps=10, clip_norm=1e9,
+                    weight_decay=0.0)
+    new_params, new_opt, m = adamw_update(params, grads, opt, cfg)
+    step_lr = float(lr_at(cfg, jnp.asarray(1)))
+    np.testing.assert_allclose(np.asarray(new_params["w"]),
+                               -step_lr * np.ones(4), rtol=1e-4)
+    assert int(new_opt["step"]) == 1
+
+
+def test_clip_scales_update():
+    params = {"w": jnp.zeros((2, 2))}
+    opt = init_opt_state(params)
+    big = {"w": jnp.full((2, 2), 100.0)}
+    cfg = OptConfig(lr=1.0, warmup_steps=0, total_steps=1, clip_norm=1.0,
+                    weight_decay=0.0)
+    _, _, m = adamw_update(params, big, opt, cfg)
+    assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_no_buffer_aliasing_in_opt_state():
+    """m and v (and master of fp32 params) must be distinct buffers —
+    donation safety (see §Perf notes / train driver)."""
+    params = {"a": jnp.zeros((3,)), "b": jnp.zeros((3,))}
+    opt = init_opt_state(params)
+    bufs = set()
+    for leaf in jax.tree.leaves({"m": opt["m"], "v": opt["v"],
+                                 "master": opt["master"]}):
+        ptr = leaf.unsafe_buffer_pointer()
+        assert ptr not in bufs, "aliased optimizer buffers"
+        bufs.add(ptr)
