@@ -25,15 +25,23 @@ def run(scale=20_000):
 
     g = graphs["btc_like"].symmetrized()
     tau = choose_tau(g.out_degrees(), M)
+    per_backend = {}
     for label, tau_i, mirror in [("noM", None, False), ("mirrored", tau, True)]:
         pg = partition(g, M, tau=tau_i, seed=0)
-        (res, stats, n), secs = timed(hashmin, pg, use_mirroring=mirror)
-        per = np.asarray(stats["per_worker_total"] if mirror
-                         else stats["per_worker_combined"])
-        rep = straggler_report(per)
-        hist = "|".join(str(int(x)) for x in per)
-        row(f"fig1.hashmin.btc_like.{label}", secs,
-            f"maxmean={rep['max_over_mean']:.2f};cv={rep['cv']:.2f};{hist}")
+        for backend in ("dense", "pallas"):
+            (res, stats, n), secs = timed(hashmin, pg, use_mirroring=mirror,
+                                          backend=backend)
+            per = np.asarray(stats["per_worker_total"] if mirror
+                             else stats["per_worker_combined"])
+            per_backend[(label, backend)] = per
+            rep = straggler_report(per)
+            hist = "|".join(str(int(x)) for x in per)
+            row(f"fig1.hashmin.btc_like.{label}.{backend}", secs,
+                f"maxmean={rep['max_over_mean']:.2f};"
+                f"cv={rep['cv']:.2f};{hist}")
+        # the plan backend must not change the balance picture at all
+        assert np.array_equal(per_backend[(label, "dense")],
+                              per_backend[(label, "pallas")]), label
 
     g = graphs["usa_like"].symmetrized()
     pg = partition(g, M, tau=None, seed=0)

@@ -32,6 +32,35 @@ def _vmem_report():
         print(f"vmem.{name},{b},fits=True")
 
 
+def _bench_channel_backends():
+    """Dense vmap-scatter vs plan-driven combine on one broadcast step —
+    the tentpole comparison (same inbox, same stats, different memory)."""
+    from repro.core.channels import broadcast
+    from repro.core import plan as planlib
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    g = gen.powerlaw(40_000, avg_deg=8, seed=0, alpha=1.8).symmetrized()
+    M = 16
+    pg = partition(g, M, tau=60, seed=0)
+    vals = jnp.where(pg.vmask, 1.0, 0.0)
+    results = {}
+    for backend in ("dense", "pallas"):
+        fn = jax.jit(lambda v: broadcast(pg, v, pg.vmask, op="min",
+                                         backend=backend)[0])
+        fn(vals).block_until_ready()
+        _, secs = timed(lambda: fn(vals).block_until_ready(), repeat=3)
+        results[backend] = secs
+        row(f"chan.broadcast.{backend}.n40k", secs,
+            f"M={M};E={g.m}")
+    plan = planlib.get_plan(pg, "eg")
+    dense_bytes = M * pg.n_pad * 4
+    row("chan.broadcast.mem", 0.0,
+        f"dense_partial_bytes={dense_bytes};"
+        f"plan_packed_bytes={plan.packed_bytes};"
+        f"speed_ratio={results['dense'] / max(results['pallas'], 1e-9):.2f}")
+
+
 def run():
     _vmem_report()
     rng = np.random.RandomState(0)
@@ -40,7 +69,8 @@ def run():
     E, N = 200_000, 16_384
     dst = rng.randint(0, N, E)
     vals = rng.randn(E).astype(np.float32)
-    order, idxl = pack_edges(dst, N, nb=256)
+    (order, idxl), pack_secs = timed(pack_edges, dst, N, nb=256, repeat=3)
+    row("kern.pack_edges.vectorized.E200k", pack_secs, f"E={E};N={N}")
     pv = jnp.asarray(pack_values(vals, order, idxl, "sum"))
     idxl = jnp.asarray(idxl)
     f_ref = jax.jit(lambda v, i: segment_combine(v, i, "sum", 256, N,
@@ -48,6 +78,9 @@ def run():
     f_ref(pv, idxl).block_until_ready()
     _, secs = timed(lambda: f_ref(pv, idxl).block_until_ready(), repeat=3)
     row("kern.segment_combine.ref_jnp.E200k", secs, f"E={E};N={N}")
+
+    # channel-layer backend comparison (dense scatters vs message plans)
+    _bench_channel_backends()
 
     # flash attention (jnp ref path = CPU-meaningful; kernel checked in tests)
     B, S, H, K, hd = 1, 1024, 8, 2, 64

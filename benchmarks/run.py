@@ -1,4 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--smoke`` runs a fast invariant-checking mode for CI: it asserts the
+# paper's message-count theorems and dense/pallas backend parity on small
+# graphs and writes the numbers to a JSON artifact.
+import argparse
+import json
 import sys
 import traceback
 from pathlib import Path
@@ -7,7 +12,84 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
+def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.algorithms.hashmin import hashmin
+    from repro.algorithms.sv import sv
+    from repro.core.cost_model import choose_tau, thm1_bound
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    report = {"scale": scale, "workers": M, "checks": {}}
+
+    def check(name, ok, **numbers):
+        report["checks"][name] = {"ok": bool(ok),
+                                  **{k: int(v) for k, v in numbers.items()}}
+        status = "ok" if ok else "FAIL"
+        print(f"[smoke] {name}: {status} "
+              + " ".join(f"{k}={int(v):,d}" for k, v in numbers.items()))
+        assert ok, name
+
+    g = gen.powerlaw(scale, avg_deg=8, seed=5, alpha=1.8).symmetrized()
+    tau = choose_tau(g.out_degrees(), M)
+    pg = partition(g, M, tau=tau, seed=0)
+    deg = np.asarray(pg.deg)
+
+    stats = {}
+    n_ss = 0
+    for backend in ("dense", "pallas"):
+        _, stats[backend], n_ss = hashmin(pg, backend=backend)
+
+    s = stats["dense"]
+    # combining only ever removes messages
+    check("combined_le_basic",
+          int(s["msgs_combined"]) <= int(s["msgs_basic"]),
+          combined=s["msgs_combined"], basic=s["msgs_basic"])
+    # Theorem 1: each mirrored broadcast costs <= min(M, d(v)) messages;
+    # summed over active mirrored vertices and supersteps it is bounded by
+    # supersteps * sum over mirrored v of min(M, d(v))
+    nmir = int((np.asarray(pg.mir_ids) < pg.n_pad).sum())
+    per_v_bound = sum(thm1_bound(M, int(d))
+                      for d in deg.reshape(-1)[np.asarray(pg.mir_ids)[:nmir]])
+    check("thm1_mirror_bound",
+          int(s["msgs_mirror"]) <= int(n_ss) * per_v_bound,
+          mirror=s["msgs_mirror"], bound=int(n_ss) * per_v_bound)
+    # mirroring beats pure combining on the skewed graph (Fig. 12 effect)
+    _, s_nom, _ = hashmin(pg, use_mirroring=False)
+    check("mirroring_reduces_total",
+          int(s["msgs_total"]) <= int(s_nom["msgs_combined"]),
+          mirrored=s["msgs_total"], no_mirroring=s_nom["msgs_combined"])
+    # backend parity: the pallas plan path must not change a single count
+    parity = all(
+        np.array_equal(np.asarray(stats["dense"][k]),
+                       np.asarray(stats["pallas"][k]))
+        for k in stats["dense"])
+    check("backend_parity", parity,
+          dense_total=stats["dense"]["msgs_total"],
+          pallas_total=stats["pallas"]["msgs_total"])
+    # Theorem 3: request-respond never exceeds basic in S-V
+    pg_sv = partition(g, M, tau=None, seed=0)
+    _, s_sv, _ = sv(pg_sv, backend="pallas")
+    check("thm3_rr_le_basic", int(s_sv["msgs_rr"]) <= int(s_sv["msgs_basic"]),
+          rr=s_sv["msgs_rr"], basic=s_sv["msgs_basic"])
+
+    Path(out_path).write_text(json.dumps(report, indent=2))
+    print(f"[smoke] all invariants hold; report -> {out_path}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: assert the paper's message-count "
+                         "invariants + backend parity, emit JSON")
+    ap.add_argument("--out", default="bench-smoke.json",
+                    help="JSON report path (smoke mode)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.out)
+        return
+
     from benchmarks import (bench_balance, bench_kernels, bench_mirroring,
                             bench_reqresp, bench_roofline)
     suites = [

@@ -11,13 +11,15 @@ from repro.graph.structs import PartitionedGraph
 
 
 def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
-            use_mirroring: bool = True, record_history: bool = False):
+            use_mirroring: bool = True, record_history: bool = False,
+            backend: str = "dense"):
     ids = pg.local_ids()
 
     def step(state, i):
         minv, active = state
         inbox, stats = broadcast(pg, minv.astype(jnp.float32), active,
-                                 op="min", use_mirroring=use_mirroring)
+                                 op="min", use_mirroring=use_mirroring,
+                                 backend=backend)
         inbox = jnp.where(jnp.isfinite(inbox), inbox,
                           jnp.inf).astype(jnp.float32)
         upd = pg.vmask & (inbox < minv)

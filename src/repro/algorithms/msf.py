@@ -26,7 +26,8 @@ from repro.algorithms.sv import _acc
 IMAX = jnp.iinfo(jnp.int32).max
 
 
-def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20):
+def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
+        backend: str = "dense"):
     """Returns ((total_weight, n_edges, labels), stats, rounds).
     Requires pg built from a *weighted, symmetrized* graph."""
     ids = pg.local_ids().astype(jnp.int32)
@@ -44,7 +45,8 @@ def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20):
 
         # --- 3-stage min-edge election per supervertex -------------------
         inf_f = jnp.full((M, n_loc), jnp.inf, jnp.float32)
-        wmin, s = scatter_combine(inf_f, Du, pg.all_w, cross, "min", M, n_loc)
+        wmin, s = scatter_combine(inf_f, Du, pg.all_w, cross, "min", M, n_loc,
+                                 backend=backend)
         stats = _acc(stats, s, M)
         wmin_e, s = rr_gather(wmin, Du, cross, M, n_loc)
         stats = _acc(stats, s, M)
@@ -53,20 +55,23 @@ def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20):
         lo = jnp.minimum(Du, Dv)
         hi = jnp.maximum(Du, Dv)
         imax_i = jnp.full((M, n_loc), IMAX, jnp.int32)
-        lomin, s = scatter_combine(imax_i, Du, lo, sel, "min", M, n_loc)
+        lomin, s = scatter_combine(imax_i, Du, lo, sel, "min", M, n_loc,
+                                 backend=backend)
         stats = _acc(stats, s, M)
         lomin_e, s = rr_gather(lomin, Du, sel, M, n_loc)
         stats = _acc(stats, s, M)
         sel &= lo == lomin_e
 
-        himin, s = scatter_combine(imax_i, Du, hi, sel, "min", M, n_loc)
+        himin, s = scatter_combine(imax_i, Du, hi, sel, "min", M, n_loc,
+                                 backend=backend)
         stats = _acc(stats, s, M)
         himin_e, s = rr_gather(himin, Du, sel, M, n_loc)
         stats = _acc(stats, s, M)
         sel &= hi == himin_e
 
         other = jnp.where(lo == Du, hi, lo)
-        tgt, s = scatter_combine(imax_i, Du, other, sel, "min", M, n_loc)
+        tgt, s = scatter_combine(imax_i, Du, other, sel, "min", M, n_loc,
+                                 backend=backend)
         stats = _acc(stats, s, M)
 
         valid = pg.vmask & (tgt != IMAX)

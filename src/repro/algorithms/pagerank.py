@@ -12,7 +12,7 @@ from repro.graph.structs import PartitionedGraph
 
 def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
              tol: float = 1e-4, use_mirroring: bool = True,
-             record_history: bool = False):
+             record_history: bool = False, backend: str = "dense"):
     n = pg.n
     deg = jnp.maximum(pg.deg, 1)
 
@@ -21,7 +21,8 @@ def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
         contrib = jnp.where(pg.vmask, pr / deg, 0.0)
         active = pg.vmask & (pg.deg > 0)
         inbox, stats = broadcast(pg, contrib, active, op="sum",
-                                 use_mirroring=use_mirroring)
+                                 use_mirroring=use_mirroring,
+                                 backend=backend)
         new_pr = jnp.where(pg.vmask, (1 - damping) / n + damping * inbox, 0.0)
         delta = jnp.abs(new_pr - pr).max()
         halted = delta < tol

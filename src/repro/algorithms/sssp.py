@@ -12,14 +12,15 @@ from repro.graph.structs import PartitionedGraph
 
 
 def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
-         use_mirroring: bool = True):
+         use_mirroring: bool = True, backend: str = "dense"):
     """source: vertex id in the *relabeled* space (use pg.perm[orig])."""
     ids = pg.local_ids()
 
     def step(state, i):
         dist, active = state
         inbox, stats = broadcast(pg, dist, active, op="min", relay="add_w",
-                                 use_mirroring=use_mirroring)
+                                 use_mirroring=use_mirroring,
+                                 backend=backend)
         upd = pg.vmask & (inbox < dist)
         new = jnp.where(upd, inbox, dist)
         return (new, upd), ~jnp.any(upd), stats

@@ -33,7 +33,8 @@ def _acc(stats, s, workers):
     return stats
 
 
-def sv(pg: PartitionedGraph, max_supersteps: int = 64):
+def sv(pg: PartitionedGraph, max_supersteps: int = 64,
+       backend: str = "dense"):
     """Returns (labels (M, n_loc) int32 = min id of each CC, stats, rounds)."""
     ids = pg.local_ids().astype(jnp.int32)
     M, n_loc = pg.M, pg.n_loc
@@ -50,14 +51,15 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64):
 
         # cand[u] = min over neighbors v of D[v] (push D with min combiner)
         cand_f, s = broadcast(pg, D.astype(jnp.float32), pg.vmask, op="min",
-                              use_mirroring=False)
+                              use_mirroring=False, backend=backend)
         stats = _acc(stats, s, M)
         has_nbr = jnp.isfinite(cand_f)
         cand = jnp.where(has_nbr, cand_f, 2 ** 30).astype(jnp.int32)
 
         # (1) tree hooking: roots get hooked onto smaller neighbor-parents
         hook_mask = pg.vmask & parent_is_root & has_nbr & (cand < D)
-        D1, s = scatter_combine(D, D, cand, hook_mask, "min", M, n_loc)
+        D1, s = scatter_combine(D, D, cand, hook_mask, "min", M, n_loc,
+                                backend=backend)
         stats = _acc(stats, s, M)
 
         # star detection on the hooked forest
@@ -66,7 +68,7 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64):
         star = (DD1 == D1).astype(jnp.int32)
         deep = pg.vmask & (DD1 != D1)
         star, s = scatter_combine(star, DD1, jnp.zeros_like(star), deep,
-                                  "min", M, n_loc)
+                                  "min", M, n_loc, backend=backend)
         stats = _acc(stats, s, M)
         star_of_parent, s = rr_gather(star, D1, pg.vmask, M, n_loc)
         stats = _acc(stats, s, M)
@@ -74,7 +76,8 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64):
 
         # (2) star hooking
         hook2 = in_star & has_nbr & (cand < D1)
-        D2, s = scatter_combine(D1, D1, cand, hook2, "min", M, n_loc)
+        D2, s = scatter_combine(D1, D1, cand, hook2, "min", M, n_loc,
+                                backend=backend)
         stats = _acc(stats, s, M)
 
         # (3) shortcutting: D[u] = D[D[u]]

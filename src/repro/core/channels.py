@@ -17,35 +17,19 @@ the *paper's* message metric, computed exactly:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as planlib
+from repro.core.plan import identity_of, scatter_op
 from repro.graph.structs import PartitionedGraph
 
-_IDENT = {"min": jnp.inf, "max": -jnp.inf, "sum": 0.0}
-
-
-def _scatter_op(op: str, buf: jnp.ndarray, idx: jnp.ndarray,
-                vals: jnp.ndarray) -> jnp.ndarray:
-    if op == "min":
-        return buf.at[idx].min(vals)
-    if op == "max":
-        return buf.at[idx].max(vals)
-    return buf.at[idx].add(vals)
-
+BACKENDS = ("dense", "pallas")
 
 def _reduce_op(op: str, x: jnp.ndarray, axis: int) -> jnp.ndarray:
     return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op](x, axis=axis)
-
-
-def identity_of(op: str, dtype=jnp.float32):
-    if jnp.issubdtype(dtype, jnp.integer):
-        info = jnp.iinfo(dtype)
-        return jnp.asarray({"min": info.max, "max": info.min, "sum": 0}[op],
-                           dtype)
-    return jnp.asarray(_IDENT[op], dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -53,14 +37,47 @@ def identity_of(op: str, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
-                  mask: jnp.ndarray, op: str, M: int, n_loc: int
+                  mask: jnp.ndarray, op: str, M: int, n_loc: int,
+                  backend: str = "dense",
+                  plan: Optional["planlib.EdgePlan"] = None
                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """targets: (M, K) global dst ids; values: (M, K); mask: (M, K).
 
-    Returns (inbox (M, n_loc) combined with ``op``, stats).  The per-source
-    partial buffer is the paper's combiner; its non-identity entries are the
-    combined message count.  The worker-axis transpose is the batched send.
+    Returns (inbox (M, n_loc) combined with ``op``, stats).
+
+    backend="dense": the per-source partial buffer is the paper's combiner;
+    its non-identity entries are the combined message count, and the
+    worker-axis transpose is the batched send — O(M * n_pad) memory.
+
+    backend="pallas": the combine runs destination-blocked through the
+    segment_combine kernel path.  With a precomputed ``plan`` (static
+    targets) the packed-row layout feeds ``segment_combine_blocks``;
+    without one (runtime targets) the sorted segmented combine is used.
+    Either way the O(M * n_pad) partial never materializes and the stats
+    are identical to the dense path.
     """
+    raw_cross = mask & ((targets // n_loc) != jnp.arange(M)[:, None])
+    base = {"msgs_basic": raw_cross.sum(),
+            "per_worker_basic": raw_cross.sum(axis=1)}
+
+    if backend == "pallas":
+        if plan is not None:
+            # the plan encodes the static edge mask; the runtime mask
+            # (e.g. inactive sources) is folded in as identity values
+            masked = jnp.where(mask, values,
+                               identity_of(op, values.dtype))
+            inbox, (msgs, per_worker) = planlib.combine_with_plan(
+                plan, masked.reshape(-1), op, count_cross=True)
+        else:
+            inbox, (msgs, per_worker) = planlib.combine_sorted(
+                targets, values, mask, op, M, n_loc)
+        stats = {"msgs_combined": msgs, "per_worker_combined": per_worker}
+        stats.update(base)
+        return inbox, stats
+    if backend != "dense":
+        raise ValueError(f"unknown backend {backend!r}; use one of "
+                         f"{BACKENDS}")
+
     ident = identity_of(op, values.dtype)
     n_pad = M * n_loc
 
@@ -68,20 +85,18 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
         v = jnp.where(msk, val, ident)
         t = jnp.where(msk, tgt, 0)
         buf = jnp.full((n_pad,), ident, values.dtype)
-        return _scatter_op(op, buf, t, v)
+        return scatter_op(op, buf, t, v)
 
     partial = jax.vmap(one)(targets, values, mask)      # (M_src, n_pad)
     partial3 = partial.reshape(M, M, n_loc)             # (src, dst, slot)
 
     sent = partial3 != ident
     cross = sent & ~jnp.eye(M, dtype=bool)[:, :, None]
-    raw_cross = mask & ((targets // n_loc) != jnp.arange(M)[:, None])
     stats = {
         "msgs_combined": cross.sum(),
-        "msgs_basic": raw_cross.sum(),
         "per_worker_combined": cross.sum(axis=(1, 2)),
-        "per_worker_basic": raw_cross.sum(axis=1),
     }
+    stats.update(base)
     recv = jnp.swapaxes(partial3, 0, 1)                 # the all-to-all
     inbox = _reduce_op(op, recv, axis=1)                # receiver combine
     return inbox, stats
@@ -92,7 +107,7 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
-                op: str, relay: str = "none"
+                op: str, relay: str = "none", backend: str = "dense"
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Broadcast each active mirrored vertex's value to its mirrors, fan out
     locally.  vals/active: (M, n_loc).  relay='add_w' adds the edge weight at
@@ -106,16 +121,26 @@ def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     mir_vals = jnp.where(valid & flat_act[safe], flat_vals[safe], ident)
     # ^ one value per mirrored vertex: the all-gather payload (Ch_mir send)
 
-    def fan_out(esrc, edst, emask, ew):
-        v = mir_vals[esrc]
+    if backend == "pallas":
+        ev = mir_vals[pg.mir_esrc]
         if relay == "add_w":
-            v = v + ew
-        v = jnp.where(emask & (mir_vals[esrc] != ident), v, ident)
-        buf = jnp.full((pg.n_loc,), ident, vals.dtype)
-        return _scatter_op(op, buf, jnp.where(emask, edst, 0), v)
+            ev = ev + pg.mir_ew
+        ev = jnp.where(pg.mir_emask & (mir_vals[pg.mir_esrc] != ident),
+                       ev, ident)
+        inbox, _ = planlib.combine_with_plan(
+            planlib.get_plan(pg, "mir"), ev.reshape(-1), op,
+            count_cross=False)
+    else:
+        def fan_out(esrc, edst, emask, ew):
+            v = mir_vals[esrc]
+            if relay == "add_w":
+                v = v + ew
+            v = jnp.where(emask & (mir_vals[esrc] != ident), v, ident)
+            buf = jnp.full((pg.n_loc,), ident, vals.dtype)
+            return scatter_op(op, buf, jnp.where(emask, edst, 0), v)
 
-    inbox = jax.vmap(fan_out)(pg.mir_esrc, pg.mir_edst, pg.mir_emask,
-                              pg.mir_ew)
+        inbox = jax.vmap(fan_out)(pg.mir_esrc, pg.mir_edst, pg.mir_emask,
+                                  pg.mir_ew)
     sent = jnp.where(mir_vals != ident, pg.mir_nworkers, 0)
     owner_w = jnp.clip(safe // pg.n_loc, 0, pg.M - 1)
     per_worker = jnp.zeros((pg.M,), sent.dtype).at[owner_w].add(
@@ -125,12 +150,16 @@ def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
 
 
 def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
-              op: str, relay: str = "none", use_mirroring: bool = True
+              op: str, relay: str = "none", use_mirroring: bool = True,
+              backend: str = "dense"
               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """The full paper pipeline: low-degree vertices push through Ch_msg with
     combining; high-degree (>= pg.tau) vertices through Ch_mir.  ``vals`` is
     each vertex's broadcast value (a(v)); relay folds edge fields.
-    use_mirroring=False routes EVERY edge through Ch_msg (Pregel-noM)."""
+    use_mirroring=False routes EVERY edge through Ch_msg (Pregel-noM).
+    backend="pallas" drives both channels through the precomputed message
+    plans (destination-blocked segment_combine) instead of dense scatters;
+    inboxes and message stats are unchanged."""
     esrc = pg.eg_src if use_mirroring else pg.all_src
     edst = pg.eg_dst if use_mirroring else pg.all_dst
     emask = pg.eg_mask if use_mirroring else pg.all_mask
@@ -138,10 +167,13 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     src_val = vals[jnp.arange(pg.M)[:, None], esrc]
     src_act = active[jnp.arange(pg.M)[:, None], esrc]
     v = src_val + ew if relay == "add_w" else src_val
+    plan = (planlib.get_plan(pg, "eg" if use_mirroring else "all")
+            if backend == "pallas" else None)
     inbox, stats = push_combined(edst, v, emask & src_act, op,
-                                 pg.M, pg.n_loc)
+                                 pg.M, pg.n_loc, backend=backend, plan=plan)
     if use_mirroring:
-        inbox2, s2 = push_mirror(pg, vals, active, op, relay)
+        inbox2, s2 = push_mirror(pg, vals, active, op, relay,
+                                 backend=backend)
         inbox = {"min": jnp.minimum, "max": jnp.maximum,
                  "sum": jnp.add}[op](inbox, inbox2)
         stats.update(s2)
@@ -244,10 +276,13 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
 
 def scatter_combine(vals: jnp.ndarray, targets: jnp.ndarray,
                     upd: jnp.ndarray, mask: jnp.ndarray, op: str,
-                    M: int, n_loc: int):
+                    M: int, n_loc: int, backend: str = "dense"):
     """Distributed scatter-``op`` into vals (S-V hooking writes).  Messages
     are counted like the combined channel (one per distinct (worker, target)
-    after sender-side combining)."""
-    inbox, stats = push_combined(targets, upd, mask, op, M, n_loc)
+    after sender-side combining).  Targets are runtime state, so
+    backend="pallas" uses the sorted segmented combine (no precomputed
+    plan is possible) — same stats, O(n_pad) instead of O(M * n_pad)."""
+    inbox, stats = push_combined(targets, upd, mask, op, M, n_loc,
+                                 backend=backend)
     fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
     return fn(vals, inbox), stats

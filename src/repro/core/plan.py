@@ -1,0 +1,351 @@
+"""Message plans: destination-blocked layouts for the combine channels.
+
+The dense Ch_msg path materializes a per-source-worker partial buffer of
+shape (M, n_pad) — O(M^2 * n_loc) memory per superstep, which caps the
+graph sizes one host can simulate.  A *message plan* is built once per
+partitioned graph: every worker's outgoing edges are grouped by
+(source worker, destination block) into fixed-width rows, generalizing
+``pack_edges``/``pack_values`` (kernels/segment_combine/ops.py) to the
+leading (M, ...) worker axis with fully vectorized numpy (no per-block
+Python loops).  At superstep time the runtime gathers the per-edge values
+into the packed layout and hands rows to ``segment_combine_blocks`` — the
+purpose-built Pallas kernel — so the combine works block-by-block in VMEM
+and the only O(n) buffers are the packed edges and the (n_blocks, nb)
+output.
+
+Blocking scheme: destination worker ``w`` owns local slots [0, n_loc);
+block ``b`` of ``w`` covers local slots [b*nb, (b+1)*nb).  Global block id
+= w * B_per_w + b, so a block never spans two workers and per-(source,
+block) non-identity counts reproduce the paper's combined-message metric
+exactly (distinct (source worker, destination vertex) pairs).
+
+Oversized groups are split across multiple rows of the same segment; the
+rows are merged with the combine op before counting, so splitting never
+double-counts a destination.
+
+Two runtime paths:
+
+* ``combine_with_plan`` — static targets (the broadcast/mirror channels,
+  whose edges are known at partition time): packed rows -> kernel ->
+  segment merge -> global block scatter.
+* ``combine_sorted``   — dynamic targets (S-V / MSF hooking writes, whose
+  destinations are algorithm state): per-row sort + segmented reduce +
+  one flat (n_pad,) scatter.  Same O(n_pad + M*K) memory bound, no
+  precomputation possible.
+
+Kernel dispatch: the Pallas kernel is compiled for real on TPU; on CPU the
+block-layout jnp reference (same math, same layout) executes the plan, and
+``set_kernel_mode('pallas')`` forces interpret-mode Pallas for wiring
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_combine.kernel import (NEG, POS,
+                                                  segment_combine_blocks)
+from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
+
+DEFAULT_NB = 128
+DEFAULT_EB = 128
+
+
+def default_nb() -> int:
+    """Destination-block width: 128 on TPU (the lane width the kernel's
+    hit-matrix wants); 32 on CPU, where narrower blocks shrink the
+    (n_rows, nb) combined-block temp 2-3x with no layout downside."""
+    return DEFAULT_NB if jax.default_backend() == "tpu" else 32
+
+# "auto": Pallas kernel on TPU, block-layout jnp reference elsewhere.
+# "pallas": force the kernel (interpret mode off-TPU). "ref": force jnp.
+_KERNEL_MODE = "auto"
+
+
+def set_kernel_mode(mode: str) -> None:
+    global _KERNEL_MODE
+    assert mode in ("auto", "pallas", "ref"), mode
+    _KERNEL_MODE = mode
+
+
+def kernel_mode() -> str:
+    return _KERNEL_MODE
+
+
+def identity_of(op: str, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.asarray({"min": info.max, "max": info.min, "sum": 0}[op],
+                           dtype)
+    return jnp.asarray({"min": jnp.inf, "max": -jnp.inf, "sum": 0.0}[op],
+                       dtype)
+
+
+def scatter_op(op: str, buf, idx, vals):
+    if op == "min":
+        return buf.at[idx].min(vals)
+    if op == "max":
+        return buf.at[idx].max(vals)
+    return buf.at[idx].add(vals)
+
+
+@dataclasses.dataclass
+class EdgePlan:
+    """Packed destination-blocked layout of one edge set.
+
+    Rows are (eb,)-wide slices of one (source worker, destination block)
+    segment; ``row_gather`` indexes the *flattened* (M_src * E,) per-edge
+    value array.
+    """
+    M_src: int
+    M_dst: int
+    n_loc: int
+    nb: int
+    eb: int
+    B_per_w: int               # destination blocks per worker
+    n_blocks: int              # M_dst * B_per_w
+    n_segs: int
+    n_rows: int
+    # host-side numpy (NOT jnp): plans are built lazily, possibly while a
+    # jit trace is active, and get closed over by many traced steps —
+    # numpy constants are safe to reuse across traces, tracers are not.
+    row_gather: np.ndarray     # (n_rows, eb) int32 -> flat edge index
+    row_valid: np.ndarray      # (n_rows, eb) bool
+    row_local: np.ndarray      # (n_rows, eb) int32 dst-in-block, pad -1
+    row_seg: np.ndarray        # (n_rows,) int32 -> segment
+    seg_blk: np.ndarray        # (n_segs,) int32 global block id
+    seg_worker: np.ndarray     # (n_segs,) int32 source worker
+
+    @property
+    def packed_bytes(self) -> int:
+        return self.n_rows * self.eb * 9 + self.n_rows * 4
+
+
+def build_edge_plan(dst_worker: np.ndarray, dst_local: np.ndarray,
+                    mask: np.ndarray, M_dst: int, n_loc: int,
+                    nb: int = DEFAULT_NB,
+                    eb: Optional[int] = None) -> EdgePlan:
+    """dst_worker/dst_local/mask: (M_src, E) host arrays.  Vectorized:
+    one argsort over the kept edges, no per-block loops.
+
+    ``eb`` (row width) defaults to adapting to the segment-size
+    distribution: the p90 segment size rounded up to a power of two in
+    [8, DEFAULT_EB*4].  Narrow rows keep padding low on sparse segments
+    (many workers, few edges per block); oversized segments simply span
+    multiple rows, which the segment merge re-combines.  8 is the f32
+    sublane minimum, so every choice stays TPU-tileable."""
+    dst_worker = np.asarray(dst_worker)
+    dst_local = np.asarray(dst_local)
+    mask = np.asarray(mask)
+    M_src, E = dst_worker.shape
+    B_per_w = max(-(-n_loc // nb), 1)
+    n_blocks = M_dst * B_per_w
+
+    keep = mask.reshape(-1)
+    flat_idx = np.flatnonzero(keep).astype(np.int64)
+    src_w = flat_idx // max(E, 1)
+    blk = (dst_worker.reshape(-1)[flat_idx] * B_per_w
+           + dst_local.reshape(-1)[flat_idx] // nb)
+    loc_in_blk = dst_local.reshape(-1)[flat_idx] % nb
+
+    key = src_w * n_blocks + blk
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    n_kept = len(skey)
+
+    if n_kept == 0:
+        eb = eb or DEFAULT_EB
+        return EdgePlan(M_src, M_dst, n_loc, nb, eb, B_per_w, n_blocks,
+                        0, 0, np.zeros((0, eb), np.int32),
+                        np.zeros((0, eb), bool),
+                        np.zeros((0, eb), np.int32),
+                        np.zeros((0,), np.int32),
+                        np.zeros((0,), np.int32),
+                        np.zeros((0,), np.int32))
+
+    first = np.concatenate([[True], skey[1:] != skey[:-1]])
+    seg_of = np.cumsum(first) - 1                       # per kept edge
+    n_segs = int(seg_of[-1]) + 1
+    seg_key = skey[first]
+    seg_start = np.flatnonzero(first)
+    seg_count = np.diff(np.append(seg_start, n_kept))
+    pos = np.arange(n_kept) - seg_start[seg_of]         # rank within segment
+
+    if eb is None:
+        p90 = int(np.percentile(seg_count, 90))
+        eb = 8
+        while eb < p90 and eb < DEFAULT_EB * 4:
+            eb *= 2
+
+    seg_nrows = -(-seg_count // eb)
+    seg_row0 = np.concatenate([[0], np.cumsum(seg_nrows)[:-1]])
+    n_rows = int(seg_nrows.sum())
+    row_of = seg_row0[seg_of] + pos // eb
+    col_of = pos % eb
+
+    row_gather = np.zeros((n_rows, eb), np.int32)
+    row_valid = np.zeros((n_rows, eb), bool)
+    row_local = np.full((n_rows, eb), -1, np.int32)
+    slot = row_of * eb + col_of
+    row_gather.reshape(-1)[slot] = flat_idx[order]
+    row_valid.reshape(-1)[slot] = True
+    row_local.reshape(-1)[slot] = loc_in_blk[order]
+
+    row_seg = np.repeat(np.arange(n_segs, dtype=np.int32),
+                        seg_nrows.astype(np.int64))
+    return EdgePlan(
+        M_src, M_dst, n_loc, nb, eb, B_per_w, n_blocks, n_segs, n_rows,
+        row_gather, row_valid, row_local, row_seg,
+        (seg_key % n_blocks).astype(np.int32),
+        (seg_key // n_blocks).astype(np.int32))
+
+
+def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
+                  nb: int) -> jnp.ndarray:
+    """Dispatch one (n_rows, eb) -> (n_rows, nb) block combine."""
+    mode = _KERNEL_MODE
+    if mode == "auto":
+        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        out = segment_combine_blocks_ref(packed, row_local, op, nb)
+    else:
+        out = segment_combine_blocks(
+            packed, row_local, op, nb,
+            interpret=jax.default_backend() != "tpu")
+    # The kernel's min/max identities are finite sentinels (VMEM-friendly);
+    # map no-hit slots back to the channel identities so the combined
+    # blocks compare exactly against the dense path.
+    if op == "min":
+        out = jnp.where(out >= POS, jnp.inf, out)
+    elif op == "max":
+        out = jnp.where(out <= NEG, -jnp.inf, out)
+    return out
+
+
+def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
+                      count_cross: bool = True
+                      ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Combine per-edge values (flattened (M_src*E,)) into a (M_dst, n_loc)
+    inbox.  Returns (inbox, (msgs_combined, per_worker_combined) | None);
+    the count is the paper's combined-message metric: distinct (source
+    worker, destination vertex) pairs with a non-identity combined value,
+    destination owned by another worker.
+    """
+    assert flat_vals.ndim == 1, "pass per-edge values flattened"
+    if plan.n_rows:
+        assert int(plan.row_gather.max()) < flat_vals.shape[0], \
+            "plan does not match this edge set"
+    ident = identity_of(op, flat_vals.dtype)
+    if plan.n_rows == 0:
+        inbox = jnp.full((plan.M_dst, plan.n_loc), ident, flat_vals.dtype)
+        if count_cross:
+            return inbox, (jnp.zeros((), jnp.int32),
+                           jnp.zeros((plan.M_src,), jnp.int32))
+        return inbox, None
+
+    packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
+    row_out = _combine_rows(packed, plan.row_local, op, plan.nb)
+
+    seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
+    seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
+
+    glob = jnp.full((plan.n_blocks, plan.nb), ident, flat_vals.dtype)
+    glob = scatter_op(op, glob, plan.seg_blk, seg_out)
+    inbox = glob.reshape(plan.M_dst, plan.B_per_w * plan.nb)[:, :plan.n_loc]
+
+    stats = None
+    if count_cross:
+        owner = plan.seg_blk // plan.B_per_w
+        cross = (seg_out != ident) & (owner != plan.seg_worker)[:, None]
+        msgs = cross.sum().astype(jnp.int32)
+        per_worker = jnp.zeros((plan.M_src,), jnp.int32).at[
+            plan.seg_worker].add(cross.sum(axis=1).astype(jnp.int32))
+        stats = (msgs, per_worker)
+    return inbox, stats
+
+
+# ---------------------------------------------------------------------------
+# dynamic targets: sorted segmented combine (no precomputation possible)
+# ---------------------------------------------------------------------------
+
+def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
+                   mask: jnp.ndarray, op: str, M: int, n_loc: int
+                   ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Sender-side combine for runtime target arrays (M, K): sort each
+    worker's targets, reduce duplicate targets with ``jax.ops.segment_*``,
+    then one flat scatter into a single (n_pad,) buffer — never the dense
+    (M, n_pad) partial.  Returns (inbox (M, n_loc), (msgs_combined,
+    per_worker_combined)), combined counts identical to the dense path.
+    """
+    ident = identity_of(op, values.dtype)
+    n_pad = M * n_loc
+    K = targets.shape[1]
+    t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
+    order = jnp.argsort(t, axis=1)
+    ts = jnp.take_along_axis(t, order, axis=1)
+    vs = jnp.take_along_axis(jnp.where(mask, values, ident), order, axis=1)
+
+    first = jnp.concatenate(
+        [jnp.ones((M, 1), bool), ts[:, 1:] != ts[:, :-1]], axis=1)
+    seg_id = (jnp.cumsum(first.reshape(-1)) - 1).astype(jnp.int32)
+    seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
+              "sum": jax.ops.segment_sum}[op]
+    seg_val = seg_fn(vs.reshape(-1), seg_id, num_segments=M * K)
+    seg_t = jax.ops.segment_min(ts.reshape(-1), seg_id, num_segments=M * K)
+    rows = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[:, None], (M, K))
+    seg_row = jax.ops.segment_min(rows.reshape(-1), seg_id,
+                                  num_segments=M * K)
+    live = jnp.zeros((M * K,), bool).at[seg_id].set(True)
+    real = live & (seg_t < n_pad)
+
+    # inbox: receiver applies the same associative op, so one flat scatter
+    # of the per-segment combined values is exact.
+    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
+                      jnp.where(real, seg_val, ident))
+    inbox = buf.reshape(M, n_loc)
+
+    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_row)
+    msgs = cross.sum().astype(jnp.int32)
+    per_worker = jnp.zeros((M,), jnp.int32).at[
+        jnp.where(cross, seg_row, 0)].add(cross.astype(jnp.int32))
+    return inbox, (msgs, per_worker)
+
+
+# ---------------------------------------------------------------------------
+# plan cache keyed on the partitioned graph
+# ---------------------------------------------------------------------------
+
+def get_plan(pg, kind: str, nb: Optional[int] = None,
+             eb: Optional[int] = None) -> EdgePlan:
+    """Lazily build (and memoize on ``pg``) the plan for one edge set:
+    ``eg`` (Ch_msg, non-mirrored sources), ``all`` (full adjacency), or
+    ``mir`` (mirror fan-out, destinations local to the hosting worker)."""
+    cache: Dict = pg.plan_cache
+    nb = nb or default_nb()
+    key = (kind, nb, eb)
+    if key in cache:
+        return cache[key]
+    if kind == "eg":
+        dst = np.asarray(pg.eg_dst)
+        plan = build_edge_plan(dst // pg.n_loc, dst % pg.n_loc,
+                               np.asarray(pg.eg_mask), pg.M, pg.n_loc,
+                               nb, eb)
+    elif kind == "all":
+        dst = np.asarray(pg.all_dst)
+        plan = build_edge_plan(dst // pg.n_loc, dst % pg.n_loc,
+                               np.asarray(pg.all_mask), pg.M, pg.n_loc,
+                               nb, eb)
+    elif kind == "mir":
+        edst = np.asarray(pg.mir_edst)
+        own = np.broadcast_to(np.arange(pg.M)[:, None], edst.shape)
+        plan = build_edge_plan(own, edst, np.asarray(pg.mir_emask),
+                               pg.M, pg.n_loc, nb, eb)
+    else:
+        raise ValueError(f"unknown plan kind: {kind!r}")
+    cache[key] = plan
+    return plan

@@ -100,6 +100,11 @@ class PartitionedGraph:
     deg: jnp.ndarray          # (M, n_loc) out-degree
     vmask: jnp.ndarray        # (M, n_loc) real-vertex mask
 
+    # lazily-built message plans (core/plan.py), keyed (kind, nb, eb);
+    # per-instance scratch, never part of equality or the pytree.
+    plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
+
     @property
     def n_pad(self) -> int:
         return self.M * self.n_loc
@@ -141,18 +146,23 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     mirrored = deg >= tau_eff                      # per (new) vertex id
 
     # ---- Ch_msg edges: sources below threshold -------------------------
+    # one stable sort by owner, then per-worker slices (vectorized: the
+    # old per-worker boolean scans were O(M * E))
     lo = ~mirrored[src]
+    oorder = np.argsort(owner, kind="stable")
+    osrc, odst, ow_, olo = src[oorder], dst[oorder], w[oorder], lo[oorder]
+    bounds = np.searchsorted(owner[oorder], np.arange(M + 1))
     eg_rows_s, eg_rows_d, eg_rows_w = [], [], []
     all_rows_s, all_rows_d, all_rows_w = [], [], []
     for wk in range(M):
-        sel = owner == wk
-        all_rows_s.append((src[sel] % n_loc).astype(np.int32))
-        all_rows_d.append(dst[sel].astype(np.int32))
-        all_rows_w.append(w[sel].astype(np.float32))
-        sel2 = sel & lo
-        eg_rows_s.append((src[sel2] % n_loc).astype(np.int32))
-        eg_rows_d.append(dst[sel2].astype(np.int32))
-        eg_rows_w.append(w[sel2].astype(np.float32))
+        sl = slice(bounds[wk], bounds[wk + 1])
+        all_rows_s.append((osrc[sl] % n_loc).astype(np.int32))
+        all_rows_d.append(odst[sl].astype(np.int32))
+        all_rows_w.append(ow_[sl].astype(np.float32))
+        keep = olo[sl]
+        eg_rows_s.append((osrc[sl][keep] % n_loc).astype(np.int32))
+        eg_rows_d.append(odst[sl][keep].astype(np.int32))
+        eg_rows_w.append(ow_[sl][keep].astype(np.float32))
     eg_src, eg_mask = _pad_rows(eg_rows_s, 0, np.int32)
     eg_dst, _ = _pad_rows(eg_rows_d, 0, np.int32)
     eg_w, _ = _pad_rows(eg_rows_w, 0.0, np.float32)
@@ -163,36 +173,40 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     # ---- mirrors: group each high-deg vertex's edges by dst worker -----
     mir_vertex_ids = np.flatnonzero(mirrored)          # sorted global ids
     n_mir = max(len(mir_vertex_ids), 1)
-    mir_index = {int(v): i for i, v in enumerate(mir_vertex_ids)}
     mir_slot_of = np.full((M, n_loc), -1, np.int32)
-    for v in mir_vertex_ids:
-        mir_slot_of[v // n_loc, v % n_loc] = mir_index[int(v)]
+    mir_slot_of.reshape(-1)[mir_vertex_ids] = np.arange(len(mir_vertex_ids))
 
     hi = mirrored[src]
     hsrc, hdst, hw = src[hi], dst[hi], w[hi]
     dst_owner = hdst // n_loc
-    rows_es = [[] for _ in range(M)]
-    rows_ed = [[] for _ in range(M)]
-    rows_ew = [[] for _ in range(M)]
+    rows_es = [np.zeros(0, np.int32) for _ in range(M)]
+    rows_ed = [np.zeros(0, np.int32) for _ in range(M)]
+    rows_ew = [np.zeros(0, np.float32) for _ in range(M)]
     nworkers = np.zeros(n_mir, np.int64)
     if len(hsrc):
+        # vectorized grouping: sort once by (dst worker, src, dst), then
+        # slice per hosting worker (was a Python loop over every edge)
         order = np.lexsort((hdst, hsrc, dst_owner))
         hsrc, hdst, hw, dst_owner = (hsrc[order], hdst[order], hw[order],
                                      dst_owner[order])
-        for s, d, ww, ow in zip(hsrc, hdst, hw, dst_owner):
-            rows_es[ow].append(mir_index[int(s)])
-            rows_ed[ow].append(int(d % n_loc))
-            rows_ew[ow].append(float(ww))
+        mir_idx_of = np.full(g.n, -1, np.int64)
+        mir_idx_of[mir_vertex_ids] = np.arange(len(mir_vertex_ids))
+        es_all = mir_idx_of[hsrc].astype(np.int32)
+        ed_all = (hdst % n_loc).astype(np.int32)
+        ew_all = hw.astype(np.float32)
+        hb = np.searchsorted(dst_owner, np.arange(M + 1))
+        for ow in range(M):
+            sl = slice(hb[ow], hb[ow + 1])
+            rows_es[ow] = es_all[sl]
+            rows_ed[ow] = ed_all[sl]
+            rows_ew[ow] = ew_all[sl]
         # workers per mirrored vertex
         pair = np.unique(hsrc * np.int64(M) + dst_owner)
         cnt = np.bincount((pair // M).astype(np.int64), minlength=g.n)
         nworkers = cnt[mir_vertex_ids] if len(mir_vertex_ids) else nworkers
-    mir_esrc, mir_emask = _pad_rows([np.array(r, np.int32) for r in rows_es],
-                                    0, np.int32)
-    mir_edst, _ = _pad_rows([np.array(r, np.int32) for r in rows_ed],
-                            0, np.int32)
-    mir_ew, _ = _pad_rows([np.array(r, np.float32) for r in rows_ew],
-                          0.0, np.float32)
+    mir_esrc, mir_emask = _pad_rows(rows_es, 0, np.int32)
+    mir_edst, _ = _pad_rows(rows_ed, 0, np.int32)
+    mir_ew, _ = _pad_rows(rows_ew, 0.0, np.float32)
 
     deg_pad = np.zeros((M, n_loc), np.int32)
     vmask = np.zeros((M, n_loc), bool)

@@ -17,7 +17,10 @@ def pack_edges(dst: np.ndarray, n_out: int, nb: int = 256,
     each block's edge list to a common multiple-of-``eb_align`` length.
 
     Returns (order, idx_local (n_blocks, Eb) int32 with -1 padding) where
-    ``order`` permutes per-edge values into packed layout."""
+    ``order`` permutes per-edge values into packed layout.  Fully
+    vectorized (one stable argsort + a flat scatter; no per-block loop) —
+    core/plan.py generalizes the same layout to the (M, ...) worker axis.
+    """
     n_blocks = -(-n_out // nb)
     blk = dst // nb
     order = np.argsort(blk, kind="stable")
@@ -27,24 +30,20 @@ def pack_edges(dst: np.ndarray, n_out: int, nb: int = 256,
     idx_local = np.full((n_blocks, eb), -1, np.int32)
     starts = np.zeros(n_blocks + 1, np.int64)
     np.cumsum(counts, out=starts[1:])
-    sdst = dst[order]
-    for b in range(n_blocks):
-        seg = sdst[starts[b]:starts[b + 1]]
-        idx_local[b, :len(seg)] = seg - b * nb
+    sblk = blk[order]
+    pos = np.arange(len(dst)) - starts[sblk]       # rank within block
+    idx_local.reshape(-1)[sblk * eb + pos] = dst[order] - sblk * nb
     return order, idx_local
 
 
 def pack_values(vals: np.ndarray, order: np.ndarray, idx_local: np.ndarray,
                 op: str = "sum") -> np.ndarray:
-    """Scatter per-edge values into the packed (n_blocks, Eb) layout."""
+    """Scatter per-edge values into the packed (n_blocks, Eb) layout
+    (vectorized flat scatter aligned with ``pack_edges``)."""
     n_blocks, eb = idx_local.shape
     out = np.full((n_blocks, eb), _ID[op], np.float32)
-    sv = vals[order]
-    pos = 0
-    for b in range(n_blocks):
-        k = int((idx_local[b] >= 0).sum())
-        out[b, :k] = sv[pos:pos + k]
-        pos += k
+    valid = idx_local.reshape(-1) >= 0
+    out.reshape(-1)[valid] = vals[order]
     return out
 
 

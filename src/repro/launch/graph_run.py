@@ -58,28 +58,34 @@ def main():
     ap.add_argument("--tau", default="auto")
     ap.add_argument("--no-mirroring", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="dense", choices=["dense", "pallas"],
+                    help="combine-channel implementation: dense vmap "
+                         "scatters or the plan-driven segment_combine path")
     args = ap.parse_args()
 
     g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau)
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
-          f"tau={tau} max_deg={int(g.out_degrees().max())}")
+          f"tau={tau} max_deg={int(g.out_degrees().max())} "
+          f"backend={args.backend}")
 
     t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
+    be = args.backend
     if args.algo == "hashmin":
-        _, stats, n_ss = hashmin(pg, use_mirroring=mirror)
+        _, stats, n_ss = hashmin(pg, use_mirroring=mirror, backend=be)
     elif args.algo == "pagerank":
-        _, stats, n_ss = pagerank(pg, n_iters=30, use_mirroring=mirror)
+        _, stats, n_ss = pagerank(pg, n_iters=30, use_mirroring=mirror,
+                                  backend=be)
     elif args.algo == "sv":
-        _, stats, n_ss = sv(pg)
+        _, stats, n_ss = sv(pg, backend=be)
     elif args.algo == "sssp":
-        import jax.numpy as jnp
         gw = GRAPHS[args.graph](args.n, args.seed)
         if gw.weight is None:
             gw.weight = np.ones(gw.m, np.float32)
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=tau, seed=args.seed)
-        _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror)
+        _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
+                              backend=be)
         pg = pgw
     elif args.algo == "msf":
         gw = GRAPHS[args.graph](args.n, args.seed)
@@ -88,14 +94,14 @@ def main():
             gw.weight = rng.rand(gw.m).astype(np.float32) + 0.01
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=None, seed=args.seed)
-        (res, stats, n_ss) = msf(pgw)
+        (res, stats, n_ss) = msf(pgw, backend=be)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")
         pg = pgw
     else:
         import jax.numpy as jnp
         attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc)
-        _, stats = attribute_broadcast(pg, attr)
+        _, stats = attribute_broadcast(pg, attr, backend=be)
         n_ss = 2
     dt = time.time() - t0
 

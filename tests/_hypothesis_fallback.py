@@ -1,0 +1,93 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+CI installs the real library (see requirements-dev.txt); hermetic
+environments without it still need the suite to *collect and pass*, so
+``conftest.py`` registers this module as ``hypothesis`` when the import
+fails.  It implements the small API surface the suite uses — ``given``,
+``settings``, and the ``integers`` / ``floats`` / ``sampled_from`` /
+``booleans`` strategies — by replaying each test body over a fixed number
+of seeded pseudo-random draws.  No shrinking, no database, no deadlines:
+just deterministic example generation so the properties are exercised.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+import types
+
+import numpy as np
+
+# Cap replay count: the suite's max_examples values are tuned for real
+# hypothesis; the fallback draws uniformly so fewer examples suffice.
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "5"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[rng.randint(len(elems))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.randint(2)))
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_fallback_max_examples", 10),
+                    _MAX_EXAMPLES_CAP)
+            seed = int.from_bytes(
+                hashlib.sha1(fn.__qualname__.encode()).digest()[:4], "big")
+            rng = np.random.RandomState(seed)
+            for _ in range(max(n, 1)):
+                drawn = [s.example_from(rng) for s in strategies]
+                drawn_kw = {k: s.example_from(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", 10)
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans"):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -6,9 +6,33 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Property-based tests use hypothesis; hermetic environments without it
+# fall back to a deterministic replay shim (CI installs the real thing).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip ``slow``-marked tests unless explicitly requested.
+
+    CI and the tier-1 gate run the fast suite; ``pytest -m slow`` (or
+    REPRO_RUN_SLOW=1) exercises the long BSP runs locally.
+    """
+    markexpr = config.getoption("-m", default="") or ""
+    if "slow" in markexpr or os.environ.get("REPRO_RUN_SLOW"):
+        return
+    skip = pytest.mark.skip(reason="slow test: run with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
 
 
 def union_find_cc(n, src, dst):
