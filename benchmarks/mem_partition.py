@@ -1,0 +1,95 @@
+"""Peak-RSS measurement of ``partition()`` under each edge layout.
+
+The padded layout pays O(M * E_hot): one hot worker pads every row, so at
+n=1e6 / M=256 the host arrays blow past 4 GB before any channel runs.
+The csr layout is O(E + M + n).  ``ru_maxrss`` is a process-wide
+high-water mark, so the parent spawns one subprocess per layout and
+merges the children's JSON lines into one report (the CI artifact).
+
+    python benchmarks/mem_partition.py --n 1000000 --workers 256 \
+        --out partition-rss.json
+"""
+import argparse
+import json
+import resource
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def _rss_mb() -> float:
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    div = 2 ** 20 if sys.platform == "darwin" else 1024.0
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / div
+
+
+def child(layout: str, n: int, M: int, avg_deg: int, seed: int) -> None:
+    sys.path.insert(0, str(SRC))
+    import numpy as np
+    from repro.core.cost_model import choose_tau
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    g = gen.powerlaw(n, avg_deg=avg_deg, seed=seed).symmetrized()
+    rss_graph = _rss_mb()
+    tau = choose_tau(g.out_degrees(), M)
+    pg = partition(g, M, tau=tau, seed=seed, layout=layout)
+    rss_peak = _rss_mb()
+
+    edge_fields = ("eg_src", "eg_dst", "eg_mask", "eg_w",
+                   "all_src", "all_dst", "all_mask", "all_w",
+                   "mir_esrc", "mir_edst", "mir_emask", "mir_ew")
+    array_mb = sum(np.asarray(getattr(pg, f)).nbytes
+                   for f in edge_fields) / 2 ** 20
+    print(json.dumps({
+        "layout": layout, "n": n, "workers": M, "edges": int(g.m),
+        "tau": int(tau),
+        "rss_after_graph_mb": round(rss_graph, 1),
+        "rss_peak_mb": round(rss_peak, 1),
+        "partition_rss_mb": round(rss_peak - rss_graph, 1),
+        "edge_array_mb": round(array_mb, 1),
+    }))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--workers", type=int, default=256)
+    ap.add_argument("--avg-deg", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--layouts", default="csr,padded")
+    ap.add_argument("--out", default="partition-rss.json")
+    ap.add_argument("--child", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        child(args.child, args.n, args.workers, args.avg_deg, args.seed)
+        return
+
+    results = []
+    for layout in args.layouts.split(","):
+        cmd = [sys.executable, __file__, "--child", layout,
+               "--n", str(args.n), "--workers", str(args.workers),
+               "--avg-deg", str(args.avg_deg), "--seed", str(args.seed)]
+        out = subprocess.run(cmd, capture_output=True, text=True, check=True)
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        results.append(rec)
+        print(f"[mem] {layout:7s} partition peak "
+              f"{rec['partition_rss_mb']:>9.1f} MB "
+              f"(edge arrays {rec['edge_array_mb']:.1f} MB)")
+    report = {"n": args.n, "workers": args.workers,
+              "avg_deg": args.avg_deg, "layouts": results}
+    if len(results) == 2:
+        a, b = sorted(results, key=lambda r: r["partition_rss_mb"])
+        if a["partition_rss_mb"] > 0:
+            report["ratio"] = round(
+                b["partition_rss_mb"] / a["partition_rss_mb"], 2)
+            print(f"[mem] {b['layout']} / {a['layout']} = "
+                  f"{report['ratio']}x")
+    Path(args.out).write_text(json.dumps(report, indent=2))
+    print(f"[mem] report -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,15 @@ def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
     check("backend_parity", parity,
           dense_total=stats["dense"]["msgs_total"],
           pallas_total=stats["pallas"]["msgs_total"])
+    # layout parity: the flat csr representation must not change a count
+    pg_csr = partition(g, M, tau=tau, seed=0, layout="csr")
+    _, s_csr, _ = hashmin(pg_csr, backend="pallas")
+    layout_parity = all(
+        np.array_equal(np.asarray(stats["dense"][k]), np.asarray(s_csr[k]))
+        for k in stats["dense"])
+    check("layout_parity", layout_parity,
+          padded_total=stats["dense"]["msgs_total"],
+          csr_total=s_csr["msgs_total"])
     # Theorem 3: request-respond never exceeds basic in S-V
     pg_sv = partition(g, M, tau=None, seed=0)
     _, s_sv, _ = sv(pg_sv, backend="pallas")

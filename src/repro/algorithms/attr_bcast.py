@@ -7,21 +7,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.channels import rr_gather
+from repro.core.channels import rr_gather, rr_gather_flat
 from repro.graph.structs import PartitionedGraph
 
 
 def attribute_broadcast(pg: PartitionedGraph, attr: jnp.ndarray,
                         backend: str = "dense"):
-    """attr: (M, n_loc) vertex attribute.  Returns (edge_attr (M, A_loc)
-    aligned with pg.all_dst, stats).  stats['msgs_basic'] is the 3-superstep
-    Pregel cost (request+response per edge, 2|E| messages); stats['msgs_rr']
-    the deduplicated Ch_req cost.
+    """attr: (M, n_loc) vertex attribute.  Returns (edge_attr aligned with
+    pg.all_dst — (M, A_loc) padded layout, (E,) csr layout — and stats).
+    stats['msgs_basic'] is the 3-superstep Pregel cost (request+response
+    per edge, 2|E| messages); stats['msgs_rr'] the deduplicated Ch_req
+    cost, identical across layouts.
 
     ``backend`` is accepted for driver uniformity: Ch_req is a pure
     gather with no combine stage, so both backends share one path."""
     del backend
-    fn = jax.jit(lambda a: rr_gather(a, pg.all_dst, pg.all_mask,
-                                     pg.M, pg.n_loc))
+    if pg.layout == "csr":
+        worker = pg.all_src // pg.n_loc
+        fn = jax.jit(lambda a: rr_gather_flat(a, pg.all_dst, worker,
+                                              pg.all_mask, pg.M, pg.n_loc))
+    else:
+        fn = jax.jit(lambda a: rr_gather(a, pg.all_dst, pg.all_mask,
+                                         pg.M, pg.n_loc))
     out, stats = fn(attr)
     return out, stats

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bsp
-from repro.core.channels import rr_gather, scatter_combine
+from repro.core.channels import (rr_gather, rr_gather_flat, scatter_combine,
+                                 scatter_combine_flat)
 from repro.graph.structs import PartitionedGraph
 from repro.algorithms.sv import _acc
 
@@ -29,49 +30,72 @@ IMAX = jnp.iinfo(jnp.int32).max
 def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
         backend: str = "dense"):
     """Returns ((total_weight, n_edges, labels), stats, rounds).
-    Requires pg built from a *weighted, symmetrized* graph."""
+    Requires pg built from a *weighted, symmetrized* graph.
+
+    Edge-shaped reads/writes (per-edge supervertex queries, min-edge
+    election) follow ``pg.layout``: padded (M, A_loc) rows through
+    rr_gather/scatter_combine, flat csr (E,) arrays through the _flat
+    twins.  State-shaped ops (pointer jumping) are layout-independent."""
     ids = pg.local_ids().astype(jnp.int32)
     M, n_loc = pg.M, pg.n_loc
     widx = jnp.arange(M)[:, None]
+    csr = pg.layout == "csr"
+    e_worker = pg.all_src // n_loc if csr else None
+
+    def edge_vals(D):
+        """D at each edge's (local) source endpoint."""
+        if csr:
+            return D.reshape(-1)[pg.all_src]
+        return D[widx, pg.all_src]
+
+    def edge_read(arr, tgt, msk):
+        """rr-read arr[tgt] for edge-shaped global targets."""
+        if csr:
+            return rr_gather_flat(arr, tgt, e_worker, msk, M, n_loc)
+        return rr_gather(arr, tgt, msk, M, n_loc)
+
+    def edge_scatter(base, tgt, upd, msk, op):
+        """combined scatter for edge-shaped updates."""
+        if csr:
+            return scatter_combine_flat(base, tgt, upd, msk, e_worker, op,
+                                        M, n_loc, backend=backend)
+        return scatter_combine(base, tgt, upd, msk, op, M, n_loc,
+                               backend=backend)
 
     def step(state, i):
         D, total_w, n_edges = state
         stats: dict = {}
 
-        Dv, s = rr_gather(D, pg.all_dst, pg.all_mask, M, n_loc)
+        Dv, s = edge_read(D, pg.all_dst, pg.all_mask)
         stats = _acc(stats, s, M)
-        Du = D[widx, pg.all_src]
+        Du = edge_vals(D)
         cross = pg.all_mask & (Dv != Du)
 
         # --- 3-stage min-edge election per supervertex -------------------
         inf_f = jnp.full((M, n_loc), jnp.inf, jnp.float32)
-        wmin, s = scatter_combine(inf_f, Du, pg.all_w, cross, "min", M, n_loc,
-                                 backend=backend)
+        wmin, s = edge_scatter(inf_f, Du, pg.all_w, cross, "min")
         stats = _acc(stats, s, M)
-        wmin_e, s = rr_gather(wmin, Du, cross, M, n_loc)
+        wmin_e, s = edge_read(wmin, Du, cross)
         stats = _acc(stats, s, M)
         sel = cross & (pg.all_w == wmin_e)
 
         lo = jnp.minimum(Du, Dv)
         hi = jnp.maximum(Du, Dv)
         imax_i = jnp.full((M, n_loc), IMAX, jnp.int32)
-        lomin, s = scatter_combine(imax_i, Du, lo, sel, "min", M, n_loc,
-                                 backend=backend)
+        lomin, s = edge_scatter(imax_i, Du, lo, sel, "min")
         stats = _acc(stats, s, M)
-        lomin_e, s = rr_gather(lomin, Du, sel, M, n_loc)
+        lomin_e, s = edge_read(lomin, Du, sel)
         stats = _acc(stats, s, M)
         sel &= lo == lomin_e
 
-        himin, s = scatter_combine(imax_i, Du, hi, sel, "min", M, n_loc,
-                                 backend=backend)
+        himin, s = edge_scatter(imax_i, Du, hi, sel, "min")
         stats = _acc(stats, s, M)
-        himin_e, s = rr_gather(himin, Du, sel, M, n_loc)
+        himin_e, s = edge_read(himin, Du, sel)
         stats = _acc(stats, s, M)
         sel &= hi == himin_e
 
         other = jnp.where(lo == Du, hi, lo)
-        tgt, s = scatter_combine(imax_i, Du, other, sel, "min", M, n_loc,
-                                 backend=backend)
+        tgt, s = edge_scatter(imax_i, Du, other, sel, "min")
         stats = _acc(stats, s, M)
 
         valid = pg.vmask & (tgt != IMAX)

@@ -102,6 +102,62 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
     return inbox, stats
 
 
+def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
+                       mask: jnp.ndarray, src_worker: jnp.ndarray,
+                       op: str, M: int, n_loc: int,
+                       backend: str = "dense",
+                       plan: Optional["planlib.EdgePlan"] = None
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """CSR-layout twin of ``push_combined``: flat (E,) per-edge arrays with
+    explicit per-edge source workers instead of the padded (M, K) rows.
+
+    backend="dense" materializes the same (M_src, n_pad) partial as the
+    padded reference via one flat scatter (indices ``w * n_pad + dst`` are
+    the flattened per-worker buffers), so inboxes and stats are identical.
+    backend="pallas" goes through the precomputed plan (static targets) or
+    the flat sorted segmented combine (runtime targets) — the O(M * n_pad)
+    partial never materializes.
+    """
+    cross = mask & ((targets // n_loc) != src_worker)
+    base = {"msgs_basic": cross.sum(),
+            "per_worker_basic": jnp.zeros((M,), jnp.int32).at[
+                src_worker].add(cross.astype(jnp.int32))}
+
+    if backend == "pallas":
+        if plan is not None:
+            masked = jnp.where(mask, values,
+                               identity_of(op, values.dtype))
+            inbox, (msgs, per_worker) = planlib.combine_with_plan(
+                plan, masked, op, count_cross=True)
+        else:
+            inbox, (msgs, per_worker) = planlib.combine_sorted_flat(
+                targets, values, mask, src_worker, op, M, n_loc)
+        stats = {"msgs_combined": msgs, "per_worker_combined": per_worker}
+        stats.update(base)
+        return inbox, stats
+    if backend != "dense":
+        raise ValueError(f"unknown backend {backend!r}; use one of "
+                         f"{BACKENDS}")
+
+    ident = identity_of(op, values.dtype)
+    n_pad = M * n_loc
+    idx = src_worker * n_pad + jnp.where(mask, targets, 0)
+    v = jnp.where(mask, values, ident)
+    partial = jnp.full((M * n_pad,), ident, values.dtype)
+    partial3 = scatter_op(op, partial, idx, v).reshape(M, M, n_loc)
+
+    sent = partial3 != ident
+    cross3 = sent & ~jnp.eye(M, dtype=bool)[:, :, None]
+    stats = {
+        "msgs_combined": cross3.sum(),
+        "per_worker_combined": cross3.sum(axis=(1, 2)),
+    }
+    stats.update(base)
+    recv = jnp.swapaxes(partial3, 0, 1)                 # the all-to-all
+    inbox = _reduce_op(op, recv, axis=1)                # receiver combine
+    return inbox, stats
+
+
 # ---------------------------------------------------------------------------
 # Ch_mir: mirror broadcast + local fan-out (with relay() for edge fields)
 # ---------------------------------------------------------------------------
@@ -121,26 +177,24 @@ def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     mir_vals = jnp.where(valid & flat_act[safe], flat_vals[safe], ident)
     # ^ one value per mirrored vertex: the all-gather payload (Ch_mir send)
 
+    raw = mir_vals[pg.mir_esrc]
+    ev = raw + pg.mir_ew if relay == "add_w" else raw
+    ev = jnp.where(pg.mir_emask & (raw != ident), ev, ident)
     if backend == "pallas":
-        ev = mir_vals[pg.mir_esrc]
-        if relay == "add_w":
-            ev = ev + pg.mir_ew
-        ev = jnp.where(pg.mir_emask & (mir_vals[pg.mir_esrc] != ident),
-                       ev, ident)
         inbox, _ = planlib.combine_with_plan(
             planlib.get_plan(pg, "mir"), ev.reshape(-1), op,
             count_cross=False)
+    elif pg.layout == "csr":
+        # mir_edst is global in csr: per-worker fan-out buffers are
+        # disjoint slices of one flat (n_pad,) scatter
+        buf = jnp.full((n_pad,), ident, vals.dtype)
+        inbox = scatter_op(op, buf, pg.mir_edst, ev).reshape(pg.M, pg.n_loc)
     else:
-        def fan_out(esrc, edst, emask, ew):
-            v = mir_vals[esrc]
-            if relay == "add_w":
-                v = v + ew
-            v = jnp.where(emask & (mir_vals[esrc] != ident), v, ident)
+        def fan_out(edst, emask, ev_row):
             buf = jnp.full((pg.n_loc,), ident, vals.dtype)
-            return scatter_op(op, buf, jnp.where(emask, edst, 0), v)
+            return scatter_op(op, buf, jnp.where(emask, edst, 0), ev_row)
 
-        inbox = jax.vmap(fan_out)(pg.mir_esrc, pg.mir_edst, pg.mir_emask,
-                                  pg.mir_ew)
+        inbox = jax.vmap(fan_out)(pg.mir_edst, pg.mir_emask, ev)
     sent = jnp.where(mir_vals != ident, pg.mir_nworkers, 0)
     owner_w = jnp.clip(safe // pg.n_loc, 0, pg.M - 1)
     per_worker = jnp.zeros((pg.M,), sent.dtype).at[owner_w].add(
@@ -159,18 +213,30 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     use_mirroring=False routes EVERY edge through Ch_msg (Pregel-noM).
     backend="pallas" drives both channels through the precomputed message
     plans (destination-blocked segment_combine) instead of dense scatters;
-    inboxes and message stats are unchanged."""
+    inboxes and message stats are unchanged.  ``pg.layout`` picks the edge
+    representation (padded rows vs flat csr) — results and stats are
+    layout-invariant."""
     esrc = pg.eg_src if use_mirroring else pg.all_src
     edst = pg.eg_dst if use_mirroring else pg.all_dst
     emask = pg.eg_mask if use_mirroring else pg.all_mask
     ew = pg.eg_w if use_mirroring else pg.all_w
-    src_val = vals[jnp.arange(pg.M)[:, None], esrc]
-    src_act = active[jnp.arange(pg.M)[:, None], esrc]
-    v = src_val + ew if relay == "add_w" else src_val
     plan = (planlib.get_plan(pg, "eg" if use_mirroring else "all")
             if backend == "pallas" else None)
-    inbox, stats = push_combined(edst, v, emask & src_act, op,
-                                 pg.M, pg.n_loc, backend=backend, plan=plan)
+    if pg.layout == "csr":
+        src_val = vals.reshape(-1)[esrc]        # esrc is global in csr
+        src_act = active.reshape(-1)[esrc]
+        v = src_val + ew if relay == "add_w" else src_val
+        inbox, stats = push_combined_flat(edst, v, emask & src_act,
+                                          esrc // pg.n_loc, op,
+                                          pg.M, pg.n_loc, backend=backend,
+                                          plan=plan)
+    else:
+        src_val = vals[jnp.arange(pg.M)[:, None], esrc]
+        src_act = active[jnp.arange(pg.M)[:, None], esrc]
+        v = src_val + ew if relay == "add_w" else src_val
+        inbox, stats = push_combined(edst, v, emask & src_act, op,
+                                     pg.M, pg.n_loc, backend=backend,
+                                     plan=plan)
     if use_mirroring:
         inbox2, s2 = push_mirror(pg, vals, active, op, relay,
                                  backend=backend)
@@ -213,13 +279,19 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
 
     vals: (M, n_loc); targets/tmask: (M, R).  Returns (out (M, R), stats).
     dedup=True is the request-respond channel (one request per distinct
-    target per worker — Theorem 3); dedup=False counts Pregel basic.
+    target per worker — Theorem 3); dedup=False sends every request
+    individually (Pregel basic: msgs_rr degenerates to msgs_basic), same
+    gathered values either way.
     """
     n_pad = M * n_loc
     R = targets.shape[1]
     t = jnp.where(tmask, targets, n_pad)
 
-    uniq, inv = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)   # (M,R),(M,R)
+    if dedup:
+        uniq, inv = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)  # (M,R) x2
+    else:
+        uniq = t
+        inv = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), (M, R))
     owner = jnp.clip(uniq // n_loc, 0, M - 1)
     uvalid = uniq < n_pad
 
@@ -274,6 +346,60 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
     return out, stats
 
 
+def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
+                   worker: jnp.ndarray, tmask: jnp.ndarray,
+                   M: int, n_loc: int, dedup: bool = True
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """CSR-layout twin of ``rr_gather``: flat (E,) targets with explicit
+    (E,) requesting-worker ids (ragged per-worker request counts).
+
+    The gathered values are a direct read; the stats reproduce the padded
+    channel's accounting exactly — msgs_rr counts 2 messages per distinct
+    remote (worker, target) pair (Theorem 3), per_worker_* charge both the
+    requester and the owner, msgs_basic counts every raw remote request.
+    """
+    n_pad = M * n_loc
+    E = targets.shape[0]
+    t = jnp.where(tmask, targets, n_pad)
+    out = jnp.where(tmask,
+                    vals.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
+                    jnp.zeros((), vals.dtype))
+    zero_m = jnp.zeros((M,), jnp.int32)
+    if E == 0:
+        stats = {"msgs_rr": jnp.zeros((), jnp.int32),
+                 "msgs_basic": jnp.zeros((), jnp.int32),
+                 "per_worker_rr": zero_m, "per_worker_basic": zero_m}
+        return out, stats
+
+    owner = jnp.clip(targets // n_loc, 0, M - 1)
+    raw_remote = tmask & ((targets // n_loc) != worker)
+    if dedup:
+        # distinct (worker, target) = segment heads of the shared sort
+        _, ws, ts, first = planlib.sort_by_worker_target(worker, t)
+        uniq = first & (ts < n_pad)
+        remote_u = uniq & (ts // n_loc != ws)
+        u_w, u_owner = ws, jnp.clip(ts // n_loc, 0, M - 1)
+    else:
+        remote_u = raw_remote
+        u_w, u_owner = worker, owner
+    n_rr = remote_u.sum()
+    n_basic = raw_remote.sum()
+    r32 = remote_u.astype(jnp.int32)
+    b32 = raw_remote.astype(jnp.int32)
+    stats = {
+        "msgs_rr": 2 * n_rr,
+        "msgs_basic": 2 * n_basic,
+        "per_worker_rr": (zero_m.at[jnp.where(remote_u, u_w, 0)].add(r32)
+                          + zero_m.at[jnp.where(remote_u, u_owner, 0)
+                                      ].add(r32)),
+        "per_worker_basic": (zero_m.at[jnp.where(raw_remote, worker, 0)
+                                       ].add(b32)
+                             + zero_m.at[jnp.where(raw_remote, owner, 0)
+                                         ].add(b32)),
+    }
+    return out, stats
+
+
 def scatter_combine(vals: jnp.ndarray, targets: jnp.ndarray,
                     upd: jnp.ndarray, mask: jnp.ndarray, op: str,
                     M: int, n_loc: int, backend: str = "dense"):
@@ -284,5 +410,17 @@ def scatter_combine(vals: jnp.ndarray, targets: jnp.ndarray,
     plan is possible) — same stats, O(n_pad) instead of O(M * n_pad)."""
     inbox, stats = push_combined(targets, upd, mask, op, M, n_loc,
                                  backend=backend)
+    fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
+    return fn(vals, inbox), stats
+
+
+def scatter_combine_flat(vals: jnp.ndarray, targets: jnp.ndarray,
+                         upd: jnp.ndarray, mask: jnp.ndarray,
+                         worker: jnp.ndarray, op: str,
+                         M: int, n_loc: int, backend: str = "dense"):
+    """CSR twin of ``scatter_combine``: flat (E,) edge-shaped writes with
+    explicit per-edge source workers (MSF min-edge election)."""
+    inbox, stats = push_combined_flat(targets, upd, mask, worker, op,
+                                      M, n_loc, backend=backend)
     fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
     return fn(vals, inbox), stats

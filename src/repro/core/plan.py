@@ -129,8 +129,8 @@ def build_edge_plan(dst_worker: np.ndarray, dst_local: np.ndarray,
                     mask: np.ndarray, M_dst: int, n_loc: int,
                     nb: int = DEFAULT_NB,
                     eb: Optional[int] = None) -> EdgePlan:
-    """dst_worker/dst_local/mask: (M_src, E) host arrays.  Vectorized:
-    one argsort over the kept edges, no per-block loops.
+    """dst_worker/dst_local/mask: (M_src, E) host arrays (padded layout).
+    Vectorized: one argsort over the kept edges, no per-block loops.
 
     ``eb`` (row width) defaults to adapting to the segment-size
     distribution: the p90 segment size rounded up to a power of two in
@@ -142,15 +142,43 @@ def build_edge_plan(dst_worker: np.ndarray, dst_local: np.ndarray,
     dst_local = np.asarray(dst_local)
     mask = np.asarray(mask)
     M_src, E = dst_worker.shape
-    B_per_w = max(-(-n_loc // nb), 1)
-    n_blocks = M_dst * B_per_w
 
     keep = mask.reshape(-1)
     flat_idx = np.flatnonzero(keep).astype(np.int64)
     src_w = flat_idx // max(E, 1)
-    blk = (dst_worker.reshape(-1)[flat_idx] * B_per_w
-           + dst_local.reshape(-1)[flat_idx] // nb)
-    loc_in_blk = dst_local.reshape(-1)[flat_idx] % nb
+    return _pack_edge_plan(flat_idx, src_w,
+                           dst_worker.reshape(-1)[flat_idx],
+                           dst_local.reshape(-1)[flat_idx],
+                           M_src, M_dst, n_loc, nb, eb)
+
+
+def build_edge_plan_flat(src_worker: np.ndarray, dst_worker: np.ndarray,
+                         dst_local: np.ndarray, M_src: int, M_dst: int,
+                         n_loc: int, nb: int = DEFAULT_NB,
+                         eb: Optional[int] = None) -> EdgePlan:
+    """CSR-layout twin of ``build_edge_plan``: flat (E,) edge arrays with
+    explicit per-edge source workers, no padding mask.  ``row_gather``
+    then indexes the flat (E,) per-edge value array directly — the CSR
+    layout is destination-blockable without an intermediate padded
+    unpack."""
+    src_worker = np.asarray(src_worker, np.int64)
+    flat_idx = np.arange(len(src_worker), dtype=np.int64)
+    return _pack_edge_plan(flat_idx, src_worker,
+                           np.asarray(dst_worker, np.int64),
+                           np.asarray(dst_local, np.int64),
+                           M_src, M_dst, n_loc, nb, eb)
+
+
+def _pack_edge_plan(flat_idx: np.ndarray, src_w: np.ndarray,
+                    dst_worker: np.ndarray, dst_local: np.ndarray,
+                    M_src: int, M_dst: int, n_loc: int, nb: int,
+                    eb: Optional[int]) -> EdgePlan:
+    """Shared packer: per-kept-edge flat value index + (source worker,
+    destination worker/local) -> destination-blocked rows."""
+    B_per_w = max(-(-n_loc // nb), 1)
+    n_blocks = M_dst * B_per_w
+    blk = dst_worker * B_per_w + dst_local // nb
+    loc_in_blk = dst_local % nb
 
     key = src_w * n_blocks + blk
     order = np.argsort(key, kind="stable")
@@ -316,6 +344,60 @@ def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
     return inbox, (msgs, per_worker)
 
 
+def sort_by_worker_target(worker: jnp.ndarray, t: jnp.ndarray):
+    """Two-pass stable sort of flat (E,) pairs by (worker, target) — no
+    ``worker * n_pad + target`` composite key that could overflow int32.
+    Returns (order, sorted worker, sorted target, first-of-segment mask);
+    a segment is one distinct (worker, target) pair."""
+    order1 = jnp.argsort(t, stable=True)
+    order = order1[jnp.argsort(worker[order1], stable=True)]
+    ws, ts = worker[order], t[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (ws[1:] != ws[:-1]) | (ts[1:] != ts[:-1])])
+    return order, ws, ts, first
+
+
+def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
+                        mask: jnp.ndarray, src_worker: jnp.ndarray,
+                        op: str, M: int, n_loc: int
+                        ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray,
+                                                      jnp.ndarray]]:
+    """CSR twin of ``combine_sorted``: flat (E,) targets/values/mask with
+    explicit per-edge source workers.  Sort by (worker, target), then a
+    segmented reduce and one flat (n_pad,) scatter.  Combined counts are
+    identical to the dense path (distinct non-identity (source worker,
+    destination vertex) pairs, destination remote)."""
+    ident = identity_of(op, values.dtype)
+    n_pad = M * n_loc
+    E = targets.shape[0]
+    if E == 0:
+        return (jnp.full((M, n_loc), ident, values.dtype),
+                (jnp.zeros((), jnp.int32), jnp.zeros((M,), jnp.int32)))
+    t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
+    order, ws, ts, first = sort_by_worker_target(src_worker, t)
+    vs = jnp.where(mask, values, ident)[order]
+
+    seg_id = (jnp.cumsum(first) - 1).astype(jnp.int32)
+    seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
+              "sum": jax.ops.segment_sum}[op]
+    seg_val = seg_fn(vs, seg_id, num_segments=E)
+    seg_t = jax.ops.segment_min(ts, seg_id, num_segments=E)
+    seg_w = jax.ops.segment_min(ws, seg_id, num_segments=E)
+    live = jnp.zeros((E,), bool).at[seg_id].set(True)
+    real = live & (seg_t < n_pad)
+
+    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
+                     jnp.where(real, seg_val, ident))
+    inbox = buf.reshape(M, n_loc)
+
+    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_w)
+    msgs = cross.sum().astype(jnp.int32)
+    per_worker = jnp.zeros((M,), jnp.int32).at[
+        jnp.where(cross, seg_w, 0)].add(cross.astype(jnp.int32))
+    return inbox, (msgs, per_worker)
+
+
 # ---------------------------------------------------------------------------
 # plan cache keyed on the partitioned graph
 # ---------------------------------------------------------------------------
@@ -330,7 +412,23 @@ def get_plan(pg, kind: str, nb: Optional[int] = None,
     key = (kind, nb, eb)
     if key in cache:
         return cache[key]
-    if kind == "eg":
+    if kind not in ("eg", "all", "mir"):
+        raise ValueError(f"unknown plan kind: {kind!r}")
+    if getattr(pg, "layout", "padded") == "csr":
+        # flat edges feed the packer directly: no padded unpack, no mask
+        if kind in ("eg", "all"):
+            src = np.asarray(pg.eg_src if kind == "eg" else pg.all_src)
+            dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)
+            plan = build_edge_plan_flat(src // pg.n_loc, dst // pg.n_loc,
+                                        dst % pg.n_loc, pg.M, pg.M,
+                                        pg.n_loc, nb, eb)
+        else:
+            # mirror fan-out is local: source worker == hosting worker
+            edst = np.asarray(pg.mir_edst)
+            plan = build_edge_plan_flat(edst // pg.n_loc, edst // pg.n_loc,
+                                        edst % pg.n_loc, pg.M, pg.M,
+                                        pg.n_loc, nb, eb)
+    elif kind == "eg":
         dst = np.asarray(pg.eg_dst)
         plan = build_edge_plan(dst // pg.n_loc, dst % pg.n_loc,
                                np.asarray(pg.eg_mask), pg.M, pg.n_loc,
@@ -340,12 +438,10 @@ def get_plan(pg, kind: str, nb: Optional[int] = None,
         plan = build_edge_plan(dst // pg.n_loc, dst % pg.n_loc,
                                np.asarray(pg.all_mask), pg.M, pg.n_loc,
                                nb, eb)
-    elif kind == "mir":
+    else:
         edst = np.asarray(pg.mir_edst)
         own = np.broadcast_to(np.arange(pg.M)[:, None], edst.shape)
         plan = build_edge_plan(own, edst, np.asarray(pg.mir_emask),
                                pg.M, pg.n_loc, nb, eb)
-    else:
-        raise ValueError(f"unknown plan kind: {kind!r}")
     cache[key] = plan
     return plan

@@ -9,6 +9,19 @@ all-gather collectives (the multi-pod dry-run proves it).  Static shapes
 come from padding each per-worker array to the max across workers — the
 padding itself visualizes the skew the paper fights.
 
+Two edge layouts are supported (``partition(..., layout=...)``):
+
+* ``"padded"`` — the reference layout: per-worker edge rows padded to the
+  hottest worker's length, ``(M, E_hot)`` arrays.  O(M * E_hot) host
+  memory; one skewed worker pads every row.
+* ``"csr"``    — flat edge arrays ``(E,)`` plus per-worker ``(M+1,)`` row
+  offsets (``eg_off``/``all_off``/``mir_eoff``).  O(E + M + n) memory,
+  no hot-worker padding; destination-blockable by ``core/plan.py``
+  without any intermediate padded unpack.  In this layout ``eg_src`` /
+  ``all_src`` hold *global* source slot ids (owner derivable as
+  ``src // n_loc``) and ``mir_edst`` holds *global* destination ids
+  (hosting worker derivable the same way).
+
 Vertex ids are relabeled by a random permutation at partition time and then
 block-partitioned: ``owner(v) = v // n_loc`` — distributionally identical to
 Pregel's hash partitioning with O(1) owner computation.
@@ -20,6 +33,8 @@ from typing import Optional
 
 import numpy as np
 import jax.numpy as jnp
+
+LAYOUTS = ("padded", "csr")
 
 
 @dataclasses.dataclass
@@ -68,6 +83,12 @@ class PartitionedGraph:
     Low-degree (< tau) vertices' edges go through Ch_msg (COO per worker);
     high-degree vertices are *mirrored*: their value is broadcast once per
     hosting worker and fanned out locally through the mirror COO.
+
+    ``layout="padded"``: edge arrays are (M, E_loc) rows padded to the
+    hottest worker.  ``layout="csr"``: edge arrays are flat (E,) with
+    per-worker (M+1,) row offsets; ``eg_src``/``all_src`` hold *global*
+    source slots and ``mir_edst`` *global* destination ids (the worker of
+    an edge is ``id // n_loc``), masks are all-True (no padding exists).
     """
     n: int
     M: int
@@ -76,14 +97,14 @@ class PartitionedGraph:
     perm: np.ndarray          # relabel: new_id = perm[old_id]
     inv_perm: np.ndarray
 
-    # Ch_msg edges (from non-mirrored sources), padded per worker:
-    eg_src: jnp.ndarray       # (M, E_loc) local src slot
-    eg_dst: jnp.ndarray       # (M, E_loc) global dst id (pad: 0)
-    eg_mask: jnp.ndarray      # (M, E_loc) bool
-    eg_w: jnp.ndarray         # (M, E_loc) float32
+    # Ch_msg edges (from non-mirrored sources):
+    eg_src: jnp.ndarray       # (M, E_loc) local src slot | (E_lo,) global
+    eg_dst: jnp.ndarray       # (M, E_loc) global dst id (pad: 0) | (E_lo,)
+    eg_mask: jnp.ndarray      # (M, E_loc) bool | (E_lo,) all-True
+    eg_w: jnp.ndarray         # (M, E_loc) float32 | (E_lo,)
 
     # full adjacency (mirrored + not), for algorithms that need all edges:
-    all_src: jnp.ndarray      # (M, A_loc)
+    all_src: jnp.ndarray      # (M, A_loc) | (E,) global
     all_dst: jnp.ndarray
     all_mask: jnp.ndarray
     all_w: jnp.ndarray
@@ -92,13 +113,19 @@ class PartitionedGraph:
     mir_ids: jnp.ndarray      # (n_mir,) global ids of mirrored vertices (pad n)
     mir_slot_of: jnp.ndarray  # (M, n_loc) index into mir_ids or -1
     mir_nworkers: jnp.ndarray # (n_mir,) #workers holding a mirror (Thm 1 count)
-    mir_esrc: jnp.ndarray     # (M, ME_loc) index into mir_ids
-    mir_edst: jnp.ndarray     # (M, ME_loc) local dst slot on this worker
-    mir_emask: jnp.ndarray    # (M, ME_loc)
-    mir_ew: jnp.ndarray       # (M, ME_loc)
+    mir_esrc: jnp.ndarray     # (M, ME_loc) index into mir_ids | (ME,)
+    mir_edst: jnp.ndarray     # (M, ME_loc) local dst slot | (ME,) global dst
+    mir_emask: jnp.ndarray    # (M, ME_loc) | (ME,) all-True
+    mir_ew: jnp.ndarray       # (M, ME_loc) | (ME,)
 
     deg: jnp.ndarray          # (M, n_loc) out-degree
     vmask: jnp.ndarray        # (M, n_loc) real-vertex mask
+
+    layout: str = "padded"
+    # csr row offsets (host numpy, (M+1,) int64); None in padded layout:
+    eg_off: Optional[np.ndarray] = None
+    all_off: Optional[np.ndarray] = None
+    mir_eoff: Optional[np.ndarray] = None
 
     # lazily-built message plans (core/plan.py), keyed (kind, nb, eb);
     # per-instance scratch, never part of equality or the pytree.
@@ -128,9 +155,18 @@ def _pad_rows(rows, pad_val, dtype):
 
 
 def partition(g: Graph, M: int, tau: Optional[int] = None,
-              seed: int = 0) -> PartitionedGraph:
+              seed: int = 0, layout: str = "padded") -> PartitionedGraph:
     """Hash-partition ``g`` over M workers with mirroring threshold ``tau``
-    (None => mirroring disabled, i.e. tau = inf)."""
+    (None => mirroring disabled, i.e. tau = inf).
+
+    ``layout="padded"`` builds (M, E_hot) per-worker rows (reference);
+    ``layout="csr"`` builds flat (E,) arrays + (M+1,) row offsets —
+    O(E + M + n) host memory, no hot-worker padding.  Both layouts come
+    from the same single stable sort, so corresponding edge orders are
+    identical (csr == padded rows concatenated without the padding).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; use one of {LAYOUTS}")
     rng = np.random.RandomState(seed)
     perm = rng.permutation(g.n).astype(np.int64)
     inv = np.empty_like(perm)
@@ -152,23 +188,39 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     oorder = np.argsort(owner, kind="stable")
     osrc, odst, ow_, olo = src[oorder], dst[oorder], w[oorder], lo[oorder]
     bounds = np.searchsorted(owner[oorder], np.arange(M + 1))
-    eg_rows_s, eg_rows_d, eg_rows_w = [], [], []
-    all_rows_s, all_rows_d, all_rows_w = [], [], []
-    for wk in range(M):
-        sl = slice(bounds[wk], bounds[wk + 1])
-        all_rows_s.append((osrc[sl] % n_loc).astype(np.int32))
-        all_rows_d.append(odst[sl].astype(np.int32))
-        all_rows_w.append(ow_[sl].astype(np.float32))
-        keep = olo[sl]
-        eg_rows_s.append((osrc[sl][keep] % n_loc).astype(np.int32))
-        eg_rows_d.append(odst[sl][keep].astype(np.int32))
-        eg_rows_w.append(ow_[sl][keep].astype(np.float32))
-    eg_src, eg_mask = _pad_rows(eg_rows_s, 0, np.int32)
-    eg_dst, _ = _pad_rows(eg_rows_d, 0, np.int32)
-    eg_w, _ = _pad_rows(eg_rows_w, 0.0, np.float32)
-    all_src, all_mask = _pad_rows(all_rows_s, 0, np.int32)
-    all_dst, _ = _pad_rows(all_rows_d, 0, np.int32)
-    all_w, _ = _pad_rows(all_rows_w, 0.0, np.float32)
+    if layout == "csr":
+        # flat arrays in the exact per-worker order of the padded rows;
+        # global source slot ids (owner == src // n_loc by construction)
+        all_src = osrc.astype(np.int32)
+        all_dst = odst.astype(np.int32)
+        all_w = ow_.astype(np.float32)
+        all_mask = np.ones(len(osrc), bool)
+        all_off = bounds.astype(np.int64)
+        eg_src = osrc[olo].astype(np.int32)
+        eg_dst = odst[olo].astype(np.int32)
+        eg_w = ow_[olo].astype(np.float32)
+        eg_mask = np.ones(len(eg_src), bool)
+        eg_off = np.searchsorted(owner[oorder][olo],
+                                 np.arange(M + 1)).astype(np.int64)
+    else:
+        eg_rows_s, eg_rows_d, eg_rows_w = [], [], []
+        all_rows_s, all_rows_d, all_rows_w = [], [], []
+        for wk in range(M):
+            sl = slice(bounds[wk], bounds[wk + 1])
+            all_rows_s.append((osrc[sl] % n_loc).astype(np.int32))
+            all_rows_d.append(odst[sl].astype(np.int32))
+            all_rows_w.append(ow_[sl].astype(np.float32))
+            keep = olo[sl]
+            eg_rows_s.append((osrc[sl][keep] % n_loc).astype(np.int32))
+            eg_rows_d.append(odst[sl][keep].astype(np.int32))
+            eg_rows_w.append(ow_[sl][keep].astype(np.float32))
+        eg_src, eg_mask = _pad_rows(eg_rows_s, 0, np.int32)
+        eg_dst, _ = _pad_rows(eg_rows_d, 0, np.int32)
+        eg_w, _ = _pad_rows(eg_rows_w, 0.0, np.float32)
+        all_src, all_mask = _pad_rows(all_rows_s, 0, np.int32)
+        all_dst, _ = _pad_rows(all_rows_d, 0, np.int32)
+        all_w, _ = _pad_rows(all_rows_w, 0.0, np.float32)
+        eg_off = all_off = None
 
     # ---- mirrors: group each high-deg vertex's edges by dst worker -----
     mir_vertex_ids = np.flatnonzero(mirrored)          # sorted global ids
@@ -179,9 +231,10 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     hi = mirrored[src]
     hsrc, hdst, hw = src[hi], dst[hi], w[hi]
     dst_owner = hdst // n_loc
-    rows_es = [np.zeros(0, np.int32) for _ in range(M)]
-    rows_ed = [np.zeros(0, np.int32) for _ in range(M)]
-    rows_ew = [np.zeros(0, np.float32) for _ in range(M)]
+    es_all = np.zeros(0, np.int32)
+    edg_all = np.zeros(0, np.int64)                    # global dst ids
+    ew_all = np.zeros(0, np.float32)
+    hb = np.zeros(M + 1, np.int64)
     nworkers = np.zeros(n_mir, np.int64)
     if len(hsrc):
         # vectorized grouping: sort once by (dst worker, src, dst), then
@@ -192,25 +245,31 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         mir_idx_of = np.full(g.n, -1, np.int64)
         mir_idx_of[mir_vertex_ids] = np.arange(len(mir_vertex_ids))
         es_all = mir_idx_of[hsrc].astype(np.int32)
-        ed_all = (hdst % n_loc).astype(np.int32)
+        edg_all = hdst.astype(np.int64)
         ew_all = hw.astype(np.float32)
-        hb = np.searchsorted(dst_owner, np.arange(M + 1))
-        for ow in range(M):
-            sl = slice(hb[ow], hb[ow + 1])
-            rows_es[ow] = es_all[sl]
-            rows_ed[ow] = ed_all[sl]
-            rows_ew[ow] = ew_all[sl]
+        hb = np.searchsorted(dst_owner, np.arange(M + 1)).astype(np.int64)
         # workers per mirrored vertex
         pair = np.unique(hsrc * np.int64(M) + dst_owner)
         cnt = np.bincount((pair // M).astype(np.int64), minlength=g.n)
         nworkers = cnt[mir_vertex_ids] if len(mir_vertex_ids) else nworkers
-    mir_esrc, mir_emask = _pad_rows(rows_es, 0, np.int32)
-    mir_edst, _ = _pad_rows(rows_ed, 0, np.int32)
-    mir_ew, _ = _pad_rows(rows_ew, 0.0, np.float32)
+    if layout == "csr":
+        mir_esrc = es_all
+        mir_edst = edg_all.astype(np.int32)            # global dst ids
+        mir_ew = ew_all
+        mir_emask = np.ones(len(es_all), bool)
+        mir_eoff = hb
+    else:
+        rows_es = [es_all[hb[ow]:hb[ow + 1]] for ow in range(M)]
+        rows_ed = [(edg_all[hb[ow]:hb[ow + 1]] % n_loc).astype(np.int32)
+                   for ow in range(M)]
+        rows_ew = [ew_all[hb[ow]:hb[ow + 1]] for ow in range(M)]
+        mir_esrc, mir_emask = _pad_rows(rows_es, 0, np.int32)
+        mir_edst, _ = _pad_rows(rows_ed, 0, np.int32)
+        mir_ew, _ = _pad_rows(rows_ew, 0.0, np.float32)
+        mir_eoff = None
 
     deg_pad = np.zeros((M, n_loc), np.int32)
     vmask = np.zeros((M, n_loc), bool)
-    ids = np.arange(M * n_loc)
     vmask.reshape(-1)[:g.n] = True
     deg_pad.reshape(-1)[:g.n] = deg
 
@@ -229,4 +288,5 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         mir_esrc=jnp.asarray(mir_esrc), mir_edst=jnp.asarray(mir_edst),
         mir_emask=jnp.asarray(mir_emask), mir_ew=jnp.asarray(mir_ew),
         deg=jnp.asarray(deg_pad), vmask=jnp.asarray(vmask),
+        layout=layout, eg_off=eg_off, all_off=all_off, mir_eoff=mir_eoff,
     )

@@ -33,7 +33,8 @@ GRAPHS = {
 }
 
 
-def build(graph: str, n: int, seed: int, M: int, tau_arg: str):
+def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
+          layout: str = "padded"):
     g = GRAPHS[graph](n, seed)
     g = g.symmetrized()
     deg = g.out_degrees()
@@ -43,7 +44,7 @@ def build(graph: str, n: int, seed: int, M: int, tau_arg: str):
         tau = None
     else:
         tau = int(tau_arg)
-    pg = partition(g, M, tau=tau, seed=seed)
+    pg = partition(g, M, tau=tau, seed=seed, layout=layout)
     return g, pg, tau
 
 
@@ -61,12 +62,17 @@ def main():
     ap.add_argument("--backend", default="dense", choices=["dense", "pallas"],
                     help="combine-channel implementation: dense vmap "
                          "scatters or the plan-driven segment_combine path")
+    ap.add_argument("--layout", default="padded", choices=["padded", "csr"],
+                    help="edge representation: padded (M, E_loc) rows "
+                         "(reference) or flat csr arrays + row offsets "
+                         "(O(E + M + n) host memory)")
     args = ap.parse_args()
 
-    g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau)
+    g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau,
+                       layout=args.layout)
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
           f"tau={tau} max_deg={int(g.out_degrees().max())} "
-          f"backend={args.backend}")
+          f"backend={args.backend} layout={args.layout}")
 
     t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
@@ -83,7 +89,8 @@ def main():
         if gw.weight is None:
             gw.weight = np.ones(gw.m, np.float32)
         gw = gw.symmetrized()
-        pgw = partition(gw, args.workers, tau=tau, seed=args.seed)
+        pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
+                        layout=args.layout)
         _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
                               backend=be)
         pg = pgw
@@ -93,7 +100,8 @@ def main():
             rng = np.random.RandomState(args.seed)
             gw.weight = rng.rand(gw.m).astype(np.float32) + 0.01
         gw = gw.symmetrized()
-        pgw = partition(gw, args.workers, tau=None, seed=args.seed)
+        pgw = partition(gw, args.workers, tau=None, seed=args.seed,
+                        layout=args.layout)
         (res, stats, n_ss) = msf(pgw, backend=be)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")

@@ -1,0 +1,113 @@
+"""Direct property tests for Ch_req (request-respond) — Theorem 3.
+
+The channel previously had only indirect coverage through sv/msf; these
+pin its contract: the 2*M*distinct-targets bound, dedup idempotence,
+dedup=False value equality, and padded/flat stats agreement.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channels import _dedup_row, rr_gather, rr_gather_flat
+
+
+def _case(seed, M=5, n_loc=40, R=60, hot_frac=0.4):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    vals = rng.randn(M, n_loc).astype(np.float32)
+    targets = rng.randint(0, M * n_loc, (M, R)).astype(np.int32)
+    hot = rng.randint(0, M * n_loc)
+    targets[:, : int(R * hot_frac)] = hot          # the S-V skew pattern
+    mask = rng.rand(M, R) > 0.25
+    return (jnp.asarray(vals), jnp.asarray(targets), jnp.asarray(mask),
+            M, n_loc, R)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_thm3_bound_two_M_per_distinct_target(seed):
+    """msgs_rr <= 2 * M * (#distinct requested targets): each distinct
+    target is requested at most once per worker, and every request costs
+    a request + a response message."""
+    vals, targets, mask, M, n_loc, R = _case(seed)
+    _, stats = rr_gather(vals, targets, mask, M, n_loc)
+    distinct = len(np.unique(np.asarray(targets)[np.asarray(mask)]))
+    assert int(stats["msgs_rr"]) <= 2 * M * distinct
+    # and the paper's per-target form: 2 * sum_t min(M, l_t)
+    t_np, m_np = np.asarray(targets), np.asarray(mask)
+    bound = 2 * sum(min(M, int((t_np[m_np] == t).sum()))
+                    for t in np.unique(t_np[m_np]))
+    assert int(stats["msgs_rr"]) <= bound
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dedup_row_idempotent(seed):
+    """Deduplicating an already-deduplicated request list is a no-op."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    n_pad = 64
+    t = jnp.asarray(rng.randint(0, n_pad, 30).astype(np.int32))
+    u1, _ = _dedup_row(t, n_pad)
+    u2, _ = _dedup_row(u1, n_pad)
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dedup_gains_nothing_on_unique_targets(seed):
+    """When every worker's masked targets are already distinct,
+    request-respond degenerates to the basic channel count."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    M, n_loc, R = 4, 50, 30
+    vals = jnp.asarray(rng.randn(M, n_loc).astype(np.float32))
+    targets = np.stack([rng.choice(M * n_loc, R, replace=False)
+                        for _ in range(M)]).astype(np.int32)
+    mask = rng.rand(M, R) > 0.3
+    _, stats = rr_gather(vals, jnp.asarray(targets), jnp.asarray(mask),
+                         M, n_loc)
+    assert int(stats["msgs_rr"]) == int(stats["msgs_basic"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dedup_false_same_values_basic_counts(seed):
+    """dedup only changes the message accounting, never the values."""
+    vals, targets, mask, M, n_loc, R = _case(seed)
+    out_d, s_d = rr_gather(vals, targets, mask, M, n_loc, dedup=True)
+    out_n, s_n = rr_gather(vals, targets, mask, M, n_loc, dedup=False)
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_n))
+    assert int(s_n["msgs_rr"]) == int(s_n["msgs_basic"])
+    assert int(s_d["msgs_rr"]) <= int(s_n["msgs_rr"])
+    np.testing.assert_array_equal(np.asarray(s_n["per_worker_rr"]),
+                                  np.asarray(s_n["per_worker_basic"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_flat_matches_padded_values_and_stats(seed):
+    """rr_gather_flat (csr layout) reproduces the padded channel's
+    gathered values and every statistic on the same request set."""
+    vals, targets, mask, M, n_loc, R = _case(seed)
+    out_p, s_p = rr_gather(vals, targets, mask, M, n_loc)
+    worker = jnp.broadcast_to(jnp.arange(M)[:, None], (M, R)).reshape(-1)
+    out_f, s_f = rr_gather_flat(vals, targets.reshape(-1), worker,
+                                mask.reshape(-1), M, n_loc)
+    m = np.asarray(mask).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(out_p).reshape(-1)[m],
+                                  np.asarray(out_f)[m])
+    for k in s_p:
+        np.testing.assert_array_equal(np.asarray(s_p[k]),
+                                      np.asarray(s_f[k]), err_msg=k)
+
+
+def test_rr_under_jit():
+    """Both variants trace cleanly under jit (static M/n_loc)."""
+    vals, targets, mask, M, n_loc, R = _case(7)
+    f = jax.jit(lambda v, t, m: rr_gather(v, t, m, M, n_loc))
+    out, stats = f(vals, targets, mask)
+    assert out.shape == (M, R) and int(stats["msgs_rr"]) >= 0
+    worker = jnp.broadcast_to(jnp.arange(M)[:, None], (M, R)).reshape(-1)
+    g = jax.jit(lambda v, t, w, m: rr_gather_flat(v, t, w, m, M, n_loc))
+    out_f, stats_f = g(vals, targets.reshape(-1), worker, mask.reshape(-1))
+    assert out_f.shape == (M * R,)
+    assert int(stats_f["msgs_rr"]) == int(stats["msgs_rr"])

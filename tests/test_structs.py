@@ -1,0 +1,103 @@
+"""Graph container / partition invariants across both edge layouts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+
+def _edge_key(g):
+    return np.sort(g.src.astype(np.int64) * g.n + g.dst)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_symmetrized_idempotent(seed, weighted):
+    g = gen.powerlaw(150, avg_deg=5, seed=seed % 97, weighted=weighted)
+    s1 = g.symmetrized()
+    s2 = s1.symmetrized()
+    np.testing.assert_array_equal(_edge_key(s1), _edge_key(s2))
+    if weighted:
+        o1 = np.argsort(s1.src.astype(np.int64) * g.n + s1.dst)
+        o2 = np.argsort(s2.src.astype(np.int64) * g.n + s2.dst)
+        np.testing.assert_array_equal(s1.weight[o1], s2.weight[o2])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_symmetrized_weight_symmetric(seed):
+    g = gen.powerlaw(150, avg_deg=5, seed=seed % 89,
+                     weighted=True).symmetrized()
+    w_of = {}
+    for s, d, w in zip(g.src, g.dst, g.weight):
+        w_of[(int(s), int(d))] = float(w)
+    for (s, d), w in w_of.items():
+        assert (d, s) in w_of, "missing reverse edge"
+        assert w_of[(d, s)] == w, "asymmetric weight"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]),
+       st.sampled_from([None, 6, 16]))
+def test_partition_conserves_edges_and_degrees(seed, M, tau):
+    g = gen.powerlaw(200, avg_deg=6, seed=seed % 83,
+                     weighted=True).symmetrized()
+    for layout in ("padded", "csr"):
+        pg = partition(g, M, tau=tau, seed=seed % 7, layout=layout)
+        # every edge appears exactly once in the full adjacency,
+        # and exactly once in the Ch_msg/mirror split
+        n_all = int(np.asarray(pg.all_mask).sum())
+        n_eg = int(np.asarray(pg.eg_mask).sum())
+        n_mir = int(np.asarray(pg.mir_emask).sum())
+        assert n_all == g.m, layout
+        assert n_eg + n_mir == g.m, layout
+        # degrees survive the relabeling
+        deg = np.zeros(pg.n_pad, np.int64)
+        deg[: g.n] = np.bincount(pg.perm[g.src], minlength=g.n)
+        np.testing.assert_array_equal(np.asarray(pg.deg).reshape(-1), deg)
+        assert int(np.asarray(pg.vmask).sum()) == g.n
+
+
+def test_csr_equals_padded_rows_concatenated():
+    """Same seed => same sort => csr flat arrays are exactly the padded
+    rows with the padding removed (and local ids globalized)."""
+    g = gen.powerlaw(250, avg_deg=6, seed=3, weighted=True).symmetrized()
+    M = 4
+    pp = partition(g, M, tau=8, seed=0, layout="padded")
+    pc = partition(g, M, tau=8, seed=0, layout="csr")
+    n_loc = pp.n_loc
+    for kind in ("eg", "all"):
+        mask = np.asarray(getattr(pp, f"{kind}_mask"))
+        src_p = np.asarray(getattr(pp, f"{kind}_src"))
+        row_w = np.broadcast_to(np.arange(M)[:, None], mask.shape)
+        np.testing.assert_array_equal(
+            (row_w * n_loc + src_p)[mask],
+            np.asarray(getattr(pc, f"{kind}_src")))
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pp, f"{kind}_dst"))[mask],
+            np.asarray(getattr(pc, f"{kind}_dst")))
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pp, f"{kind}_w"))[mask],
+            np.asarray(getattr(pc, f"{kind}_w")))
+        off = getattr(pc, f"{kind}_off")
+        np.testing.assert_array_equal(np.diff(off), mask.sum(axis=1))
+    # mirror edges: local dst on hosting worker w <-> global w*n_loc + dst
+    mmask = np.asarray(pp.mir_emask)
+    row_w = np.broadcast_to(np.arange(M)[:, None], mmask.shape)
+    np.testing.assert_array_equal(np.asarray(pp.mir_esrc)[mmask],
+                                  np.asarray(pc.mir_esrc))
+    np.testing.assert_array_equal(
+        (row_w * n_loc + np.asarray(pp.mir_edst))[mmask],
+        np.asarray(pc.mir_edst))
+    np.testing.assert_array_equal(np.diff(pc.mir_eoff), mmask.sum(axis=1))
+    # per-worker slices really belong to that worker
+    for w in range(M):
+        sl = slice(int(pc.all_off[w]), int(pc.all_off[w + 1]))
+        assert (np.asarray(pc.all_src[sl]) // n_loc == w).all()
+
+
+def test_partition_rejects_unknown_layout():
+    g = gen.chain(16)
+    with pytest.raises(ValueError):
+        partition(g, 2, layout="coo")
