@@ -1,15 +1,22 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--smoke`` runs a fast invariant-checking mode for CI: it asserts the
-# paper's message-count theorems and dense/pallas backend parity on small
-# graphs and writes the numbers to a JSON artifact.
+# paper's message-count theorems, dense/pallas backend parity, and sharded
+# executor parity on small graphs and writes the numbers to a JSON
+# artifact.  ``--graph-bench`` records the perf trajectory (wall time +
+# message counts for every backend x layout x device-count cell) to
+# BENCH_graph.json.
 import argparse
 import json
 import sys
+import time
 import traceback
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+# jax-free: safe to import before the flags are set
+from repro.launch.xla_flags import force_host_devices  # noqa: E402
 
 
 def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
@@ -83,20 +90,91 @@ def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
     check("thm3_rr_le_basic", int(s_sv["msgs_rr"]) <= int(s_sv["msgs_basic"]),
           rr=s_sv["msgs_rr"], basic=s_sv["msgs_basic"])
 
+    # sharded executor parity: the worker mesh must not change a label or
+    # a single message count (dense all_to_all join, 8 forced host devices)
+    labels_1, _, _ = hashmin(pg_csr, backend="dense")
+    labels_8, s_sh, _ = hashmin(pg_csr, backend="dense", devices=8)
+    sharded_parity = (np.array_equal(np.asarray(labels_1),
+                                     np.asarray(labels_8))
+                      and all(np.array_equal(np.asarray(stats["dense"][k]),
+                                             np.asarray(s_sh[k]))
+                              for k in stats["dense"]))
+    check("sharded_parity", sharded_parity,
+          devices1_total=stats["dense"]["msgs_total"],
+          devices8_total=s_sh["msgs_total"])
+
     Path(out_path).write_text(json.dumps(report, indent=2))
     print(f"[smoke] all invariants hold; report -> {out_path}")
+
+
+def graph_bench(out_path: str, n: int = 200_000, M: int = 8,
+                device_counts=(1, 8)) -> None:
+    """Perf-trajectory artifact: wall time + message counts for every
+    algo x backend x layout x device-count cell.  Wall times include the
+    per-call jit compile (each cell builds a fresh step closure) — they
+    are trend numbers, not steady-state throughput."""
+    from repro.algorithms.hashmin import hashmin
+    from repro.algorithms.pagerank import pagerank
+    from repro.core.cost_model import choose_tau
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    g = gen.powerlaw(n, avg_deg=8, seed=5, alpha=1.8).symmetrized()
+    tau = choose_tau(g.out_degrees(), M)
+    report = {"n": g.n, "m": g.m, "workers": M, "tau": int(tau),
+              "cells": []}
+    for layout in ("padded", "csr"):
+        pg = partition(g, M, tau=tau, seed=0, layout=layout)
+        for backend in ("dense", "pallas"):
+            for algo, fn in (("hashmin", hashmin),
+                             ("pagerank", lambda p, **kw: pagerank(
+                                 p, n_iters=10, tol=0.0, **kw))):
+                for D in device_counts:
+                    dev = None if D == 1 else D
+                    t0 = time.perf_counter()
+                    _, stats, n_ss = fn(pg, backend=backend, devices=dev)
+                    wall = time.perf_counter() - t0
+                    cell = {"algo": algo, "backend": backend,
+                            "layout": layout, "devices": D,
+                            "wall_s": round(wall, 3),
+                            "supersteps": int(n_ss),
+                            "msgs_total": int(stats["msgs_total"]),
+                            "msgs_basic": int(stats["msgs_basic"])}
+                    report["cells"].append(cell)
+                    print(f"[graph-bench] {algo}/{layout}/{backend}/"
+                          f"devices={D}: {wall:.2f}s "
+                          f"msgs={cell['msgs_total']:,d}")
+    # the mesh is a representation choice: message counts must agree
+    # across every cell of one algo
+    for algo in ("hashmin", "pagerank"):
+        totals = {c["msgs_total"] for c in report["cells"]
+                  if c["algo"] == algo}
+        assert len(totals) == 1, f"{algo}: msgs_total diverged {totals}"
+    Path(out_path).write_text(json.dumps(report, indent=2))
+    print(f"[graph-bench] report -> {out_path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: assert the paper's message-count "
-                         "invariants + backend parity, emit JSON")
+                         "invariants + backend/layout/sharded parity, "
+                         "emit JSON")
+    ap.add_argument("--graph-bench", action="store_true",
+                    help="record wall time + message counts for every "
+                         "backend x layout x device-count cell")
+    ap.add_argument("--n", type=int, default=200_000,
+                    help="graph size (graph-bench mode)")
     ap.add_argument("--out", default="bench-smoke.json",
-                    help="JSON report path (smoke mode)")
+                    help="JSON report path (smoke / graph-bench mode)")
     args = ap.parse_args()
+    if args.smoke or args.graph_bench:
+        force_host_devices(8)      # before the first jax import
     if args.smoke:
         smoke(args.out)
+        return
+    if args.graph_bench:
+        graph_bench(args.out, n=args.n)
         return
 
     from benchmarks import (bench_balance, bench_kernels, bench_mirroring,

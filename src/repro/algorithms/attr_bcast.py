@@ -5,29 +5,44 @@ requests per (worker, target)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core.channels import rr_gather, rr_gather_flat
+from repro.core import exec as exec_mod
+from repro.core.channels import gather_edges
 from repro.graph.structs import PartitionedGraph
 
 
-def attribute_broadcast(pg: PartitionedGraph, attr: jnp.ndarray,
-                        backend: str = "dense"):
+def attribute_broadcast(pg: PartitionedGraph, attr,
+                        backend: str = "dense",
+                        devices: int | None = None):
     """attr: (M, n_loc) vertex attribute.  Returns (edge_attr aligned with
     pg.all_dst — (M, A_loc) padded layout, (E,) csr layout — and stats).
     stats['msgs_basic'] is the 3-superstep Pregel cost (request+response
     per edge, 2|E| messages); stats['msgs_rr'] the deduplicated Ch_req
-    cost, identical across layouts.
+    cost, identical across layouts and device counts.
 
     ``backend`` is accepted for driver uniformity: Ch_req is a pure
     gather with no combine stage, so both backends share one path."""
     del backend
+
+    def make_fn(g):
+        def fn(a):
+            return gather_edges(g, a, g.all_dst, g.all_mask)
+        return fn
+
+    if devices is None:
+        out, stats = jax.jit(make_fn(pg))(attr)
+        return out, stats
+
+    out, stats = exec_mod.apply_sharded(pg, make_fn, (attr,),
+                                        devices=devices)
     if pg.layout == "csr":
-        worker = pg.all_src // pg.n_loc
-        fn = jax.jit(lambda a: rr_gather_flat(a, pg.all_dst, worker,
-                                              pg.all_mask, pg.M, pg.n_loc))
-    else:
-        fn = jax.jit(lambda a: rr_gather(a, pg.all_dst, pg.all_mask,
-                                         pg.M, pg.n_loc))
-    out, stats = fn(attr)
+        # sharded csr outputs come back device-concatenated with per-device
+        # padding: strip back to the flat (E,) edge order
+        bounds = exec_mod.csr_device_bounds(pg.all_off, pg.M, devices)
+        counts = np.diff(bounds)
+        cap = out.shape[0] // devices
+        out = jax.numpy.concatenate(
+            [out[d * cap:d * cap + int(counts[d])]
+             for d in range(devices)])
     return out, stats

@@ -1,37 +1,58 @@
 """Hash-Min connected components (paper §3.3): broadcast the smallest id
-seen so far with a min combiner.  The Fig. 1 balance workload."""
+seen so far with a min combiner.  The Fig. 1 balance workload.
+
+The min-combine runs in the *integer* id dtype end to end: the identity is
+the int32 sentinel from ``plan.identity_of`` (iinfo.max), never a float
+cast.  Casting ids to float32 silently merges distinct components once ids
+exceed 2^24 (not representable), exactly the multi-million-vertex regime
+the paper targets — pinned by tests/test_large_ids.py.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bsp
+from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
+from repro.core.plan import identity_of
 from repro.graph.structs import PartitionedGraph
 
 
 def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
             use_mirroring: bool = True, record_history: bool = False,
-            backend: str = "dense"):
-    ids = pg.local_ids()
+            backend: str = "dense", devices: int | None = None):
+    """Returns (labels, stats, n_supersteps[, history]).  ``devices=None``
+    runs the single-device batched simulation; an int runs the sharded
+    executor over that many devices (bitwise-identical labels & stats)."""
+    imax = identity_of("min", jnp.int32)
 
-    def step(state, i):
-        minv, active = state
-        inbox, stats = broadcast(pg, minv.astype(jnp.float32), active,
-                                 op="min", use_mirroring=use_mirroring,
-                                 backend=backend)
-        inbox = jnp.where(jnp.isfinite(inbox), inbox,
-                          jnp.inf).astype(jnp.float32)
-        upd = pg.vmask & (inbox < minv)
-        new = jnp.where(upd, inbox, minv)
-        halted = ~jnp.any(upd)
-        return (new, upd), halted, stats
+    def make_step(g):
+        def step(state, i):
+            minv, active = state
+            inbox, stats = broadcast(g, minv, active, op="min",
+                                     use_mirroring=use_mirroring,
+                                     backend=backend)
+            upd = g.vmask & (inbox < minv)
+            new = jnp.where(upd, inbox, minv)
+            halted = ~g.gany(upd)
+            return (new, upd), halted, stats
+        return step
 
-    minv0 = jnp.where(pg.vmask, ids.astype(jnp.float32), jnp.inf)
+    ids = pg.local_ids().astype(jnp.int32)
+    minv0 = jnp.where(pg.vmask, ids, imax)
     state0 = (minv0, pg.vmask)
-    (minv, _), stats, n = (out := bsp.run(jax.jit(step), state0,
-                                          max_supersteps,
-                                          record_history=record_history))[:3]
+    if devices is None:
+        st, stats, n, hist = bsp.run(jax.jit(make_step(pg)), state0,
+                                     max_supersteps,
+                                     record_history=record_history)
+    else:
+        st, stats, n, hist = exec_mod.run_sharded(
+            pg, make_step, state0, max_supersteps,
+            record_history=record_history, devices=devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
+                                                     use_mirroring))
+    minv = st[0]
     if record_history:
-        return minv.astype(jnp.int32), stats, n, out[3]
-    return minv.astype(jnp.int32), stats, n
+        return minv, stats, n, hist
+    return minv, stats, n

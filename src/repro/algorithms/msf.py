@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import bsp
-from repro.core.channels import (rr_gather, rr_gather_flat, scatter_combine,
-                                 scatter_combine_flat)
+from repro.core import exec as exec_mod
+from repro.core.channels import gather, gather_edges, scatter_edges
 from repro.graph.structs import PartitionedGraph
 from repro.algorithms.sv import _acc
 
@@ -28,111 +28,104 @@ IMAX = jnp.iinfo(jnp.int32).max
 
 
 def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
-        backend: str = "dense"):
-    """Returns ((total_weight, n_edges, labels), stats, rounds).
+        backend: str = "dense", devices: int | None = None):
+    """Returns ((labels, total_weight, n_edges), stats, rounds).
     Requires pg built from a *weighted, symmetrized* graph.
 
     Edge-shaped reads/writes (per-edge supervertex queries, min-edge
-    election) follow ``pg.layout``: padded (M, A_loc) rows through
-    rr_gather/scatter_combine, flat csr (E,) arrays through the _flat
-    twins.  State-shaped ops (pointer jumping) are layout-independent."""
-    ids = pg.local_ids().astype(jnp.int32)
-    M, n_loc = pg.M, pg.n_loc
-    widx = jnp.arange(M)[:, None]
-    csr = pg.layout == "csr"
-    e_worker = pg.all_src // n_loc if csr else None
+    election) go through the pg-level channel wrappers, which follow
+    ``pg.layout`` (padded rows vs flat csr) and, under the sharded
+    executor, the device mesh.  State-shaped ops (pointer jumping) are
+    layout-independent."""
 
-    def edge_vals(D):
-        """D at each edge's (local) source endpoint."""
-        if csr:
-            return D.reshape(-1)[pg.all_src]
-        return D[widx, pg.all_src]
+    def make_step(g):
+        M = g.M
 
-    def edge_read(arr, tgt, msk):
-        """rr-read arr[tgt] for edge-shaped global targets."""
-        if csr:
-            return rr_gather_flat(arr, tgt, e_worker, msk, M, n_loc)
-        return rr_gather(arr, tgt, msk, M, n_loc)
+        def step(state, i):
+            D, total_w, n_edges = state
+            ids = g.local_ids().astype(jnp.int32)
+            stats: dict = {}
 
-    def edge_scatter(base, tgt, upd, msk, op):
-        """combined scatter for edge-shaped updates."""
-        if csr:
-            return scatter_combine_flat(base, tgt, upd, msk, e_worker, op,
-                                        M, n_loc, backend=backend)
-        return scatter_combine(base, tgt, upd, msk, op, M, n_loc,
-                               backend=backend)
+            Dv, s = gather_edges(g, D, g.all_dst, g.all_mask)
+            stats = _acc(stats, s, M)
+            Du = g.edge_src_values(D, g.all_src)
+            cross = g.all_mask & (Dv != Du)
 
-    def step(state, i):
-        D, total_w, n_edges = state
-        stats: dict = {}
+            # --- 3-stage min-edge election per supervertex ---------------
+            inf_f = jnp.full(ids.shape, jnp.inf, jnp.float32)
+            wmin, s = scatter_edges(g, inf_f, Du, g.all_w, cross, "min",
+                                    backend=backend)
+            stats = _acc(stats, s, M)
+            wmin_e, s = gather_edges(g, wmin, Du, cross)
+            stats = _acc(stats, s, M)
+            sel = cross & (g.all_w == wmin_e)
 
-        Dv, s = edge_read(D, pg.all_dst, pg.all_mask)
-        stats = _acc(stats, s, M)
-        Du = edge_vals(D)
-        cross = pg.all_mask & (Dv != Du)
+            lo = jnp.minimum(Du, Dv)
+            hi = jnp.maximum(Du, Dv)
+            imax_i = jnp.full(ids.shape, IMAX, jnp.int32)
+            lomin, s = scatter_edges(g, imax_i, Du, lo, sel, "min",
+                                     backend=backend)
+            stats = _acc(stats, s, M)
+            lomin_e, s = gather_edges(g, lomin, Du, sel)
+            stats = _acc(stats, s, M)
+            sel &= lo == lomin_e
 
-        # --- 3-stage min-edge election per supervertex -------------------
-        inf_f = jnp.full((M, n_loc), jnp.inf, jnp.float32)
-        wmin, s = edge_scatter(inf_f, Du, pg.all_w, cross, "min")
-        stats = _acc(stats, s, M)
-        wmin_e, s = edge_read(wmin, Du, cross)
-        stats = _acc(stats, s, M)
-        sel = cross & (pg.all_w == wmin_e)
+            himin, s = scatter_edges(g, imax_i, Du, hi, sel, "min",
+                                     backend=backend)
+            stats = _acc(stats, s, M)
+            himin_e, s = gather_edges(g, himin, Du, sel)
+            stats = _acc(stats, s, M)
+            sel &= hi == himin_e
 
-        lo = jnp.minimum(Du, Dv)
-        hi = jnp.maximum(Du, Dv)
-        imax_i = jnp.full((M, n_loc), IMAX, jnp.int32)
-        lomin, s = edge_scatter(imax_i, Du, lo, sel, "min")
-        stats = _acc(stats, s, M)
-        lomin_e, s = edge_read(lomin, Du, sel)
-        stats = _acc(stats, s, M)
-        sel &= lo == lomin_e
+            other = jnp.where(lo == Du, hi, lo)
+            tgt, s = scatter_edges(g, imax_i, Du, other, sel, "min",
+                                   backend=backend)
+            stats = _acc(stats, s, M)
 
-        himin, s = edge_scatter(imax_i, Du, hi, sel, "min")
-        stats = _acc(stats, s, M)
-        himin_e, s = edge_read(himin, Du, sel)
-        stats = _acc(stats, s, M)
-        sel &= hi == himin_e
+            valid = g.vmask & (tgt != IMAX)
+            t_of_t, s = gather(g, tgt, jnp.where(valid, tgt, 0), valid)
+            stats = _acc(stats, s, M)
+            mutual = valid & (t_of_t == ids)
 
-        other = jnp.where(lo == Du, hi, lo)
-        tgt, s = edge_scatter(imax_i, Du, other, sel, "min")
-        stats = _acc(stats, s, M)
+            add = valid & (~mutual | (ids < tgt))
+            total_w = total_w + g.gsum(jnp.where(add, wmin, 0.0))
+            n_edges = n_edges + g.gsum(add)
 
-        valid = pg.vmask & (tgt != IMAX)
-        t_of_t, s = rr_gather(tgt, jnp.where(valid, tgt, 0), valid, M, n_loc)
-        stats = _acc(stats, s, M)
-        mutual = valid & (t_of_t == ids)
+            is_root = D == ids
+            hookD = jnp.where(mutual & (ids < tgt), ids, tgt)
+            D1 = jnp.where(is_root & valid, hookD, D)
 
-        add = valid & (~mutual | (ids < tgt))
-        total_w = total_w + jnp.where(add, wmin, 0.0).sum()
-        n_edges = n_edges + add.sum()
+            # --- pointer jumping (subvertices chase the supervertex) -----
+            def jcond(c):
+                _, changed, _ = c
+                return changed
 
-        is_root = D == ids
-        hookD = jnp.where(mutual & (ids < tgt), ids, tgt)
-        D1 = jnp.where(is_root & valid, hookD, D)
+            def jbody(c):
+                Dj, _, cnt = c
+                DD, s = gather(g, Dj, Dj, g.vmask)
+                cnt = (cnt[0] + s["msgs_rr"], cnt[1] + s["msgs_basic"],
+                       cnt[2] + s["per_worker_rr"],
+                       cnt[3] + s["per_worker_basic"])
+                return DD, g.gany(DD != Dj), cnt
 
-        # --- pointer jumping (subvertices chase the new supervertex) -----
-        def jcond(c):
-            _, changed, _ = c
-            return changed
+            zero = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                    jnp.zeros((M,), jnp.int32), jnp.zeros((M,), jnp.int32))
+            D2, _, cnt = lax.while_loop(jcond, jbody,
+                                        (D1, g.gany(D1 != D), zero))
+            stats = _acc(stats, {"msgs_rr": cnt[0], "msgs_basic": cnt[1],
+                                 "per_worker_rr": cnt[2],
+                                 "per_worker_basic": cnt[3]}, M)
 
-        def jbody(c):
-            Dj, _, cnt = c
-            DD, s = rr_gather(Dj, Dj, pg.vmask, M, n_loc)
-            cnt = (cnt[0] + s["msgs_rr"], cnt[1] + s["msgs_basic"],
-                   cnt[2] + s["per_worker_rr"], cnt[3] + s["per_worker_basic"])
-            return DD, jnp.any(DD != Dj), cnt
+            halted = ~g.gany(valid)
+            return (D2, total_w, n_edges), halted, stats
+        return step
 
-        zero = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-                jnp.zeros((M,), jnp.int32), jnp.zeros((M,), jnp.int32))
-        D2, _, cnt = lax.while_loop(jcond, jbody,
-                                    (D1, jnp.any(D1 != D), zero))
-        stats = _acc(stats, {"msgs_rr": cnt[0], "msgs_basic": cnt[1],
-                             "per_worker_rr": cnt[2],
-                             "per_worker_basic": cnt[3]}, M)
-
-        halted = ~jnp.any(valid)
-        return (D2, total_w, n_edges), halted, stats
-
-    state0 = (ids, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
-    return bsp.run(jax.jit(step), state0, max_rounds)
+    state0 = (pg.local_ids().astype(jnp.int32), jnp.zeros((), jnp.float32),
+              jnp.zeros((), jnp.int32))
+    if devices is None:
+        st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
+                                  max_rounds)
+    else:
+        st, stats, n, _ = exec_mod.run_sharded(pg, make_step, state0,
+                                               max_rounds, devices=devices)
+    return st, stats, n

@@ -6,28 +6,45 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bsp
+from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
 from repro.graph.structs import PartitionedGraph
 
 
 def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
              tol: float = 1e-4, use_mirroring: bool = True,
-             record_history: bool = False, backend: str = "dense"):
+             record_history: bool = False, backend: str = "dense",
+             devices: int | None = None):
+    """Returns (pr, stats, n_supersteps[, history])."""
     n = pg.n
-    deg = jnp.maximum(pg.deg, 1)
 
-    def step(state, i):
-        pr = state
-        contrib = jnp.where(pg.vmask, pr / deg, 0.0)
-        active = pg.vmask & (pg.deg > 0)
-        inbox, stats = broadcast(pg, contrib, active, op="sum",
-                                 use_mirroring=use_mirroring,
-                                 backend=backend)
-        new_pr = jnp.where(pg.vmask, (1 - damping) / n + damping * inbox, 0.0)
-        delta = jnp.abs(new_pr - pr).max()
-        halted = delta < tol
-        return new_pr, halted, stats
+    def make_step(g):
+        deg = jnp.maximum(g.deg, 1)
+
+        def step(state, i):
+            pr = state
+            contrib = jnp.where(g.vmask, pr / deg, 0.0)
+            active = g.vmask & (g.deg > 0)
+            inbox, stats = broadcast(g, contrib, active, op="sum",
+                                     use_mirroring=use_mirroring,
+                                     backend=backend)
+            new_pr = jnp.where(g.vmask,
+                               (1 - damping) / n + damping * inbox, 0.0)
+            delta = g.gmax(jnp.abs(new_pr - pr).max())
+            halted = delta < tol
+            return new_pr, halted, stats
+        return step
 
     pr0 = jnp.where(pg.vmask, 1.0 / n, 0.0)
-    return bsp.run(jax.jit(step, static_argnums=()), pr0, n_iters,
-                   record_history=record_history)
+    if devices is None:
+        st, stats, nss, hist = bsp.run(jax.jit(make_step(pg)), pr0, n_iters,
+                                       record_history=record_history)
+    else:
+        st, stats, nss, hist = exec_mod.run_sharded(
+            pg, make_step, pr0, n_iters, record_history=record_history,
+            devices=devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
+                                                     use_mirroring))
+    if record_history:
+        return st, stats, nss, hist
+    return st, stats, nss

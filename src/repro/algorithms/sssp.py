@@ -7,26 +7,38 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bsp
+from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
 from repro.graph.structs import PartitionedGraph
 
 
 def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
-         use_mirroring: bool = True, backend: str = "dense"):
+         use_mirroring: bool = True, backend: str = "dense",
+         devices: int | None = None):
     """source: vertex id in the *relabeled* space (use pg.perm[orig])."""
+
+    def make_step(g):
+        def step(state, i):
+            dist, active = state
+            inbox, stats = broadcast(g, dist, active, op="min",
+                                     relay="add_w",
+                                     use_mirroring=use_mirroring,
+                                     backend=backend)
+            upd = g.vmask & (inbox < dist)
+            new = jnp.where(upd, inbox, dist)
+            return (new, upd), ~g.gany(upd), stats
+        return step
+
     ids = pg.local_ids()
-
-    def step(state, i):
-        dist, active = state
-        inbox, stats = broadcast(pg, dist, active, op="min", relay="add_w",
-                                 use_mirroring=use_mirroring,
-                                 backend=backend)
-        upd = pg.vmask & (inbox < dist)
-        new = jnp.where(upd, inbox, dist)
-        return (new, upd), ~jnp.any(upd), stats
-
     dist0 = jnp.where(ids == source, 0.0, jnp.inf)
     dist0 = jnp.where(pg.vmask, dist0, jnp.inf)
-    (dist, _), stats, n = bsp.run(jax.jit(step), (dist0, ids == source),
+    state0 = (dist0, ids == source)
+    if devices is None:
+        st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
                                   max_supersteps)
-    return dist, stats, n
+    else:
+        st, stats, n, _ = exec_mod.run_sharded(
+            pg, make_step, state0, max_supersteps, devices=devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
+                                                     use_mirroring))
+    return st[0], stats, n

@@ -7,6 +7,10 @@ which converges to the minimum id of each component in O(log n) rounds.
 Message accounting: every pointer read is a request-respond exchange
 (msgs_rr vs msgs_basic = the with/without-Ch_req comparison of Fig. 13);
 hooking writes go through the combined scatter channel.
+
+Labels are combined in int32 end to end (identity = iinfo sentinel, no
+float32 round-trip): float32 cannot represent ids >= 2^24, so the old cast
+merged distinct components on large graphs.
 """
 from __future__ import annotations
 
@@ -14,8 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bsp
-from repro.core.channels import (broadcast, push_combined, rr_gather,
-                                 scatter_combine)
+from repro.core import exec as exec_mod
+from repro.core.channels import broadcast, gather, scatter_state
+from repro.core.plan import identity_of
 from repro.graph.structs import PartitionedGraph
 
 
@@ -34,59 +39,70 @@ def _acc(stats, s, workers):
 
 
 def sv(pg: PartitionedGraph, max_supersteps: int = 64,
-       backend: str = "dense"):
+       backend: str = "dense", devices: int | None = None):
     """Returns (labels (M, n_loc) int32 = min id of each CC, stats, rounds)."""
-    ids = pg.local_ids().astype(jnp.int32)
-    M, n_loc = pg.M, pg.n_loc
-    widx = jnp.arange(M)[:, None]
+    imax = identity_of("min", jnp.int32)
 
-    def step(state, i):
-        D = state
-        stats: dict = {}
+    def make_step(g):
+        M = g.M
 
-        # D[D[u]]  — THE skewed pointer read (request-respond)
-        DD, s = rr_gather(D, D, pg.vmask, M, n_loc)
-        stats = _acc(stats, s, M)
-        parent_is_root = DD == D
+        def step(state, i):
+            D = state
+            stats: dict = {}
 
-        # cand[u] = min over neighbors v of D[v] (push D with min combiner)
-        cand_f, s = broadcast(pg, D.astype(jnp.float32), pg.vmask, op="min",
-                              use_mirroring=False, backend=backend)
-        stats = _acc(stats, s, M)
-        has_nbr = jnp.isfinite(cand_f)
-        cand = jnp.where(has_nbr, cand_f, 2 ** 30).astype(jnp.int32)
+            # D[D[u]]  — THE skewed pointer read (request-respond)
+            DD, s = gather(g, D, D, g.vmask)
+            stats = _acc(stats, s, M)
+            parent_is_root = DD == D
 
-        # (1) tree hooking: roots get hooked onto smaller neighbor-parents
-        hook_mask = pg.vmask & parent_is_root & has_nbr & (cand < D)
-        D1, s = scatter_combine(D, D, cand, hook_mask, "min", M, n_loc,
-                                backend=backend)
-        stats = _acc(stats, s, M)
+            # cand[u] = min over neighbors v of D[v] (push D, min combiner,
+            # in the id dtype — int32 identity, no float32 round-trip)
+            cand_i, s = broadcast(g, D, g.vmask, op="min",
+                                  use_mirroring=False, backend=backend)
+            stats = _acc(stats, s, M)
+            has_nbr = cand_i != imax
+            cand = jnp.where(has_nbr, cand_i, 2 ** 30)
 
-        # star detection on the hooked forest
-        DD1, s = rr_gather(D1, D1, pg.vmask, M, n_loc)
-        stats = _acc(stats, s, M)
-        star = (DD1 == D1).astype(jnp.int32)
-        deep = pg.vmask & (DD1 != D1)
-        star, s = scatter_combine(star, DD1, jnp.zeros_like(star), deep,
-                                  "min", M, n_loc, backend=backend)
-        stats = _acc(stats, s, M)
-        star_of_parent, s = rr_gather(star, D1, pg.vmask, M, n_loc)
-        stats = _acc(stats, s, M)
-        in_star = pg.vmask & (star_of_parent > 0)
+            # (1) tree hooking: roots get hooked onto smaller neighbor-parents
+            hook_mask = g.vmask & parent_is_root & has_nbr & (cand < D)
+            D1, s = scatter_state(g, D, D, cand, hook_mask, "min",
+                                  backend=backend)
+            stats = _acc(stats, s, M)
 
-        # (2) star hooking
-        hook2 = in_star & has_nbr & (cand < D1)
-        D2, s = scatter_combine(D1, D1, cand, hook2, "min", M, n_loc,
-                                backend=backend)
-        stats = _acc(stats, s, M)
+            # star detection on the hooked forest
+            DD1, s = gather(g, D1, D1, g.vmask)
+            stats = _acc(stats, s, M)
+            star = (DD1 == D1).astype(jnp.int32)
+            deep = g.vmask & (DD1 != D1)
+            star, s = scatter_state(g, star, DD1, jnp.zeros_like(star),
+                                    deep, "min", backend=backend)
+            stats = _acc(stats, s, M)
+            star_of_parent, s = gather(g, star, D1, g.vmask)
+            stats = _acc(stats, s, M)
+            in_star = g.vmask & (star_of_parent > 0)
 
-        # (3) shortcutting: D[u] = D[D[u]]
-        DD2, s = rr_gather(D2, D2, pg.vmask, M, n_loc)
-        stats = _acc(stats, s, M)
-        D3 = jnp.where(pg.vmask, jnp.minimum(D2, DD2), D)
+            # (2) star hooking
+            hook2 = in_star & has_nbr & (cand < D1)
+            D2, s = scatter_state(g, D1, D1, cand, hook2, "min",
+                                  backend=backend)
+            stats = _acc(stats, s, M)
 
-        halted = jnp.all(D3 == D) & jnp.all(~hook_mask) & jnp.all(~hook2)
-        return D3, halted, stats
+            # (3) shortcutting: D[u] = D[D[u]]
+            DD2, s = gather(g, D2, D2, g.vmask)
+            stats = _acc(stats, s, M)
+            D3 = jnp.where(g.vmask, jnp.minimum(D2, DD2), D)
 
-    D0 = jnp.where(pg.vmask, ids, ids)
-    return bsp.run(jax.jit(step), D0, max_supersteps)
+            halted = (g.gall(D3 == D) & ~g.gany(hook_mask)
+                      & ~g.gany(hook2))
+            return D3, halted, stats
+        return step
+
+    D0 = pg.local_ids().astype(jnp.int32)
+    if devices is None:
+        D, stats, n, _ = bsp.run(jax.jit(make_step(pg)), D0, max_supersteps)
+    else:
+        D, stats, n, _ = exec_mod.run_sharded(
+            pg, make_step, D0, max_supersteps, devices=devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(
+                backend, use_mirroring=False))
+    return D, stats, n

@@ -8,20 +8,30 @@ where ``state`` is any pytree of (M, ...) arrays, ``halted`` a scalar bool
 stats totals and an optional per-superstep history, and supports
 checkpoint/restore of the loop carry (fault tolerance: the whole BSP state
 is a pytree).
+
+``run`` also executes unchanged *inside* a ``shard_map`` region (the
+sharded executor in ``core/exec.py``): the step then computes ``halted``
+and the stats with cross-device collectives so the carried halt flag and
+accumulated totals are replicated across the mesh.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 def run(step: Callable, state, max_supersteps: int,
-        record_history: bool = False) -> Tuple[object, Dict, jnp.ndarray]:
-    """Run ``step`` until halt or max_supersteps.  Returns
-    (final_state, stats_totals, n_supersteps [, history])."""
+        record_history: bool = False
+        ) -> Tuple[object, Dict, jnp.ndarray, Optional[Dict]]:
+    """Run ``step`` until halt or max_supersteps.
+
+    Always returns the 4-tuple ``(final_state, stats_totals, n_supersteps,
+    history)`` — ``history`` is the per-superstep stats pytree (leading
+    ``max_supersteps`` axis) when ``record_history=True`` and ``None``
+    otherwise, so callers never have to special-case the arity.
+    """
     _, _, stats0 = jax.eval_shape(step, state, jnp.zeros((), jnp.int32))
     zero_stats = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), stats0)
     history0 = None
@@ -44,9 +54,7 @@ def run(step: Callable, state, max_supersteps: int,
     carry = (state, jnp.zeros((), bool), jnp.zeros((), jnp.int32),
              zero_stats, history0)
     st, _, n, acc, hist = jax.lax.while_loop(cond, body, carry)
-    if record_history:
-        return st, acc, n, hist
-    return st, acc, n
+    return st, acc, n, hist
 
 
 def aggregate_or(x: jnp.ndarray) -> jnp.ndarray:

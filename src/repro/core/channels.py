@@ -28,6 +28,14 @@ from repro.graph.structs import PartitionedGraph
 
 BACKENDS = ("dense", "pallas")
 
+
+def _sharded(pg) -> bool:
+    """True when ``pg`` is the device-local ShardedGraph inside the
+    sharded executor's ``shard_map`` body (core/exec.py): the pg-level
+    channels then route to the collective implementations."""
+    return getattr(pg, "axis", None) is not None
+
+
 def _reduce_op(op: str, x: jnp.ndarray, axis: int) -> jnp.ndarray:
     return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op](x, axis=axis)
 
@@ -215,7 +223,13 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     plans (destination-blocked segment_combine) instead of dense scatters;
     inboxes and message stats are unchanged.  ``pg.layout`` picks the edge
     representation (padded rows vs flat csr) — results and stats are
-    layout-invariant."""
+    layout-invariant.  Inside the sharded executor ``pg`` is the
+    device-local ShardedGraph and the same call lowers to real collectives
+    (all_to_all / op-matched all-reduce) with identical stats."""
+    if _sharded(pg):
+        from repro.core import exec as exec_mod
+        return exec_mod.broadcast_sharded(pg, vals, active, op, relay,
+                                          use_mirroring, backend)
     esrc = pg.eg_src if use_mirroring else pg.all_src
     edst = pg.eg_dst if use_mirroring else pg.all_dst
     emask = pg.eg_mask if use_mirroring else pg.all_mask
@@ -424,3 +438,65 @@ def scatter_combine_flat(vals: jnp.ndarray, targets: jnp.ndarray,
                                       M, n_loc, backend=backend)
     fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
     return fn(vals, inbox), stats
+
+
+# ---------------------------------------------------------------------------
+# pg-level wrappers: layout- and sharding-dispatching channel entry points
+# ---------------------------------------------------------------------------
+
+def gather(pg, vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
+           dedup: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Distributed pointer read ``vals[target]`` for state-shaped target
+    rows (S-V / MSF pointer chasing).  Dispatches to the sharded Ch_req
+    under the executor."""
+    if _sharded(pg):
+        from repro.core import exec as exec_mod
+        return exec_mod.gather_sharded(pg, vals, targets, tmask, dedup)
+    return rr_gather(vals, targets, tmask, pg.M, pg.n_loc, dedup)
+
+
+def gather_edges(pg, vals: jnp.ndarray, targets: jnp.ndarray,
+                 tmask: jnp.ndarray, dedup: bool = True
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """Distributed gather for edge-shaped targets aligned with the ``all``
+    adjacency (attribute broadcast, MSF neighbor reads): padded rows go
+    through ``rr_gather``, flat csr through ``rr_gather_flat`` with the
+    per-edge source worker derived from ``pg.all_src``."""
+    if _sharded(pg):
+        from repro.core import exec as exec_mod
+        return exec_mod.gather_edges_sharded(pg, vals, targets, tmask,
+                                             dedup)
+    if pg.layout == "csr":
+        return rr_gather_flat(vals, targets, pg.all_src // pg.n_loc, tmask,
+                              pg.M, pg.n_loc, dedup)
+    return rr_gather(vals, targets, tmask, pg.M, pg.n_loc, dedup)
+
+
+def scatter_state(pg, base: jnp.ndarray, targets: jnp.ndarray,
+                  upd: jnp.ndarray, mask: jnp.ndarray, op: str,
+                  backend: str = "dense") -> Tuple[jnp.ndarray, Dict]:
+    """Distributed scatter-``op`` for state-shaped runtime targets (S-V
+    hooking writes)."""
+    if _sharded(pg):
+        from repro.core import exec as exec_mod
+        return exec_mod.scatter_state_sharded(pg, base, targets, upd, mask,
+                                              op, backend)
+    return scatter_combine(base, targets, upd, mask, op, pg.M, pg.n_loc,
+                           backend=backend)
+
+
+def scatter_edges(pg, base: jnp.ndarray, targets: jnp.ndarray,
+                  upd: jnp.ndarray, mask: jnp.ndarray, op: str,
+                  backend: str = "dense") -> Tuple[jnp.ndarray, Dict]:
+    """Distributed scatter-``op`` for edge-shaped runtime values aligned
+    with the ``all`` adjacency (MSF min-edge election)."""
+    if _sharded(pg):
+        from repro.core import exec as exec_mod
+        return exec_mod.scatter_edges_sharded(pg, base, targets, upd, mask,
+                                              op, backend)
+    if pg.layout == "csr":
+        return scatter_combine_flat(base, targets, upd, mask,
+                                    pg.all_src // pg.n_loc, op,
+                                    pg.M, pg.n_loc, backend=backend)
+    return scatter_combine(base, targets, upd, mask, op, pg.M, pg.n_loc,
+                           backend=backend)

@@ -1,0 +1,838 @@
+"""Sharded superstep executor: the worker axis as a real device mesh.
+
+On one device the engine simulates the paper's M workers as a batch axis;
+this module makes the simulation *distributed*: ``jax.jit`` + ``shard_map``
+over a 1-D device mesh (axis ``"w"``, built via ``launch/mesh.make_mesh``)
+shards the worker axis across D devices (M % D == 0, m = M/D workers per
+device), and the channel joins lower to real collectives:
+
+* Ch_msg, dense backend — each device builds only its m source workers'
+  partial buffers (m, M, n_loc); the worker-axis transpose that the
+  single-device path writes as ``swapaxes(partial3, 0, 1)`` becomes a real
+  ``jax.lax.all_to_all`` over the mesh axis, after which every device
+  reduces the full source axis for its local destinations in the same
+  order as the reference path.
+* Ch_msg, pallas/plan backend — the destination-blocked rows are packed
+  *per device* at plan-build time (each device's plan covers its own
+  workers' outgoing edges, row/segment counts padded to the device
+  maximum); each device runs ``segment_combine_blocks`` on its rows and
+  the per-device (n_blocks, nb) partials meet in a psum-style exchange
+  (``pmin``/``pmax``/``psum`` matching the combine op) before each device
+  slices out its destination blocks.
+* Ch_mir — the mirror values are assembled with the same op-matched
+  all-reduce (each device contributes the mirrored vertices it owns, the
+  identity elsewhere: the all-gather payload of the paper), and the
+  fan-out runs on destination-sharded mirror edges.
+* Ch_req — the gather transports values with an ``all_gather`` of the
+  (m, n_loc) value shards; the request/response *accounting* (Theorem 3
+  dedup, per-worker charges on both requester and owner) is computed
+  per device and psum-merged, identical to the reference counts.
+* runtime-target scatters (S-V/MSF hooking) — per-device sorted segmented
+  combine into a global (n_pad,) buffer, op-matched all-reduce, local
+  slice.
+
+Parity contract (pinned by tests/test_conformance.py's sharded axis and
+``launch/shard_check.py``): for every algorithm x backend x layout,
+``devices=D`` produces final state bitwise identical to the single-device
+path for integer / min / max combines (sum combines like PageRank agree to
+float round-off of the exchange reduction) and *every* ``msgs_*`` /
+``per_worker_*`` statistic is integer-exact.
+
+The flat CSR edge arrays are consumed per shard: each device receives the
+contiguous slice of edges owned by its workers (edges are stored sorted by
+owner), padded to the per-device maximum — O(E/D + M + n/D) per device,
+never the padded (M, E_hot) wall.  Hot-worker splitting in a future PR is
+"re-shard the csr offsets": only the device boundaries move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bsp
+from repro.core import plan as planlib
+from repro.core.channels import _dedup_row, _reduce_op
+from repro.core.plan import identity_of, scatter_op
+from repro.launch import mesh as meshlib
+
+AXIS = "w"
+
+_MERGE = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}
+
+
+def _preduce(op: str, x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Cross-device all-reduce matching the combine op."""
+    return {"min": jax.lax.pmin, "max": jax.lax.pmax,
+            "sum": jax.lax.psum}[op](x, axis)
+
+
+def broadcast_plan_kinds(backend: str, use_mirroring: bool = True) -> tuple:
+    """The message plans the executor must pre-build (per device) for one
+    ``channels.broadcast`` configuration — channel-layer knowledge kept in
+    one place so the algorithms can't drift."""
+    if backend != "pallas":
+        return ()
+    return ("eg", "mir") if use_mirroring else ("all",)
+
+
+def graph_mesh(devices: int):
+    """1-D worker mesh over the first ``devices`` devices."""
+    if devices > len(jax.devices()):
+        raise RuntimeError(
+            f"requested {devices} devices but only {len(jax.devices())} "
+            f"are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices} before "
+            f"importing jax (graph_run --devices does this for you)")
+    return meshlib.make_mesh((devices,), (AXIS,))
+
+
+# ---------------------------------------------------------------------------
+# per-device plan stacking (pallas backend)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TracedPlan:
+    """Device-local view of one per-device edge plan inside ``shard_map``.
+
+    Row/segment counts are padded to the maximum across devices; dummy rows
+    have ``row_valid`` all-False (they combine to identity and scatter into
+    segment 0 harmlessly) and dummy segments stay at the identity, so they
+    never contribute to inboxes or message counts."""
+    nb: int
+    eb: int
+    B_per_w: int
+    n_blocks: int
+    n_rows: int                # padded maximum
+    n_segs: int                # padded maximum
+    row_gather: jnp.ndarray    # (n_rows, eb) -> local flat edge index
+    row_valid: jnp.ndarray     # (n_rows, eb)
+    row_local: jnp.ndarray     # (n_rows, eb)
+    row_seg: jnp.ndarray       # (n_rows,)
+    seg_blk: jnp.ndarray       # (n_segs,) global block id
+    seg_worker: jnp.ndarray    # (n_segs,) global source worker
+
+
+def _device_plans(pg, D: int, kind: str, nb: int):
+    """One EdgePlan per device covering that device's workers' edges, with
+    *global* source-worker ids in ``seg_worker`` (message accounting) and
+    *global* destination blocks (the exchange address space)."""
+    M, n_loc = pg.M, pg.n_loc
+    m = M // D
+
+    def build(d, eb):
+        if pg.layout == "csr":
+            if kind in ("eg", "all"):
+                src = np.asarray(pg.eg_src if kind == "eg" else pg.all_src)
+                dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)
+                off = pg.eg_off if kind == "eg" else pg.all_off
+                s, e = int(off[d * m]), int(off[(d + 1) * m])
+                return planlib.build_edge_plan_flat(
+                    src[s:e] // n_loc, dst[s:e] // n_loc, dst[s:e] % n_loc,
+                    M, M, n_loc, nb, eb)
+            edst = np.asarray(pg.mir_edst)
+            s, e = int(pg.mir_eoff[d * m]), int(pg.mir_eoff[(d + 1) * m])
+            return planlib.build_edge_plan_flat(
+                edst[s:e] // n_loc, edst[s:e] // n_loc, edst[s:e] % n_loc,
+                M, M, n_loc, nb, eb)
+        sl = slice(d * m, (d + 1) * m)
+        if kind in ("eg", "all"):
+            dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)[sl]
+            mask = np.asarray(pg.eg_mask if kind == "eg"
+                              else pg.all_mask)[sl]
+            p = planlib.build_edge_plan(dst // n_loc, dst % n_loc, mask,
+                                        M, n_loc, nb, eb)
+        else:
+            edst = np.asarray(pg.mir_edst)[sl]
+            own = np.broadcast_to(np.arange(d * m, (d + 1) * m)[:, None],
+                                  edst.shape)
+            p = planlib.build_edge_plan(own, edst,
+                                        np.asarray(pg.mir_emask)[sl],
+                                        M, n_loc, nb, eb)
+        # build_edge_plan derives source workers from the (local) row index
+        p.seg_worker = (p.seg_worker + d * m).astype(np.int32)
+        return p
+
+    plans = [build(d, None) for d in range(D)]
+    eb = max(p.eb for p in plans)
+    plans = [p if p.eb == eb else build(d, eb)
+             for d, p in enumerate(plans)]
+    return plans
+
+
+def _stack_plans(plans):
+    """Pad per-device plans to common row/segment counts and stack with a
+    leading device axis.  Returns (static_meta, arrays_dict)."""
+    D = len(plans)
+    nb, eb = plans[0].nb, plans[0].eb
+    R = max(1, max(p.n_rows for p in plans))
+    S = max(1, max(p.n_segs for p in plans))
+    a = {
+        "row_gather": np.zeros((D, R, eb), np.int32),
+        "row_valid": np.zeros((D, R, eb), bool),
+        "row_local": np.full((D, R, eb), -1, np.int32),
+        "row_seg": np.zeros((D, R), np.int32),
+        "seg_blk": np.zeros((D, S), np.int32),
+        "seg_worker": np.zeros((D, S), np.int32),
+    }
+    for d, p in enumerate(plans):
+        a["row_gather"][d, :p.n_rows] = p.row_gather
+        a["row_valid"][d, :p.n_rows] = p.row_valid
+        a["row_local"][d, :p.n_rows] = p.row_local
+        a["row_seg"][d, :p.n_rows] = p.row_seg
+        a["seg_blk"][d, :p.n_segs] = p.seg_blk
+        a["seg_worker"][d, :p.n_segs] = p.seg_worker
+    meta = {"nb": nb, "eb": eb, "B_per_w": plans[0].B_per_w,
+            "n_blocks": plans[0].n_blocks, "n_rows": R, "n_segs": S}
+    return meta, a
+
+
+# ---------------------------------------------------------------------------
+# host-side graph sharding
+# ---------------------------------------------------------------------------
+
+def csr_device_bounds(off: np.ndarray, M: int, D: int) -> np.ndarray:
+    """(D+1,) edge offsets at device boundaries of a (M+1,) worker csr."""
+    m = M // D
+    return np.asarray(off)[np.arange(0, M + 1, m)]
+
+
+def _pad_device_slices(arr: np.ndarray, bounds: np.ndarray, pad_row):
+    """Slice a flat (E,) array at ``bounds`` into (D, cap) with per-device
+    padding values ``pad_row[d]``; also returns the validity mask."""
+    D = len(bounds) - 1
+    counts = np.diff(bounds)
+    cap = max(1, int(counts.max()))
+    out = np.empty((D, cap), arr.dtype)
+    valid = np.zeros((D, cap), bool)
+    for d in range(D):
+        c = int(counts[d])
+        out[d, :c] = arr[bounds[d]:bounds[d + 1]]
+        out[d, c:] = pad_row[d]
+        valid[d, :c] = True
+    return out, valid
+
+
+def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
+    """Build the device-stacked array pytree + matching PartitionSpecs."""
+    M, n_loc = pg.M, pg.n_loc
+    m = M // D
+    arrays: Dict = {"vmask": pg.vmask, "deg": pg.deg,
+                    "mir_ids": pg.mir_ids, "mir_nworkers": pg.mir_nworkers}
+    specs: Dict = {"vmask": P(AXIS), "deg": P(AXIS),
+                   "mir_ids": P(), "mir_nworkers": P()}
+    meta = {"M": M, "n_loc": n_loc, "D": D, "m_loc": m, "n": pg.n,
+            "tau": pg.tau, "layout": pg.layout, "plan_meta": {}}
+
+    if pg.layout == "csr":
+        base = np.arange(D) * m * n_loc        # a safe in-range pad id
+        for name, off_name in (("eg", "eg_off"), ("all", "all_off")):
+            off = csr_device_bounds(getattr(pg, off_name), M, D)
+            src, vs = _pad_device_slices(
+                np.asarray(getattr(pg, f"{name}_src")), off, base)
+            dst, _ = _pad_device_slices(
+                np.asarray(getattr(pg, f"{name}_dst")), off, np.zeros(D))
+            w, _ = _pad_device_slices(
+                np.asarray(getattr(pg, f"{name}_w")), off, np.zeros(D))
+            arrays[f"{name}_src"] = src
+            arrays[f"{name}_dst"] = dst
+            arrays[f"{name}_w"] = w
+            arrays[f"{name}_mask"] = vs
+            specs.update({f"{name}_src": P(AXIS), f"{name}_dst": P(AXIS),
+                          f"{name}_w": P(AXIS), f"{name}_mask": P(AXIS)})
+        off = csr_device_bounds(pg.mir_eoff, M, D)
+        esrc, vs = _pad_device_slices(np.asarray(pg.mir_esrc), off,
+                                      np.zeros(D))
+        edst, _ = _pad_device_slices(np.asarray(pg.mir_edst), off, base)
+        ew, _ = _pad_device_slices(np.asarray(pg.mir_ew), off, np.zeros(D))
+        arrays.update(mir_esrc=esrc, mir_edst=edst, mir_ew=ew, mir_emask=vs)
+        specs.update(mir_esrc=P(AXIS), mir_edst=P(AXIS), mir_ew=P(AXIS),
+                     mir_emask=P(AXIS))
+    else:
+        for name in ("eg_src", "eg_dst", "eg_mask", "eg_w",
+                     "all_src", "all_dst", "all_mask", "all_w",
+                     "mir_esrc", "mir_edst", "mir_emask", "mir_ew"):
+            arrays[name] = getattr(pg, name)
+            specs[name] = P(AXIS)
+
+    for kind in plan_kinds:
+        pmeta, parrs = _stack_plans(_device_plans(pg, D, kind,
+                                                  planlib.default_nb()))
+        meta["plan_meta"][kind] = pmeta
+        for k, v in parrs.items():
+            arrays[f"plan_{kind}_{k}"] = v
+            specs[f"plan_{kind}_{k}"] = P(AXIS)
+    return meta, arrays, specs
+
+
+# ---------------------------------------------------------------------------
+# the inside-shard_map graph view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """Device-local twin of PartitionedGraph inside the ``shard_map`` body.
+
+    Duck-types the fields algorithms and channels read — ``M``/``n_loc``
+    stay *global* (owner arithmetic, per-worker stats), edge/vertex arrays
+    are the local shard, and the ``g*`` reductions become collectives.
+    ``channels.broadcast`` & friends detect the ``axis`` attribute and
+    route to the sharded implementations below."""
+    M: int
+    n_loc: int
+    m_loc: int
+    D: int
+    n: int
+    tau: int
+    layout: str
+    axis: str
+    w0: jnp.ndarray            # global index of this device's first worker
+    vmask: jnp.ndarray
+    deg: jnp.ndarray
+    eg_src: jnp.ndarray
+    eg_dst: jnp.ndarray
+    eg_mask: jnp.ndarray
+    eg_w: jnp.ndarray
+    all_src: jnp.ndarray
+    all_dst: jnp.ndarray
+    all_mask: jnp.ndarray
+    all_w: jnp.ndarray
+    mir_ids: jnp.ndarray
+    mir_nworkers: jnp.ndarray
+    mir_esrc: jnp.ndarray
+    mir_edst: jnp.ndarray
+    mir_emask: jnp.ndarray
+    mir_ew: jnp.ndarray
+    plans: Dict[str, TracedPlan] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_pad(self) -> int:
+        return self.M * self.n_loc
+
+    def local_ids(self) -> jnp.ndarray:
+        return ((self.w0 + jnp.arange(self.m_loc))[:, None] * self.n_loc
+                + jnp.arange(self.n_loc)[None, :])
+
+    def worker_ids(self) -> jnp.ndarray:
+        """(m_loc,) global worker indices of the local rows."""
+        return self.w0 + jnp.arange(self.m_loc)
+
+    def gany(self, x):
+        return jax.lax.psum(jnp.any(x).astype(jnp.int32), self.axis) > 0
+
+    def gall(self, x):
+        return jax.lax.psum((~jnp.all(x)).astype(jnp.int32), self.axis) == 0
+
+    def gsum(self, x):
+        return jax.lax.psum(jnp.sum(x), self.axis)
+
+    def gmax(self, x):
+        return jax.lax.pmax(jnp.max(x), self.axis)
+
+    def edge_src_values(self, state, src):
+        if self.layout == "csr":
+            return state.reshape(-1)[src - self.w0 * self.n_loc]
+        return state[jnp.arange(self.m_loc)[:, None], src]
+
+
+def _make_sg(meta, a) -> ShardedGraph:
+    layout = meta["layout"]
+    m = meta["m_loc"]
+    w0 = jax.lax.axis_index(AXIS).astype(jnp.int32) * m
+
+    def loc(name):
+        # csr edge leaves arrive as (1, cap) device rows; padded rows as
+        # (m, ...) shards
+        x = a[name]
+        if layout == "csr" and name.split("_")[0] in ("eg", "all", "mir") \
+                and name not in ("mir_ids", "mir_nworkers"):
+            return x[0]
+        return x
+
+    plans = {}
+    for kind, pm in meta["plan_meta"].items():
+        plans[kind] = TracedPlan(
+            nb=pm["nb"], eb=pm["eb"], B_per_w=pm["B_per_w"],
+            n_blocks=pm["n_blocks"], n_rows=pm["n_rows"],
+            n_segs=pm["n_segs"],
+            row_gather=a[f"plan_{kind}_row_gather"][0],
+            row_valid=a[f"plan_{kind}_row_valid"][0],
+            row_local=a[f"plan_{kind}_row_local"][0],
+            row_seg=a[f"plan_{kind}_row_seg"][0],
+            seg_blk=a[f"plan_{kind}_seg_blk"][0],
+            seg_worker=a[f"plan_{kind}_seg_worker"][0])
+    return ShardedGraph(
+        M=meta["M"], n_loc=meta["n_loc"], m_loc=m, D=meta["D"],
+        n=meta["n"], tau=meta["tau"], layout=layout, axis=AXIS, w0=w0,
+        vmask=a["vmask"], deg=a["deg"],
+        eg_src=loc("eg_src"), eg_dst=loc("eg_dst"),
+        eg_mask=loc("eg_mask"), eg_w=loc("eg_w"),
+        all_src=loc("all_src"), all_dst=loc("all_dst"),
+        all_mask=loc("all_mask"), all_w=loc("all_w"),
+        mir_ids=a["mir_ids"], mir_nworkers=a["mir_nworkers"],
+        mir_esrc=loc("mir_esrc"), mir_edst=loc("mir_edst"),
+        mir_emask=loc("mir_emask"), mir_ew=loc("mir_ew"),
+        plans=plans)
+
+
+# ---------------------------------------------------------------------------
+# sharded channel implementations
+# ---------------------------------------------------------------------------
+
+def _place_rows(sg: ShardedGraph, local_counts: jnp.ndarray) -> jnp.ndarray:
+    """(m_loc,) per-local-worker counts -> replicated (M,) via psum."""
+    full = jnp.zeros((sg.M,), local_counts.dtype)
+    full = jax.lax.dynamic_update_slice(full, local_counts, (sg.w0,))
+    return jax.lax.psum(full, sg.axis)
+
+
+def _scatter_workers(sg: ShardedGraph, workers, flags) -> jnp.ndarray:
+    """Count ``flags`` at global ``workers`` -> replicated (M,)."""
+    pw = jnp.zeros((sg.M,), jnp.int32).at[
+        jnp.where(flags, workers, 0)].add(flags.astype(jnp.int32))
+    return jax.lax.psum(pw, sg.axis)
+
+
+def _local_slice(sg: ShardedGraph, buf: jnp.ndarray) -> jnp.ndarray:
+    """(n_pad,) global buffer -> this device's (m_loc, n_loc) rows."""
+    loc = jax.lax.dynamic_slice(buf, (sg.w0 * sg.n_loc,),
+                                (sg.m_loc * sg.n_loc,))
+    return loc.reshape(sg.m_loc, sg.n_loc)
+
+
+def _exchange_dense(sg: ShardedGraph, partial3: jnp.ndarray, op: str
+                    ) -> jnp.ndarray:
+    """(m_src, M, n_loc) local partials -> (m_dst, n_loc) inbox.
+
+    The worker-axis transpose of the single-device path IS the all_to_all:
+    after the exchange each device holds (M_src, m_dst, n_loc) ordered by
+    global source worker, and reduces the full source axis exactly like
+    the reference ``swapaxes`` + reduce."""
+    m, D = sg.m_loc, sg.D
+    x = partial3.reshape(m, D, m, sg.n_loc)
+    y = jax.lax.all_to_all(x, sg.axis, split_axis=1, concat_axis=1)
+    recv = jnp.transpose(y, (1, 0, 2, 3)).reshape(D * m, m, sg.n_loc)
+    return _reduce_op(op, recv, axis=0)
+
+
+def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
+                               flat_vals: jnp.ndarray, op: str,
+                               count_cross: bool = True,
+                               exchange: bool = True):
+    """Per-device destination-blocked combine + psum-style exchange."""
+    ident = identity_of(op, flat_vals.dtype)
+    packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
+    row_out = planlib._combine_rows(packed, plan.row_local, op, plan.nb)
+    seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
+    seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
+    glob = jnp.full((plan.n_blocks, plan.nb), ident, flat_vals.dtype)
+    glob = scatter_op(op, glob, plan.seg_blk, seg_out)
+    if exchange:
+        glob = _preduce(op, glob, sg.axis)
+    rows = jax.lax.dynamic_slice_in_dim(glob, sg.w0 * plan.B_per_w,
+                                        sg.m_loc * plan.B_per_w, 0)
+    inbox = rows.reshape(sg.m_loc, plan.B_per_w * plan.nb)[:, :sg.n_loc]
+
+    stats = None
+    if count_cross:
+        owner = plan.seg_blk // plan.B_per_w
+        cross = (seg_out != ident) & (owner != plan.seg_worker)[:, None]
+        msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
+        per_worker = jnp.zeros((sg.M,), jnp.int32).at[plan.seg_worker].add(
+            cross.sum(axis=1).astype(jnp.int32))
+        stats = (msgs, jax.lax.psum(per_worker, sg.axis))
+    return inbox, stats
+
+
+def _combine_sorted_rows_sharded(sg: ShardedGraph, targets, values, mask,
+                                 op: str):
+    """Sharded twin of plan.combine_sorted: the shared segment core
+    (``plan.sorted_segments``) runs on the local (m_loc, K) rows, then the
+    global (n_pad,) buffer meets in an op-matched all-reduce and the local
+    slice is taken; source rows are rebased by ``w0`` for the accounting."""
+    n_pad = sg.n_pad
+    real, seg_t, seg_val, seg_row, ident = planlib.sorted_segments(
+        targets, values, mask, op, n_pad)
+
+    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
+                     jnp.where(real, seg_val, ident))
+    inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+
+    cross = real & (seg_val != ident) & (seg_t // sg.n_loc
+                                         != seg_row + sg.w0)
+    msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
+    per_worker = _scatter_workers(sg, seg_row + sg.w0, cross)
+    return inbox, (msgs, per_worker)
+
+
+def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
+                                 worker, op: str):
+    """Flat-csr twin: ``plan.sorted_segments_flat`` on the local (E_dev,)
+    edges (source workers already global), all-reduce exchange, local
+    slice."""
+    n_pad = sg.n_pad
+    real, seg_t, seg_val, seg_w, ident = planlib.sorted_segments_flat(
+        targets, values, mask, worker, op, n_pad)
+
+    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
+                     jnp.where(real, seg_val, ident))
+    inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+
+    cross = real & (seg_val != ident) & (seg_t // sg.n_loc != seg_w)
+    msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
+    per_worker = _scatter_workers(sg, seg_w, cross)
+    return inbox, (msgs, per_worker)
+
+
+def push_combined_sharded(sg: ShardedGraph, targets, values, mask, op: str,
+                          backend: str = "dense",
+                          plan: Optional[TracedPlan] = None):
+    """Sharded Ch_msg, padded rows: local (m_loc, K) edges."""
+    ident = identity_of(op, values.dtype)
+    gw = sg.worker_ids()[:, None]
+    raw_cross = mask & ((targets // sg.n_loc) != gw)
+    base = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
+            "per_worker_basic": _place_rows(sg, raw_cross.sum(axis=1))}
+
+    if backend == "pallas":
+        if plan is not None:
+            masked = jnp.where(mask, values, ident)
+            inbox, (msgs, pw) = _combine_with_plan_sharded(
+                sg, plan, masked.reshape(-1), op)
+        else:
+            inbox, (msgs, pw) = _combine_sorted_rows_sharded(
+                sg, targets, values, mask, op)
+        stats = {"msgs_combined": msgs, "per_worker_combined": pw}
+        stats.update(base)
+        return inbox, stats
+
+    n_pad = sg.n_pad
+
+    def one(tgt, val, msk):
+        v = jnp.where(msk, val, ident)
+        t = jnp.where(msk, tgt, 0)
+        buf = jnp.full((n_pad,), ident, values.dtype)
+        return scatter_op(op, buf, t, v)
+
+    partial = jax.vmap(one)(targets, values, mask)      # (m_loc, n_pad)
+    partial3 = partial.reshape(sg.m_loc, sg.M, sg.n_loc)
+    sent = partial3 != ident
+    cross = sent & (jnp.arange(sg.M)[None, :, None] != gw[:, :, None])
+    stats = {
+        "msgs_combined": jax.lax.psum(cross.sum(), sg.axis),
+        "per_worker_combined": _place_rows(sg, cross.sum(axis=(1, 2))),
+    }
+    stats.update(base)
+    return _exchange_dense(sg, partial3, op), stats
+
+
+def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
+                               worker, op: str, backend: str = "dense",
+                               plan: Optional[TracedPlan] = None):
+    """Sharded Ch_msg, csr layout: local flat (E_dev,) edges with global
+    per-edge source workers."""
+    ident = identity_of(op, values.dtype)
+    raw_cross = mask & ((targets // sg.n_loc) != worker)
+    base = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
+            "per_worker_basic": _scatter_workers(sg, worker, raw_cross)}
+
+    if backend == "pallas":
+        if plan is not None:
+            masked = jnp.where(mask, values, ident)
+            inbox, (msgs, pw) = _combine_with_plan_sharded(
+                sg, plan, masked, op)
+        else:
+            inbox, (msgs, pw) = _combine_sorted_flat_sharded(
+                sg, targets, values, mask, worker, op)
+        stats = {"msgs_combined": msgs, "per_worker_combined": pw}
+        stats.update(base)
+        return inbox, stats
+
+    n_pad = sg.n_pad
+    idx = (worker - sg.w0) * n_pad + jnp.where(mask, targets, 0)
+    v = jnp.where(mask, values, ident)
+    partial = jnp.full((sg.m_loc * n_pad,), ident, values.dtype)
+    partial3 = scatter_op(op, partial, idx, v).reshape(sg.m_loc, sg.M,
+                                                       sg.n_loc)
+    sent = partial3 != ident
+    gw = sg.worker_ids()[:, None]
+    cross3 = sent & (jnp.arange(sg.M)[None, :, None] != gw[:, :, None])
+    stats = {
+        "msgs_combined": jax.lax.psum(cross3.sum(), sg.axis),
+        "per_worker_combined": _place_rows(sg, cross3.sum(axis=(1, 2))),
+    }
+    stats.update(base)
+    return _exchange_dense(sg, partial3, op), stats
+
+
+def push_mirror_sharded(sg: ShardedGraph, vals, active, op: str,
+                        relay: str = "none", backend: str = "dense"):
+    """Sharded Ch_mir: op-matched all-reduce assembles the mirror values
+    (each device contributes the mirrored vertices it owns), then the
+    fan-out runs on the destination-sharded mirror edges."""
+    ident = identity_of(op, vals.dtype)
+    n_pad = sg.n_pad
+    m_slots = sg.m_loc * sg.n_loc
+    safe_g = jnp.clip(sg.mir_ids, 0, n_pad - 1)
+    valid = sg.mir_ids < n_pad
+    slot = safe_g - sg.w0 * sg.n_loc
+    owned = (slot >= 0) & (slot < m_slots)
+    sl = jnp.clip(slot, 0, m_slots - 1)
+    flat_vals = vals.reshape(-1)
+    flat_act = active.reshape(-1)
+    contrib = jnp.where(valid & owned & flat_act[sl], flat_vals[sl], ident)
+    mir_vals = _preduce(op, contrib, sg.axis)      # replicated (n_mir,)
+
+    raw = mir_vals[sg.mir_esrc]
+    ev = raw + sg.mir_ew if relay == "add_w" else raw
+    ev = jnp.where(sg.mir_emask & (raw != ident), ev, ident)
+    if backend == "pallas":
+        inbox, _ = _combine_with_plan_sharded(
+            sg, sg.plans["mir"], ev.reshape(-1), op,
+            count_cross=False, exchange=False)
+    elif sg.layout == "csr":
+        buf = jnp.full((m_slots,), ident, vals.dtype)
+        inbox = scatter_op(op, buf, sg.mir_edst - sg.w0 * sg.n_loc,
+                           ev).reshape(sg.m_loc, sg.n_loc)
+    else:
+        def fan_out(edst, emask, ev_row):
+            buf = jnp.full((sg.n_loc,), ident, vals.dtype)
+            return scatter_op(op, buf, jnp.where(emask, edst, 0), ev_row)
+
+        inbox = jax.vmap(fan_out)(sg.mir_edst, sg.mir_emask, ev)
+
+    # stats are computed from the replicated mirror values: every device
+    # derives the identical (M,) array — no psum (it would double-count)
+    sent = jnp.where(mir_vals != ident, sg.mir_nworkers, 0)
+    owner_w = jnp.clip(safe_g // sg.n_loc, 0, sg.M - 1)
+    per_worker = jnp.zeros((sg.M,), sent.dtype).at[owner_w].add(
+        jnp.where(valid, sent, 0))
+    return inbox, {"msgs_mirror": sent.sum(), "per_worker_mirror": per_worker}
+
+
+def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
+                      relay: str = "none", use_mirroring: bool = True,
+                      backend: str = "dense"):
+    """Sharded twin of channels.broadcast (identical stats keys/values)."""
+    esrc = sg.eg_src if use_mirroring else sg.all_src
+    edst = sg.eg_dst if use_mirroring else sg.all_dst
+    emask = sg.eg_mask if use_mirroring else sg.all_mask
+    ew = sg.eg_w if use_mirroring else sg.all_w
+    plan = (sg.plans.get("eg" if use_mirroring else "all")
+            if backend == "pallas" else None)
+    if sg.layout == "csr":
+        loc_src = esrc - sg.w0 * sg.n_loc
+        src_val = vals.reshape(-1)[loc_src]
+        src_act = active.reshape(-1)[loc_src]
+        v = src_val + ew if relay == "add_w" else src_val
+        inbox, stats = push_combined_flat_sharded(
+            sg, edst, v, emask & src_act, esrc // sg.n_loc, op,
+            backend=backend, plan=plan)
+    else:
+        src_val = vals[jnp.arange(sg.m_loc)[:, None], esrc]
+        src_act = active[jnp.arange(sg.m_loc)[:, None], esrc]
+        v = src_val + ew if relay == "add_w" else src_val
+        inbox, stats = push_combined_sharded(sg, edst, v, emask & src_act,
+                                             op, backend=backend, plan=plan)
+    if use_mirroring:
+        inbox2, s2 = push_mirror_sharded(sg, vals, active, op, relay,
+                                         backend=backend)
+        inbox = _MERGE[op](inbox, inbox2)
+        stats.update(s2)
+    else:
+        stats["msgs_mirror"] = jnp.zeros((), jnp.int32)
+        stats["per_worker_mirror"] = jnp.zeros((sg.M,), jnp.int32)
+    stats["msgs_total"] = stats["msgs_combined"] + stats["msgs_mirror"]
+    stats["per_worker_total"] = (stats["per_worker_combined"]
+                                 + stats["per_worker_mirror"])
+    return inbox, stats
+
+
+def gather_sharded(sg: ShardedGraph, vals, targets, tmask,
+                   dedup: bool = True):
+    """Sharded Ch_req for row-shaped targets (m_loc, R): the values travel
+    in one all_gather of the (m, n_loc) shards; the request-respond
+    *counts* (Theorem 3) are computed per device and psum-merged so they
+    match the reference accounting exactly."""
+    n_pad = sg.n_pad
+    allv = jax.lax.all_gather(vals, sg.axis, axis=0, tiled=True)
+    t = jnp.where(tmask, targets, n_pad)
+    ok = tmask & (t < n_pad)
+    out = jnp.where(ok, allv.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
+                    jnp.zeros((), vals.dtype))
+
+    if dedup:
+        uniq, _ = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)
+    else:
+        uniq = t
+    owner = jnp.clip(uniq // sg.n_loc, 0, sg.M - 1)
+    uvalid = uniq < n_pad
+    self_w = sg.worker_ids()[:, None]
+    remote_u = uvalid & (owner != self_w)
+    raw_remote = tmask & ((targets // sg.n_loc) != self_w)
+    raw_owner = jnp.clip(targets // sg.n_loc, 0, sg.M - 1)
+    stats = {
+        "msgs_rr": 2 * jax.lax.psum(remote_u.sum(), sg.axis),
+        "msgs_basic": 2 * jax.lax.psum(raw_remote.sum(), sg.axis),
+        "per_worker_rr": (_place_rows(sg, remote_u.sum(1))
+                          + _scatter_workers(sg, owner, remote_u)),
+        "per_worker_basic": (_place_rows(sg, raw_remote.sum(1))
+                             + _scatter_workers(sg, raw_owner, raw_remote)),
+    }
+    return out, stats
+
+
+def gather_edges_sharded(sg: ShardedGraph, vals, targets, tmask,
+                         dedup: bool = True):
+    """Sharded Ch_req for edge-shaped targets (layout-dispatching)."""
+    if sg.layout != "csr":
+        return gather_sharded(sg, vals, targets, tmask, dedup)
+    n_pad = sg.n_pad
+    worker = sg.all_src // sg.n_loc
+    allv = jax.lax.all_gather(vals, sg.axis, axis=0, tiled=True)
+    t = jnp.where(tmask, targets, n_pad)
+    ok = tmask & (t < n_pad)
+    out = jnp.where(ok, allv.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
+                    jnp.zeros((), vals.dtype))
+    # (no E == 0 case: _pad_device_slices guarantees cap >= 1)
+    owner = jnp.clip(targets // sg.n_loc, 0, sg.M - 1)
+    raw_remote = tmask & ((targets // sg.n_loc) != worker)
+    if dedup:
+        _, ws, ts, first = planlib.sort_by_worker_target(worker, t)
+        uniq = first & (ts < n_pad)
+        remote_u = uniq & (ts // sg.n_loc != ws)
+        u_w, u_owner = ws, jnp.clip(ts // sg.n_loc, 0, sg.M - 1)
+    else:
+        remote_u = raw_remote
+        u_w, u_owner = worker, owner
+    stats = {
+        "msgs_rr": 2 * jax.lax.psum(remote_u.sum(), sg.axis),
+        "msgs_basic": 2 * jax.lax.psum(raw_remote.sum(), sg.axis),
+        "per_worker_rr": (_scatter_workers(sg, u_w, remote_u)
+                          + _scatter_workers(sg, u_owner, remote_u)),
+        "per_worker_basic": (_scatter_workers(sg, worker, raw_remote)
+                             + _scatter_workers(sg, owner, raw_remote)),
+    }
+    return out, stats
+
+
+def scatter_state_sharded(sg: ShardedGraph, base, targets, upd, mask,
+                          op: str, backend: str = "dense"):
+    """Sharded scatter-op for row-shaped runtime targets (S-V hooking).
+    Runtime destinations admit no precomputed plan, so both backends share
+    the sorted segmented combine + op-matched exchange (the reference
+    paths' stats are identical by construction, and min/max values are
+    order-exact)."""
+    gw = sg.worker_ids()[:, None]
+    raw_cross = mask & ((targets // sg.n_loc) != gw)
+    bstats = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
+              "per_worker_basic": _place_rows(sg, raw_cross.sum(axis=1))}
+    inbox, (msgs, pw) = _combine_sorted_rows_sharded(sg, targets, upd,
+                                                     mask, op)
+    stats = {"msgs_combined": msgs, "per_worker_combined": pw}
+    stats.update(bstats)
+    return _MERGE[op](base, inbox), stats
+
+
+def scatter_edges_sharded(sg: ShardedGraph, base, targets, upd, mask,
+                          op: str, backend: str = "dense"):
+    """Sharded scatter-op for edge-shaped runtime targets (MSF election)."""
+    if sg.layout != "csr":
+        return scatter_state_sharded(sg, base, targets, upd, mask, op,
+                                     backend)
+    worker = sg.all_src // sg.n_loc
+    raw_cross = mask & ((targets // sg.n_loc) != worker)
+    bstats = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
+              "per_worker_basic": _scatter_workers(sg, worker, raw_cross)}
+    inbox, (msgs, pw) = _combine_sorted_flat_sharded(sg, targets, upd,
+                                                     mask, worker, op)
+    stats = {"msgs_combined": msgs, "per_worker_combined": pw}
+    stats.update(bstats)
+    return _MERGE[op](base, inbox), stats
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+def _state_specs(tree, M: int):
+    return jax.tree.map(
+        lambda x: P(AXIS) if (getattr(x, "ndim", 0) >= 1
+                              and x.shape[0] == M) else P(), tree)
+
+
+def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
+                  record_history: bool = False, devices: int = 1,
+                  plan_kinds: Sequence[str] = ()):
+    """Build the jitted sharded BSP program.  Returns (fn, args) with
+    ``fn(*args) == (final_state, stats_totals, n_supersteps, history)`` —
+    the same contract as ``bsp.run``.
+
+    ``make_step(g)`` must build the superstep function against either a
+    PartitionedGraph (used here only to trace the stats structure) or the
+    device-local ShardedGraph."""
+    if pg.M % devices:
+        raise ValueError(f"M={pg.M} workers must divide over "
+                         f"devices={devices}")
+    mesh = graph_mesh(devices)
+    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds)
+
+    _, _, stats_shape = jax.eval_shape(make_step(pg), state0,
+                                       jnp.zeros((), jnp.int32))
+    st_specs = _state_specs(state0, pg.M)
+    stats_specs = jax.tree.map(lambda _: P(), stats_shape)
+    hist_specs = stats_specs if record_history else None
+
+    def inner(arrs, st0):
+        sg = _make_sg(meta, arrs)
+        return bsp.run(make_step(sg), st0, max_supersteps, record_history)
+
+    fn = shard_map(inner, mesh=mesh, in_specs=(arr_specs, st_specs),
+                   out_specs=(st_specs, stats_specs, P(), hist_specs),
+                   check_rep=False)
+    return jax.jit(fn), (arrays, state0)
+
+
+def run_sharded(pg, make_step: Callable, state0, max_supersteps: int,
+                record_history: bool = False, devices: int = 1,
+                plan_kinds: Sequence[str] = ()):
+    """Run a BSP program sharded over ``devices`` devices; same return
+    contract as ``bsp.run``."""
+    fn, args = build_sharded(pg, make_step, state0, max_supersteps,
+                             record_history, devices, plan_kinds)
+    return fn(*args)
+
+
+def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
+                  plan_kinds: Sequence[str] = ()):
+    """One-shot sharded channel application (no BSP loop): ``make_fn(sg)``
+    returns ``fn(*local_args) -> (out, stats)`` where every ``out`` leaf is
+    worker/edge-sharded on its leading axis and ``stats`` is replicated.
+    csr edge-shaped outputs come back device-concatenated with per-device
+    padding — strip with ``csr_device_bounds``."""
+    if pg.M % devices:
+        raise ValueError(f"M={pg.M} workers must divide over "
+                         f"devices={devices}")
+    mesh = graph_mesh(devices)
+    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds)
+    in_specs = jax.tree.map(
+        lambda x: P(AXIS) if (getattr(x, "ndim", 0) >= 1
+                              and x.shape[0] == pg.M) else P(), args)
+    out_shape, stats_shape = jax.eval_shape(make_fn(pg), *args)
+    out_specs = (jax.tree.map(lambda _: P(AXIS), out_shape),
+                 jax.tree.map(lambda _: P(), stats_shape))
+
+    def inner(arrs, a):
+        sg = _make_sg(meta, arrs)
+        return make_fn(sg)(*a)
+
+    fn = shard_map(inner, mesh=mesh, in_specs=(arr_specs, in_specs),
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)(arrays, args)

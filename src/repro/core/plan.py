@@ -244,13 +244,16 @@ def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
         out = segment_combine_blocks(
             packed, row_local, op, nb,
             interpret=jax.default_backend() != "tpu")
-    # The kernel's min/max identities are finite sentinels (VMEM-friendly);
-    # map no-hit slots back to the channel identities so the combined
-    # blocks compare exactly against the dense path.
-    if op == "min":
-        out = jnp.where(out >= POS, jnp.inf, out)
-    elif op == "max":
-        out = jnp.where(out <= NEG, -jnp.inf, out)
+    # The kernel's float min/max identities are finite sentinels
+    # (VMEM-friendly); map no-hit slots back to the channel identities so
+    # the combined blocks compare exactly against the dense path.  Integer
+    # blocks already use iinfo bounds == the channel identities, so the
+    # id-carrying algorithms combine exactly in their integer dtype.
+    if jnp.issubdtype(packed.dtype, jnp.floating):
+        if op == "min":
+            out = jnp.where(out >= POS, jnp.inf, out)
+        elif op == "max":
+            out = jnp.where(out <= NEG, -jnp.inf, out)
     return out
 
 
@@ -300,6 +303,38 @@ def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
 # dynamic targets: sorted segmented combine (no precomputation possible)
 # ---------------------------------------------------------------------------
 
+def sorted_segments(targets: jnp.ndarray, values: jnp.ndarray,
+                    mask: jnp.ndarray, op: str, n_pad: int):
+    """Per-row sort + segmented reduce of runtime (R, K) target rows:
+    the shared core of the sorted combine, used by both the single-device
+    path below and the sharded executor (core/exec.py) so the combine and
+    message-accounting rules live in exactly one place.
+
+    Returns ``(real, seg_t, seg_val, seg_row, ident)``: for every live
+    (row, distinct target) segment its validity, target, combined value,
+    and source row."""
+    ident = identity_of(op, values.dtype)
+    R, K = targets.shape
+    t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
+    order = jnp.argsort(t, axis=1)
+    ts = jnp.take_along_axis(t, order, axis=1)
+    vs = jnp.take_along_axis(jnp.where(mask, values, ident), order, axis=1)
+
+    first = jnp.concatenate(
+        [jnp.ones((R, 1), bool), ts[:, 1:] != ts[:, :-1]], axis=1)
+    seg_id = (jnp.cumsum(first.reshape(-1)) - 1).astype(jnp.int32)
+    seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
+              "sum": jax.ops.segment_sum}[op]
+    seg_val = seg_fn(vs.reshape(-1), seg_id, num_segments=R * K)
+    seg_t = jax.ops.segment_min(ts.reshape(-1), seg_id, num_segments=R * K)
+    rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, K))
+    seg_row = jax.ops.segment_min(rows.reshape(-1), seg_id,
+                                  num_segments=R * K)
+    live = jnp.zeros((R * K,), bool).at[seg_id].set(True)
+    real = live & (seg_t < n_pad)
+    return real, seg_t, seg_val, seg_row, ident
+
+
 def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
                    mask: jnp.ndarray, op: str, M: int, n_loc: int
                    ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
@@ -309,26 +344,9 @@ def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
     (M, n_pad) partial.  Returns (inbox (M, n_loc), (msgs_combined,
     per_worker_combined)), combined counts identical to the dense path.
     """
-    ident = identity_of(op, values.dtype)
     n_pad = M * n_loc
-    K = targets.shape[1]
-    t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
-    order = jnp.argsort(t, axis=1)
-    ts = jnp.take_along_axis(t, order, axis=1)
-    vs = jnp.take_along_axis(jnp.where(mask, values, ident), order, axis=1)
-
-    first = jnp.concatenate(
-        [jnp.ones((M, 1), bool), ts[:, 1:] != ts[:, :-1]], axis=1)
-    seg_id = (jnp.cumsum(first.reshape(-1)) - 1).astype(jnp.int32)
-    seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
-              "sum": jax.ops.segment_sum}[op]
-    seg_val = seg_fn(vs.reshape(-1), seg_id, num_segments=M * K)
-    seg_t = jax.ops.segment_min(ts.reshape(-1), seg_id, num_segments=M * K)
-    rows = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[:, None], (M, K))
-    seg_row = jax.ops.segment_min(rows.reshape(-1), seg_id,
-                                  num_segments=M * K)
-    live = jnp.zeros((M * K,), bool).at[seg_id].set(True)
-    real = live & (seg_t < n_pad)
+    real, seg_t, seg_val, seg_row, ident = sorted_segments(
+        targets, values, mask, op, n_pad)
 
     # inbox: receiver applies the same associative op, so one flat scatter
     # of the per-segment combined values is exact.
@@ -357,22 +375,15 @@ def sort_by_worker_target(worker: jnp.ndarray, t: jnp.ndarray):
     return order, ws, ts, first
 
 
-def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
-                        mask: jnp.ndarray, src_worker: jnp.ndarray,
-                        op: str, M: int, n_loc: int
-                        ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray,
-                                                      jnp.ndarray]]:
-    """CSR twin of ``combine_sorted``: flat (E,) targets/values/mask with
-    explicit per-edge source workers.  Sort by (worker, target), then a
-    segmented reduce and one flat (n_pad,) scatter.  Combined counts are
-    identical to the dense path (distinct non-identity (source worker,
-    destination vertex) pairs, destination remote)."""
+def sorted_segments_flat(targets: jnp.ndarray, values: jnp.ndarray,
+                         mask: jnp.ndarray, src_worker: jnp.ndarray,
+                         op: str, n_pad: int):
+    """Flat-(E,) twin of ``sorted_segments``: sort by (worker, target),
+    segmented reduce.  Returns ``(real, seg_t, seg_val, seg_w, ident)``
+    — one entry per distinct live (source worker, target) pair.  Shared
+    by the single-device path below and the sharded executor."""
     ident = identity_of(op, values.dtype)
-    n_pad = M * n_loc
     E = targets.shape[0]
-    if E == 0:
-        return (jnp.full((M, n_loc), ident, values.dtype),
-                (jnp.zeros((), jnp.int32), jnp.zeros((M,), jnp.int32)))
     t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
     order, ws, ts, first = sort_by_worker_target(src_worker, t)
     vs = jnp.where(mask, values, ident)[order]
@@ -385,6 +396,26 @@ def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
     seg_w = jax.ops.segment_min(ws, seg_id, num_segments=E)
     live = jnp.zeros((E,), bool).at[seg_id].set(True)
     real = live & (seg_t < n_pad)
+    return real, seg_t, seg_val, seg_w, ident
+
+
+def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
+                        mask: jnp.ndarray, src_worker: jnp.ndarray,
+                        op: str, M: int, n_loc: int
+                        ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray,
+                                                      jnp.ndarray]]:
+    """CSR twin of ``combine_sorted``: flat (E,) targets/values/mask with
+    explicit per-edge source workers.  Sort by (worker, target), then a
+    segmented reduce and one flat (n_pad,) scatter.  Combined counts are
+    identical to the dense path (distinct non-identity (source worker,
+    destination vertex) pairs, destination remote)."""
+    ident = identity_of(op, values.dtype)
+    n_pad = M * n_loc
+    if targets.shape[0] == 0:
+        return (jnp.full((M, n_loc), ident, values.dtype),
+                (jnp.zeros((), jnp.int32), jnp.zeros((M,), jnp.int32)))
+    real, seg_t, seg_val, seg_w, ident = sorted_segments_flat(
+        targets, values, mask, src_worker, op, n_pad)
 
     buf = jnp.full((n_pad,), ident, values.dtype)
     buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),

@@ -141,6 +141,32 @@ class PartitionedGraph:
         return (jnp.arange(self.M)[:, None] * self.n_loc
                 + jnp.arange(self.n_loc)[None, :])
 
+    # -- global reductions ------------------------------------------------
+    # On one device these are plain jnp reductions; the sharded executor's
+    # ``ShardedGraph`` (core/exec.py) overrides them with cross-device
+    # collectives so algorithm code (halt votes, aggregators) is written
+    # once and runs identically under ``shard_map``.
+    def gany(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.any(x)
+
+    def gall(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.all(x)
+
+    def gsum(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(x)
+
+    def gmax(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.max(x)
+
+    def edge_src_values(self, state: jnp.ndarray, src: jnp.ndarray
+                        ) -> jnp.ndarray:
+        """Read per-vertex ``state`` at each edge's (locally stored) source
+        endpoint, for either edge layout: ``src`` is (M, E_loc) local slots
+        in the padded layout, flat (E,) global slot ids in csr."""
+        if self.layout == "csr":
+            return state.reshape(-1)[src]
+        return state[jnp.arange(state.shape[0])[:, None], src]
+
 
 def _pad_rows(rows, pad_val, dtype):
     """list of 1-D arrays -> (M, maxlen) + mask."""

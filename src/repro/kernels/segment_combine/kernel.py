@@ -13,6 +13,12 @@ For op='sum' this is literally a one-hot matmul -> MXU; min/max run on the
 VPU.  Block sizes default to (Eb=512, Nb=256): hit matrix = 512KB f32,
 well inside the ~16MB VMEM budget, and Nb is a multiple of the 128-lane
 register width.
+
+Dtype handling: float blocks use the finite sentinels NEG/POS as min/max
+identities (VMEM-friendly; the plan layer maps them back to +-inf);
+integer blocks use the dtype's iinfo bounds, which double as the exact
+channel identities — id-carrying algorithms (Hash-Min, S-V) combine in
+int32 so vertex ids above 2^24 stay exactly representable.
 """
 from __future__ import annotations
 
@@ -26,21 +32,36 @@ NEG = -3.0e38
 POS = 3.0e38
 
 
+def sentinels(dtype):
+    """(min-identity, max-identity) used inside the combine blocks."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return info.min, info.max
+    return NEG, POS
+
+
 def _kernel(vals_ref, idx_ref, out_ref, *, op: str, nb: int):
     vals = vals_ref[0, :]                       # (Eb,)
     idx = idx_ref[0, :]                         # (Eb,) local dst in [0, nb)
     eb = vals.shape[0]
+    neg, pos = sentinels(vals.dtype)
     cols = jax.lax.broadcasted_iota(jnp.int32, (eb, nb), 1)
     hit = idx[:, None] == cols
     if op == "sum":
+        acc = (jnp.int32 if jnp.issubdtype(vals.dtype, jnp.integer)
+               else jnp.float32)
         onehot = hit.astype(vals.dtype)
         out_ref[0, :] = jax.lax.dot_general(
             vals[None, :], onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)[0].astype(out_ref.dtype)
+            preferred_element_type=acc)[0].astype(out_ref.dtype)
     elif op == "min":
-        out_ref[0, :] = jnp.min(jnp.where(hit, vals[:, None], POS), axis=0)
+        out_ref[0, :] = jnp.min(
+            jnp.where(hit, vals[:, None], jnp.asarray(pos, vals.dtype)),
+            axis=0)
     else:  # max
-        out_ref[0, :] = jnp.max(jnp.where(hit, vals[:, None], NEG), axis=0)
+        out_ref[0, :] = jnp.max(
+            jnp.where(hit, vals[:, None], jnp.asarray(neg, vals.dtype)),
+            axis=0)
 
 
 def segment_combine_blocks(vals: jax.Array, idx: jax.Array, op: str,

@@ -2,13 +2,18 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.segment_combine.kernel import segment_combine_blocks
 from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
 
-_ID = {"sum": 0.0, "min": 3.0e38, "max": -3.0e38}
+
+def _identity(op: str, dtype) -> np.ndarray:
+    """Channel identity in the *value* dtype (delegates to the canonical
+    ``core.plan.identity_of``): int blocks keep their integer dtype instead
+    of being coerced to float32 — vertex ids >= 2^24 survive the packing."""
+    from repro.core.plan import identity_of
+    return np.asarray(identity_of(op, dtype))
 
 
 def pack_edges(dst: np.ndarray, n_out: int, nb: int = 256,
@@ -39,9 +44,12 @@ def pack_edges(dst: np.ndarray, n_out: int, nb: int = 256,
 def pack_values(vals: np.ndarray, order: np.ndarray, idx_local: np.ndarray,
                 op: str = "sum") -> np.ndarray:
     """Scatter per-edge values into the packed (n_blocks, Eb) layout
-    (vectorized flat scatter aligned with ``pack_edges``)."""
+    (vectorized flat scatter aligned with ``pack_edges``).  The packed
+    array keeps ``vals.dtype``; padding slots hold the op identity for
+    that dtype (the kernel ignores them via idx == -1 either way)."""
+    vals = np.asarray(vals)
     n_blocks, eb = idx_local.shape
-    out = np.full((n_blocks, eb), _ID[op], np.float32)
+    out = np.full((n_blocks, eb), _identity(op, vals.dtype), vals.dtype)
     valid = idx_local.reshape(-1) >= 0
     out.reshape(-1)[valid] = vals[order]
     return out

@@ -3,12 +3,17 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-_ID = {"sum": 0.0, "min": 3.0e38, "max": -3.0e38}
+from repro.kernels.segment_combine.kernel import sentinels
+
+
+def _identity(op: str, dtype):
+    neg, pos = sentinels(dtype)
+    return jnp.asarray({"sum": 0, "min": pos, "max": neg}[op], dtype)
 
 
 def segment_combine_blocks_ref(vals, idx, op: str, nb: int):
     n_blocks, eb = vals.shape
-    ident = jnp.asarray(_ID[op], vals.dtype)
+    ident = _identity(op, vals.dtype)
     out = jnp.full((n_blocks, nb), ident, vals.dtype)
     safe = jnp.clip(idx, 0, nb - 1)
     v = jnp.where(idx >= 0, vals, ident)

@@ -6,36 +6,36 @@
 Runs a full BSP computation with the chosen channel configuration and
 reports the paper's metrics: total messages under each channel mode,
 per-worker balance, supersteps, wall time.
+
+``--devices D`` runs the sharded executor (core/exec.py): the worker axis
+is sharded over a D-device mesh and the channel joins lower to real
+collectives.  On CPU the driver forces D host devices via XLA_FLAGS, so
+args are parsed *before* jax is imported — keep the repro imports lazy.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import numpy as np
+GRAPH_NAMES = ("powerlaw", "road", "erdos")
+ALGOS = ("hashmin", "pagerank", "sv", "sssp", "msf", "attr_bcast")
 
-from repro.algorithms.attr_bcast import attribute_broadcast
-from repro.algorithms.hashmin import hashmin
-from repro.algorithms.msf import msf
-from repro.algorithms.pagerank import pagerank
-from repro.algorithms.sssp import sssp
-from repro.algorithms.sv import sv
-from repro.core.cost_model import choose_tau
-from repro.graph import generators as gen
-from repro.graph.structs import partition
-from repro.train.fault import straggler_report
 
-GRAPHS = {
-    "powerlaw": lambda n, seed: gen.powerlaw(n, avg_deg=8, seed=seed),
-    "road": lambda n, seed: gen.grid_road(int(np.sqrt(n)), seed=seed,
-                                          weighted=True),
-    "erdos": lambda n, seed: gen.erdos(n, avg_deg=16, seed=seed),
-}
+def make_graph(graph: str, n: int, seed: int):
+    import numpy as np
+    from repro.graph import generators as gen
+    if graph == "powerlaw":
+        return gen.powerlaw(n, avg_deg=8, seed=seed)
+    if graph == "road":
+        return gen.grid_road(int(np.sqrt(n)), seed=seed, weighted=True)
+    return gen.erdos(n, avg_deg=16, seed=seed)
 
 
 def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
           layout: str = "padded"):
-    g = GRAPHS[graph](n, seed)
+    from repro.core.cost_model import choose_tau
+    from repro.graph.structs import partition
+    g = make_graph(graph, n, seed)
     g = g.symmetrized()
     deg = g.out_degrees()
     if tau_arg == "auto":
@@ -50,10 +50,8 @@ def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--algo", default="hashmin",
-                    choices=["hashmin", "pagerank", "sv", "sssp", "msf",
-                             "attr_bcast"])
-    ap.add_argument("--graph", default="powerlaw", choices=list(GRAPHS))
+    ap.add_argument("--algo", default="hashmin", choices=list(ALGOS))
+    ap.add_argument("--graph", default="powerlaw", choices=list(GRAPH_NAMES))
     ap.add_argument("--n", type=int, default=100_000)
     ap.add_argument("--workers", type=int, default=32)
     ap.add_argument("--tau", default="auto")
@@ -66,50 +64,73 @@ def main():
                     help="edge representation: padded (M, E_loc) rows "
                          "(reference) or flat csr arrays + row offsets "
                          "(O(E + M + n) host memory)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the worker axis over this many devices "
+                         "(0 = single-device batched simulation); on CPU "
+                         "the required host devices are forced via "
+                         "XLA_FLAGS")
     args = ap.parse_args()
+
+    if args.devices > 1:
+        from repro.launch.xla_flags import force_host_devices
+        force_host_devices(args.devices)
+
+    # jax initializes on first repro import — after the flags above
+    import numpy as np
+    from repro.algorithms.attr_bcast import attribute_broadcast
+    from repro.algorithms.hashmin import hashmin
+    from repro.algorithms.msf import msf
+    from repro.algorithms.pagerank import pagerank
+    from repro.algorithms.sssp import sssp
+    from repro.algorithms.sv import sv
+    from repro.graph.structs import partition
+    from repro.train.fault import straggler_report
 
     g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau,
                        layout=args.layout)
+    dev = args.devices if args.devices else None
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
           f"tau={tau} max_deg={int(g.out_degrees().max())} "
-          f"backend={args.backend} layout={args.layout}")
+          f"backend={args.backend} layout={args.layout} "
+          f"devices={dev or 1}")
 
     t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
     be = args.backend
     if args.algo == "hashmin":
-        _, stats, n_ss = hashmin(pg, use_mirroring=mirror, backend=be)
+        _, stats, n_ss = hashmin(pg, use_mirroring=mirror, backend=be,
+                                 devices=dev)
     elif args.algo == "pagerank":
         _, stats, n_ss = pagerank(pg, n_iters=30, use_mirroring=mirror,
-                                  backend=be)
+                                  backend=be, devices=dev)
     elif args.algo == "sv":
-        _, stats, n_ss = sv(pg, backend=be)
+        _, stats, n_ss = sv(pg, backend=be, devices=dev)
     elif args.algo == "sssp":
-        gw = GRAPHS[args.graph](args.n, args.seed)
+        gw = make_graph(args.graph, args.n, args.seed)
         if gw.weight is None:
             gw.weight = np.ones(gw.m, np.float32)
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
                         layout=args.layout)
         _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
-                              backend=be)
+                              backend=be, devices=dev)
         pg = pgw
     elif args.algo == "msf":
-        gw = GRAPHS[args.graph](args.n, args.seed)
+        gw = make_graph(args.graph, args.n, args.seed)
         if gw.weight is None:
             rng = np.random.RandomState(args.seed)
             gw.weight = rng.rand(gw.m).astype(np.float32) + 0.01
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=None, seed=args.seed,
                         layout=args.layout)
-        (res, stats, n_ss) = msf(pgw, backend=be)
+        (res, stats, n_ss) = msf(pgw, backend=be, devices=dev)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")
         pg = pgw
     else:
         import jax.numpy as jnp
         attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc)
-        _, stats = attribute_broadcast(pg, attr, backend=be)
+        _, stats = attribute_broadcast(pg, attr, backend=be, devices=dev)
         n_ss = 2
     dt = time.time() - t0
 

@@ -1,0 +1,174 @@
+"""Sharded-vs-single-device parity harness.
+
+Runs every algorithm x layout x backend cell of the conformance matrix
+through the sharded executor at each requested device count and compares
+against the single-device batched simulation:
+
+* integer / min / max results (hashmin, sssp, sv, msf labels, attribute
+  gather) must be **bitwise identical**;
+* PageRank (float sum combine) must agree to tight tolerance (the
+  exchange changes float reduction order, nothing else);
+* every ``msgs_*`` / ``per_worker_*`` statistic must be integer-exact;
+* the dense sharded Ch_msg must actually lower to an ``all-to-all``
+  collective (checked in the compiled HLO).
+
+Run as a module (it forces the host device count BEFORE importing jax, so
+it works on a plain CPU machine and in CI):
+
+    PYTHONPATH=src python -m repro.launch.shard_check --devices 1 8 \
+        --out shard-parity.json
+
+Exits non-zero on the first violated cell.  tests/test_conformance.py
+drives it in a subprocess (the in-process suite keeps the single-device
+invariant); benchmarks/run.py --smoke asserts its verdict too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.xla_flags import force_host_devices
+
+
+ALGOS = ("hashmin", "pagerank", "sssp", "sv", "msf", "attr_bcast")
+
+
+def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
+               backends=("dense", "pallas"), device_counts=(1, 2, 8),
+               n=180, M=8, tau=8, seed=0):
+    """Returns (report dict, ok flag).  Call only after jax sees enough
+    devices (``xla_flags.force_host_devices`` before the first import)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.algorithms.attr_bcast import attribute_broadcast
+    from repro.algorithms.hashmin import hashmin
+    from repro.algorithms.msf import msf
+    from repro.algorithms.pagerank import pagerank
+    from repro.algorithms.sssp import sssp
+    from repro.algorithms.sv import sv
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    g = gen.powerlaw(n, avg_deg=5, seed=1, weighted=True).symmetrized()
+    pgs = {lay: partition(g, M, tau=tau, seed=seed, layout=lay)
+           for lay in layouts}
+
+    def run_algo(algo, pg, backend, devices):
+        if algo == "hashmin":
+            l, s, nss = hashmin(pg, backend=backend, devices=devices)
+            return {"exact": np.asarray(l)}, {}, s, int(nss)
+        if algo == "pagerank":
+            pr, s, nss = pagerank(pg, n_iters=8, tol=1e-12,
+                                  backend=backend, devices=devices)
+            return {}, {"pr": np.asarray(pr)}, s, int(nss)
+        if algo == "sssp":
+            d, s, nss = sssp(pg, int(pg.perm[0]), backend=backend,
+                             devices=devices)
+            return {"exact": np.asarray(d)}, {}, s, int(nss)
+        if algo == "sv":
+            l, s, nss = sv(pg, backend=backend, devices=devices)
+            return {"exact": np.asarray(l)}, {}, s, int(nss)
+        if algo == "msf":
+            (lab, tw, ne), s, nss = msf(pg, backend=backend,
+                                        devices=devices)
+            return ({"exact": np.asarray(lab), "ne": int(ne)},
+                    {"tw": float(tw)}, s, int(nss))
+        attr = jnp.arange(pg.n_pad, dtype=jnp.float32
+                          ).reshape(pg.M, pg.n_loc) * 3
+        ea, s = attribute_broadcast(pg, attr, devices=devices)
+        return {"exact": np.asarray(ea)}, {}, s, 2
+
+    report = {"n": n, "M": M, "tau": tau, "cells": {}}
+    ok = True
+    for algo in algos:
+        for lay in layouts:
+            for be in backends:
+                pg = pgs[lay]
+                ref_e, ref_a, ref_s, ref_n = run_algo(algo, pg, be, None)
+                for D in device_counts:
+                    name = f"{algo}/{lay}/{be}/devices={D}"
+                    errs = []
+                    e, a, s, nss = run_algo(algo, pg, be, D)
+                    if nss != ref_n:
+                        errs.append(f"supersteps {nss} != {ref_n}")
+                    for k in ref_e:
+                        if not np.array_equal(np.asarray(e[k]),
+                                              np.asarray(ref_e[k])):
+                            errs.append(f"result {k!r} not bitwise equal")
+                    for k in ref_a:
+                        if not np.allclose(a[k], ref_a[k],
+                                           rtol=1e-5, atol=1e-7):
+                            errs.append(f"result {k!r} out of tolerance")
+                    if set(s) != set(ref_s):
+                        errs.append("stats keys differ")
+                    else:
+                        for k in ref_s:
+                            if not np.array_equal(np.asarray(s[k]),
+                                                  np.asarray(ref_s[k])):
+                                errs.append(f"stat {k!r} differs: "
+                                            f"{np.asarray(s[k])} vs "
+                                            f"{np.asarray(ref_s[k])}")
+                    report["cells"][name] = errs
+                    ok &= not errs
+                    print(f"[shard_check] {name}: "
+                          + ("OK" if not errs else "; ".join(errs)))
+    return report, ok
+
+
+def check_all_to_all(n=180, M=8, tau=8, devices=8) -> bool:
+    """The dense sharded Ch_msg join must compile to a real all-to-all."""
+    from repro.core import exec as exec_mod
+    from repro.core.plan import identity_of
+    import jax.numpy as jnp
+    from repro.graph import generators as gen
+    from repro.graph.structs import partition
+
+    g = gen.powerlaw(n, avg_deg=5, seed=1).symmetrized()
+    pg = partition(g, M, tau=tau, seed=0, layout="csr")
+
+    def make_step(gr):
+        def step(state, i):
+            from repro.core.channels import broadcast
+            inbox, stats = broadcast(gr, state, gr.vmask, op="min")
+            return jnp.minimum(state, inbox), gr.gany(inbox < state), stats
+        return step
+
+    state0 = jnp.where(pg.vmask, pg.local_ids().astype(jnp.int32),
+                       identity_of("min", jnp.int32))
+    fn, args = exec_mod.build_sharded(pg, make_step, state0, 3,
+                                      devices=devices)
+    txt = fn.lower(*args).compile().as_text()
+    found = "all-to-all" in txt
+    print(f"[shard_check] dense join lowers to all-to-all: {found}")
+    return found
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    # 1 = degenerate one-device mesh, 2 = several workers per device
+    # (m_loc > 1 with real collectives), 8 = one worker per device
+    ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 8])
+    ap.add_argument("--algos", nargs="+", default=list(ALGOS))
+    ap.add_argument("--n", type=int, default=180)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    force_host_devices(max(args.devices), default_platform="cpu")
+
+    report, ok = run_matrix(algos=tuple(args.algos),
+                            device_counts=tuple(args.devices),
+                            n=args.n, M=args.workers)
+    report["all_to_all_in_hlo"] = check_all_to_all(
+        n=args.n, M=args.workers, devices=max(args.devices))
+    ok &= report["all_to_all_in_hlo"]
+    report["ok"] = bool(ok)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+    print(f"[shard_check] {'ALL CELLS OK' if ok else 'PARITY VIOLATIONS'}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Pre-jax-import environment knobs (keep this module jax-free).
+
+The sharded executor needs D visible devices; on CPU that means
+``--xla_force_host_platform_device_count`` must be in XLA_FLAGS *before*
+jax initializes.  Every entry point that forces host devices
+(graph_run --devices, shard_check, benchmarks/run.py) shares this helper
+so the flag mutation can't drift between copies.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_host_devices(n: int, default_platform: str | None = None) -> None:
+    """Append the host-device-count flag unless one is already set; must
+    run before the first jax import to have any effect."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    if default_platform:
+        os.environ.setdefault("JAX_PLATFORMS", default_platform)

@@ -113,6 +113,44 @@ def test_conformance_matrix(algo, mirror, layout, backend):
     _assert_stats_equal(stats, ref_stats, ctx)
 
 
+def test_sharded_conformance_matrix():
+    """The sharded axis of the matrix: every algo x backend x layout cell
+    must be bitwise identical (min/max results; pagerank to float
+    tolerance) and stats-identical between devices 1 / 2 / 8 and the
+    single-device batched simulation (devices=2 pins the general
+    several-workers-per-device collectives, devices=8 the
+    one-worker-per-device extreme), and the dense Ch_msg join must
+    lower to a real all-to-all.
+
+    The in-process suite keeps the repo's one-device invariant, so the
+    whole matrix runs in ONE subprocess with 8 forced host CPU devices
+    (launch/shard_check.py sets XLA_FLAGS before importing jax)."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    out = os.path.join(tempfile.mkdtemp(), "shard-parity.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.shard_check",
+         "--devices", "1", "2", "8", "--out", out],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=root)
+    assert r.returncode == 0, (r.stdout[-4000:] + "\n" + r.stderr[-4000:])
+    report = json.load(open(out))
+    bad = {cell: errs for cell, errs in report["cells"].items() if errs}
+    assert not bad, bad
+    assert report["all_to_all_in_hlo"], "dense join did not lower to " \
+                                        "all-to-all"
+    # every cell of the full 6-algo matrix must have been exercised
+    assert len(report["cells"]) == 6 * 2 * 2 * 3
+
+
 def test_csr_arrays_are_flat():
     """The csr layout actually is O(E): flat 1-D edge arrays + offsets."""
     pg = _get_pg("csr")

@@ -33,6 +33,29 @@ def test_segment_combine_blocks_vs_ref(op, nb, eb, n_blocks):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_segment_combine_int32_round_trip(op):
+    """pack_values/combine must preserve integer dtypes exactly: ids above
+    2^24 (unrepresentable in float32) survive the packed combine.  The old
+    float32 coercion in pack_values returned 16_777_216 for both."""
+    rng = np.random.RandomState(7)
+    N, E = 300, 1200
+    dst = rng.randint(0, N, E)
+    vals = rng.randint(2 ** 24 - 2, 2 ** 24 + 50, E).astype(np.int32)
+    order, idxl = pack_edges(dst, N, nb=128, eb_align=128)
+    pv = pack_values(vals, order, idxl, op)
+    assert pv.dtype == np.int32, "pack_values must preserve the dtype"
+    out = np.asarray(segment_combine(jnp.asarray(pv), jnp.asarray(idxl),
+                                     op, 128, N))
+    assert out.dtype == np.int32
+    red = {"sum": np.add, "min": np.minimum, "max": np.maximum}[op]
+    iinfo = np.iinfo(np.int32)
+    ident = {"sum": 0, "min": iinfo.max, "max": iinfo.min}[op]
+    ref = np.full(N, ident, np.int32)
+    red.at(ref, dst, vals)
+    np.testing.assert_array_equal(out, ref)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.sampled_from(["sum", "min", "max"]),
        st.integers(10, 2000), st.integers(50, 900))

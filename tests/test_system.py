@@ -79,7 +79,8 @@ def test_bsp_run_halts_and_accumulates():
         stats = {"x": jnp.ones(()), "v": jnp.ones((3,))}
         return state, state >= 5.0, stats
 
-    final, stats, n = bsp.run(step, jnp.zeros(()), 100)
+    final, stats, n, hist = bsp.run(step, jnp.zeros(()), 100)
+    assert hist is None
     assert float(final) == 5.0 and int(n) == 5
     assert float(stats["x"]) == 5.0
     np.testing.assert_array_equal(np.asarray(stats["v"]), 5 * np.ones(3))
