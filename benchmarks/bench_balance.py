@@ -1,22 +1,47 @@
-"""Paper Figs. 1-2: per-worker sent-message histograms.
+"""Load-balance benchmarks.
 
-Fig. 1: Hash-Min on the skewed graph, with vs without mirroring — the
-uneven blue bars become even short red bars.
-Fig. 2: S-V on the road graph, request-respond vs basic.
-Prints the full per-worker histograms as CSV for plotting.
+Two modes:
+
+* ``run()`` (default CLI) — paper Figs. 1-2: per-worker sent-message
+  histograms (Hash-Min with/without mirroring, S-V request-respond vs
+  basic), printed as CSV for plotting.
+* ``balance_gate()`` (``--gate``) — the partitioner trajectory the CI
+  ``bench-balance`` job pins: on the n=200k power-law graph at M=64 it
+  partitions with ``balance`` in {hash, edges, split}, records per-worker
+  / per-physical-shard / per-device edge loads, wall times, and message
+  totals to ``BENCH_balance.json``, and **asserts** (hard gate, not
+  advisory):
+
+  - ``balance="split"`` per-worker edge-load max_over_mean <= 1.25
+    (the hash baseline on this graph is degree-skew-proportional, ~7x);
+  - algorithm outputs are identical across all three modes (canonicalized
+    to original-vertex space — the modes only move vertices);
+  - ``edges`` and ``split`` agree on every raw message count: splitting
+    re-shards combining, it never invents or loses a basic message.
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
 
-from benchmarks.common import paper_graphs, row, timed
-from repro.algorithms.hashmin import hashmin
-from repro.algorithms.sv import sv
-from repro.core.cost_model import choose_tau
-from repro.graph.structs import partition
-from repro.train.fault import straggler_report
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import paper_graphs, row, timed  # noqa: E402
+from repro.algorithms.hashmin import hashmin  # noqa: E402
+from repro.algorithms.sv import sv  # noqa: E402
+from repro.core.cost_model import (choose_tau, predicted_balance,  # noqa: E402
+                                   straggler_report, vertex_cost)
+from repro.graph.structs import canonical_labels, partition  # noqa: E402
 
 M = 16
+
+GATE_MAX_OVER_MEAN = 1.25
 
 
 def run(scale=20_000):
@@ -42,6 +67,18 @@ def run(scale=20_000):
         # the plan backend must not change the balance picture at all
         assert np.array_equal(per_backend[(label, "dense")],
                               per_backend[(label, "pallas")]), label
+    # the edge-balanced partitioner must beat the hash baseline on the
+    # skewed graph without changing the component labels
+    pg_h = partition(g, M, tau=None, seed=0, layout="csr")
+    pg_s = partition(g, M, tau=None, seed=0, layout="csr", balance="split",
+                     split_factor=1.1)
+    bal_h = straggler_report(pg_h.edge_load())
+    bal_s = straggler_report(pg_s.edge_load(phys=True))
+    row("fig1.partition.btc_like.hash", 0.0,
+        f"maxmean={bal_h['max_over_mean']:.2f}")
+    row("fig1.partition.btc_like.split", 0.0,
+        f"maxmean={bal_s['max_over_mean']:.2f}")
+    assert bal_s["max_over_mean"] <= bal_h["max_over_mean"] + 1e-9
 
     g = graphs["usa_like"].symmetrized()
     pg = partition(g, M, tau=None, seed=0)
@@ -56,5 +93,108 @@ def run(scale=20_000):
     return True
 
 
+def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
+                 out: str = "BENCH_balance.json",
+                 split_factor: float = 1.1) -> dict:
+    """The CI load-balance trajectory (hard gate)."""
+    from repro.core.exec import device_edge_loads
+    from repro.graph import generators as gen
+
+    t0 = time.perf_counter()
+    g = gen.powerlaw(n, avg_deg=8, seed=5, alpha=1.8).symmetrized()
+    gen_s = time.perf_counter() - t0
+    report = {"n": g.n, "m": g.m, "workers": workers, "devices": devices,
+              "split_factor": split_factor, "gen_s": round(gen_s, 2),
+              "gate_max_over_mean": GATE_MAX_OVER_MEAN, "modes": {}}
+
+    results = {}
+    for mode in ("hash", "edges", "split"):
+        t0 = time.perf_counter()
+        # tau=None isolates the partitioner: with mirroring on, Ch_mir
+        # already spreads the hubs' fan-out (Figs. 1-2); without it the
+        # assignment and the split boundaries must carry the skew alone.
+        pg = partition(g, workers, tau=None, seed=0, layout="csr",
+                       balance=mode, split_factor=split_factor)
+        part_s = time.perf_counter() - t0
+        loads = pg.edge_load()
+        ploads = pg.edge_load(phys=True)
+        t0 = time.perf_counter()
+        labels, stats, n_ss = hashmin(pg, use_mirroring=False,
+                                      backend="pallas")
+        run_s = time.perf_counter() - t0
+        cell = {
+            "partition_s": round(part_s, 2),
+            "hashmin_s": round(run_s, 2),
+            "supersteps": int(n_ss),
+            "M_phys": int(pg.M_phys),
+            "worker_load": straggler_report(loads),
+            "phys_load": straggler_report(ploads),
+            "device_load": straggler_report(
+                device_edge_loads(pg, devices)),
+            "msgs_basic": int(stats["msgs_basic"]),
+            "msgs_combined": int(stats["msgs_combined"]),
+            "msgs_total": int(stats["msgs_total"]),
+        }
+        # the cost model's a-priori prediction for this assignment, next
+        # to the realized loads it is supposed to anticipate
+        assign = np.asarray(pg.perm) // pg.n_loc
+        cell["predicted"] = predicted_balance(
+            vertex_cost(g.out_degrees(), workers, None), assign, workers)
+        report["modes"][mode] = cell
+        results[mode] = (pg, np.asarray(labels), stats)
+        print(f"[balance] {mode}: partition {part_s:.1f}s, hashmin "
+              f"{run_s:.1f}s/{int(n_ss)} ss, M_phys={pg.M_phys}, "
+              f"edge-load max/mean={cell['phys_load']['max_over_mean']:.3f}"
+              f" (workers {cell['worker_load']['max_over_mean']:.3f}), "
+              f"device max/mean="
+              f"{cell['device_load']['max_over_mean']:.3f}, "
+              f"msgs={cell['msgs_total']:,d}")
+
+    # --- correctness invariants (identical outputs, honest accounting) --
+    canon = {m: canonical_labels(pg, lab) for m, (pg, lab, _) in
+             results.items()}
+    assert np.array_equal(canon["hash"], canon["edges"]), \
+        "edges balance changed the components"
+    assert np.array_equal(canon["hash"], canon["split"]), \
+        "split balance changed the components"
+    # same assignment => bitwise-identical labels and identical raw counts
+    assert np.array_equal(results["edges"][1], results["split"][1]), \
+        "splitting changed a label bit"
+    assert (report["modes"]["edges"]["msgs_basic"]
+            == report["modes"]["split"]["msgs_basic"]), \
+        "splitting changed the basic message count"
+
+    # --- the hard gate ---------------------------------------------------
+    baseline = report["modes"]["hash"]["phys_load"]["max_over_mean"]
+    split_mm = report["modes"]["split"]["phys_load"]["max_over_mean"]
+    report["gate_ok"] = bool(split_mm <= GATE_MAX_OVER_MEAN)
+    print(f"[balance] GATE: hash baseline max/mean={baseline:.3f} -> "
+          f"split {split_mm:.3f} (gate <= {GATE_MAX_OVER_MEAN})")
+    Path(out).write_text(json.dumps(report, indent=2))
+    print(f"[balance] report -> {out}")
+    assert report["gate_ok"], (
+        f"balance gate FAILED: split per-worker edge-load max_over_mean "
+        f"{split_mm:.3f} > {GATE_MAX_OVER_MEAN}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", action="store_true",
+                    help="run the CI load-balance gate instead of the "
+                         "Fig. 1/2 histograms")
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--split-factor", type=float, default=1.1)
+    ap.add_argument("--out", default="BENCH_balance.json")
+    args = ap.parse_args()
+    if args.gate:
+        balance_gate(n=args.n, workers=args.workers, devices=args.devices,
+                     out=args.out, split_factor=args.split_factor)
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -14,7 +14,7 @@ from repro.algorithms.hashmin import hashmin
 from repro.algorithms.pagerank import pagerank
 from repro.core.cost_model import choose_tau, expected_messages_mirrored
 from repro.graph.structs import partition
-from repro.train.fault import straggler_report
+from repro.core.cost_model import straggler_report
 
 M = 16
 PR_ITERS = 10

@@ -11,7 +11,7 @@ from repro.algorithms.attr_bcast import attribute_broadcast
 from repro.algorithms.msf import msf
 from repro.algorithms.sv import sv
 from repro.graph.structs import partition
-from repro.train.fault import straggler_report
+from repro.core.cost_model import straggler_report
 
 M = 16
 

@@ -19,7 +19,7 @@ from repro.algorithms.sv import sv
 from repro.core.cost_model import choose_tau
 from repro.graph import generators as gen
 from repro.graph.structs import partition
-from repro.train.fault import straggler_report
+from repro.core.cost_model import straggler_report
 
 scale = int(sys.argv[1]) if len(sys.argv) > 1 else 10_000
 M = 16

@@ -38,8 +38,9 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
                                         devices=devices)
     if pg.layout == "csr":
         # sharded csr outputs come back device-concatenated with per-device
-        # padding: strip back to the flat (E,) edge order
-        bounds = exec_mod.csr_device_bounds(pg.all_off, pg.M, devices)
+        # padding: strip back to the flat (E,) edge order (split partitions
+        # place the device boundaries between physical shards)
+        bounds = exec_mod.device_edge_bounds(pg, devices)["all"]
         counts = np.diff(bounds)
         cap = out.shape[0] // devices
         out = jax.numpy.concatenate(

@@ -13,6 +13,14 @@ is a pytree).
 sharded executor in ``core/exec.py``): the step then computes ``halted``
 and the stats with cross-device collectives so the carried halt flag and
 accumulated totals are replicated across the mesh.
+
+Stats contract: every ``per_worker_*`` entry is an (M,) array over the
+*logical* workers.  Split partitions (``balance="split"``) run their
+channels per physical shard, but the channel layer folds shard counts back
+through ``pg.phys_log`` before the stats reach this loop — accumulation
+here never needs to know how many physical shards a worker was split into,
+and histories/totals stay comparable across balance modes and device
+counts.
 """
 from __future__ import annotations
 

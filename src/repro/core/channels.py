@@ -40,6 +40,18 @@ def _reduce_op(op: str, x: jnp.ndarray, axis: int) -> jnp.ndarray:
     return {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op](x, axis=axis)
 
 
+def _flat_worker(pg, kind: str):
+    """(per-edge worker ids, shard->logical map | None) for one flat csr
+    edge set.  Under a split partition the ids are *physical shard* ids —
+    the granularity at which sender-side combining and request dedup
+    physically happen — and the map folds them back to logical workers for
+    crossness tests and ``per_worker_*`` reports."""
+    if getattr(pg, "phys_log", None) is not None:
+        return getattr(pg, f"{kind}_pw"), pg.phys_log
+    src = pg.eg_src if kind == "eg" else pg.all_src
+    return src // pg.n_loc, None
+
+
 # ---------------------------------------------------------------------------
 # Ch_msg: combined push (sender-side combining + all-to-all)
 # ---------------------------------------------------------------------------
@@ -114,7 +126,8 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
                        mask: jnp.ndarray, src_worker: jnp.ndarray,
                        op: str, M: int, n_loc: int,
                        backend: str = "dense",
-                       plan: Optional["planlib.EdgePlan"] = None
+                       plan: Optional["planlib.EdgePlan"] = None,
+                       log_of: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """CSR-layout twin of ``push_combined``: flat (E,) per-edge arrays with
     explicit per-edge source workers instead of the padded (M, K) rows.
@@ -125,21 +138,29 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
     backend="pallas" goes through the precomputed plan (static targets) or
     the flat sorted segmented combine (runtime targets) — the O(M * n_pad)
     partial never materializes.
+
+    Under a split partition ``src_worker`` holds physical shard ids —
+    sender-side combining runs per shard, exactly like a physically split
+    worker's own combiner — and ``log_of`` ((M_src,) shard -> logical map)
+    keeps crossness and the (M,) ``per_worker_*`` report logical.
     """
-    cross = mask & ((targets // n_loc) != src_worker)
+    wlog = src_worker if log_of is None else jnp.asarray(log_of)[src_worker]
+    cross = mask & ((targets // n_loc) != wlog)
     base = {"msgs_basic": cross.sum(),
             "per_worker_basic": jnp.zeros((M,), jnp.int32).at[
-                src_worker].add(cross.astype(jnp.int32))}
+                wlog].add(cross.astype(jnp.int32))}
 
     if backend == "pallas":
         if plan is not None:
             masked = jnp.where(mask, values,
                                identity_of(op, values.dtype))
             inbox, (msgs, per_worker) = planlib.combine_with_plan(
-                plan, masked, op, count_cross=True)
+                plan, masked, op, count_cross=True, log_of=log_of,
+                M_out=M)
         else:
             inbox, (msgs, per_worker) = planlib.combine_sorted_flat(
-                targets, values, mask, src_worker, op, M, n_loc)
+                targets, values, mask, src_worker, op, M, n_loc,
+                log_of=log_of)
         stats = {"msgs_combined": msgs, "per_worker_combined": per_worker}
         stats.update(base)
         return inbox, stats
@@ -149,16 +170,20 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
 
     ident = identity_of(op, values.dtype)
     n_pad = M * n_loc
+    M_src = M if log_of is None else len(log_of)
+    row_log = (jnp.arange(M, dtype=jnp.int32) if log_of is None
+               else jnp.asarray(log_of, jnp.int32))
     idx = src_worker * n_pad + jnp.where(mask, targets, 0)
     v = jnp.where(mask, values, ident)
-    partial = jnp.full((M * n_pad,), ident, values.dtype)
-    partial3 = scatter_op(op, partial, idx, v).reshape(M, M, n_loc)
+    partial = jnp.full((M_src * n_pad,), ident, values.dtype)
+    partial3 = scatter_op(op, partial, idx, v).reshape(M_src, M, n_loc)
 
     sent = partial3 != ident
-    cross3 = sent & ~jnp.eye(M, dtype=bool)[:, :, None]
+    cross3 = sent & (jnp.arange(M)[None, :, None] != row_log[:, None, None])
     stats = {
         "msgs_combined": cross3.sum(),
-        "per_worker_combined": cross3.sum(axis=(1, 2)),
+        "per_worker_combined": jnp.zeros((M,), jnp.int32).at[row_log].add(
+            cross3.sum(axis=(1, 2)).astype(jnp.int32)),
     }
     stats.update(base)
     recv = jnp.swapaxes(partial3, 0, 1)                 # the all-to-all
@@ -240,10 +265,11 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
         src_val = vals.reshape(-1)[esrc]        # esrc is global in csr
         src_act = active.reshape(-1)[esrc]
         v = src_val + ew if relay == "add_w" else src_val
+        worker, log_of = _flat_worker(pg, "eg" if use_mirroring else "all")
         inbox, stats = push_combined_flat(edst, v, emask & src_act,
-                                          esrc // pg.n_loc, op,
+                                          worker, op,
                                           pg.M, pg.n_loc, backend=backend,
-                                          plan=plan)
+                                          plan=plan, log_of=log_of)
     else:
         src_val = vals[jnp.arange(pg.M)[:, None], esrc]
         src_act = active[jnp.arange(pg.M)[:, None], esrc]
@@ -362,7 +388,8 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
 
 def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
                    worker: jnp.ndarray, tmask: jnp.ndarray,
-                   M: int, n_loc: int, dedup: bool = True
+                   M: int, n_loc: int, dedup: bool = True,
+                   log_of: Optional[jnp.ndarray] = None
                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """CSR-layout twin of ``rr_gather``: flat (E,) targets with explicit
     (E,) requesting-worker ids (ragged per-worker request counts).
@@ -371,6 +398,10 @@ def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
     channel's accounting exactly — msgs_rr counts 2 messages per distinct
     remote (worker, target) pair (Theorem 3), per_worker_* charge both the
     requester and the owner, msgs_basic counts every raw remote request.
+
+    Under a split partition ``worker`` holds physical shard ids (each
+    shard deduplicates its own request list) and ``log_of`` maps them back
+    to logical workers for the remote test and the per-worker charges.
     """
     n_pad = M * n_loc
     E = targets.shape[0]
@@ -385,17 +416,19 @@ def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
                  "per_worker_rr": zero_m, "per_worker_basic": zero_m}
         return out, stats
 
+    wlog = worker if log_of is None else jnp.asarray(log_of)[worker]
     owner = jnp.clip(targets // n_loc, 0, M - 1)
-    raw_remote = tmask & ((targets // n_loc) != worker)
+    raw_remote = tmask & ((targets // n_loc) != wlog)
     if dedup:
         # distinct (worker, target) = segment heads of the shared sort
         _, ws, ts, first = planlib.sort_by_worker_target(worker, t)
+        ws_log = ws if log_of is None else jnp.asarray(log_of)[ws]
         uniq = first & (ts < n_pad)
-        remote_u = uniq & (ts // n_loc != ws)
-        u_w, u_owner = ws, jnp.clip(ts // n_loc, 0, M - 1)
+        remote_u = uniq & (ts // n_loc != ws_log)
+        u_w, u_owner = ws_log, jnp.clip(ts // n_loc, 0, M - 1)
     else:
         remote_u = raw_remote
-        u_w, u_owner = worker, owner
+        u_w, u_owner = wlog, owner
     n_rr = remote_u.sum()
     n_basic = raw_remote.sum()
     r32 = remote_u.astype(jnp.int32)
@@ -406,7 +439,7 @@ def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
         "per_worker_rr": (zero_m.at[jnp.where(remote_u, u_w, 0)].add(r32)
                           + zero_m.at[jnp.where(remote_u, u_owner, 0)
                                       ].add(r32)),
-        "per_worker_basic": (zero_m.at[jnp.where(raw_remote, worker, 0)
+        "per_worker_basic": (zero_m.at[jnp.where(raw_remote, wlog, 0)
                                        ].add(b32)
                              + zero_m.at[jnp.where(raw_remote, owner, 0)
                                          ].add(b32)),
@@ -431,11 +464,13 @@ def scatter_combine(vals: jnp.ndarray, targets: jnp.ndarray,
 def scatter_combine_flat(vals: jnp.ndarray, targets: jnp.ndarray,
                          upd: jnp.ndarray, mask: jnp.ndarray,
                          worker: jnp.ndarray, op: str,
-                         M: int, n_loc: int, backend: str = "dense"):
+                         M: int, n_loc: int, backend: str = "dense",
+                         log_of: Optional[jnp.ndarray] = None):
     """CSR twin of ``scatter_combine``: flat (E,) edge-shaped writes with
     explicit per-edge source workers (MSF min-edge election)."""
     inbox, stats = push_combined_flat(targets, upd, mask, worker, op,
-                                      M, n_loc, backend=backend)
+                                      M, n_loc, backend=backend,
+                                      log_of=log_of)
     fn = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}[op]
     return fn(vals, inbox), stats
 
@@ -467,8 +502,9 @@ def gather_edges(pg, vals: jnp.ndarray, targets: jnp.ndarray,
         return exec_mod.gather_edges_sharded(pg, vals, targets, tmask,
                                              dedup)
     if pg.layout == "csr":
-        return rr_gather_flat(vals, targets, pg.all_src // pg.n_loc, tmask,
-                              pg.M, pg.n_loc, dedup)
+        worker, log_of = _flat_worker(pg, "all")
+        return rr_gather_flat(vals, targets, worker, tmask,
+                              pg.M, pg.n_loc, dedup, log_of=log_of)
     return rr_gather(vals, targets, tmask, pg.M, pg.n_loc, dedup)
 
 
@@ -495,8 +531,10 @@ def scatter_edges(pg, base: jnp.ndarray, targets: jnp.ndarray,
         return exec_mod.scatter_edges_sharded(pg, base, targets, upd, mask,
                                               op, backend)
     if pg.layout == "csr":
+        worker, log_of = _flat_worker(pg, "all")
         return scatter_combine_flat(base, targets, upd, mask,
-                                    pg.all_src // pg.n_loc, op,
-                                    pg.M, pg.n_loc, backend=backend)
+                                    worker, op,
+                                    pg.M, pg.n_loc, backend=backend,
+                                    log_of=log_of)
     return scatter_combine(base, targets, upd, mask, op, pg.M, pg.n_loc,
                            backend=backend)

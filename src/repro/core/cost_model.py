@@ -1,4 +1,5 @@
-"""The paper's cost model: Theorems 1-3 and the mirroring threshold.
+"""The paper's cost model: Theorems 1-3, the mirroring threshold, and the
+load-balance model behind ``partition(..., balance=...)``.
 
 Theorem 1: with mirroring, a vertex v delivers a(v) to all neighbors with
            <= min(M, d(v)) messages.
@@ -7,13 +8,24 @@ Theorem 2: mirror v iff d(v) >= tau* = M * exp(deg_avg / M)  (the point
 Theorem 3: request-respond serves l requesters of one target with
            2*min(M, l) messages instead of 2*l.
 
+Load balancing (paper §4 / GraphD): per-worker *edge* load, not vertex
+count, governs superstep wall time.  ``vertex_cost`` prices each vertex as
+local edge storage plus its per-superstep message bound (Theorem 1 for
+mirrored vertices), ``greedy_assign`` packs vertices onto workers LPT-style
+under the block-partition capacity, ``choose_split`` decides how many
+physical shards a still-hot worker needs, and ``contiguous_bounds``
+partitions a run of physical shards over devices minimizing the bottleneck.
+``straggler_report`` quantifies the imbalance that remains (Figs. 1/2).
+
 ``moe_mirror_threshold`` transfers Theorem 2 to expert parallelism: an
 expert whose per-step routed-token load exceeds the threshold is cheaper to
 replicate (mirror) on every EP rank than to keep exchanging tokens.
 """
 from __future__ import annotations
 
+import heapq
 import math
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -52,6 +64,128 @@ def expected_messages_mirrored(deg: np.ndarray, M: int, tau: float) -> float:
 def choose_tau(deg: np.ndarray, M: int) -> int:
     """The cost model's automatic threshold (rounded)."""
     return int(round(mirror_threshold(M, float(deg.mean()))))
+
+
+# ---------------------------------------------------------------------------
+# load-balance model: vertex costs, greedy assignment, hot-worker splitting
+# ---------------------------------------------------------------------------
+
+def vertex_cost(deg: np.ndarray, M: int,
+                tau: Optional[int] = None) -> np.ndarray:
+    """Per-vertex balance cost for ``balance="edges"``: local edge storage
+    (d(v) adjacency entries) plus the per-superstep message bound — the
+    Theorem-1 bound min(M, d(v)) for mirrored vertices (d >= tau), d(v)
+    itself for combined-channel vertices."""
+    deg = np.asarray(deg, np.int64)
+    tau_eff = int(tau) if tau is not None else int(deg.max(initial=0)) + 1
+    msg = np.where(deg >= tau_eff, np.minimum(deg, M), deg)
+    return deg + msg
+
+
+def greedy_assign(cost: np.ndarray, M: int, cap: int) -> np.ndarray:
+    """LPT vertex->worker assignment under the block-partition capacity:
+    vertices in descending cost order each go to the least-loaded worker
+    that still has a free local slot (at most ``cap`` vertices per worker).
+    Returns the (n,) int64 worker id per vertex."""
+    cost = np.asarray(cost, np.int64)
+    n = len(cost)
+    if M * cap < n:
+        raise ValueError(f"capacity {M}x{cap} < {n} vertices")
+    order = np.argsort(-cost, kind="stable")
+    assign = np.empty(n, np.int64)
+    remaining = np.full(M, cap, np.int64)
+    heap = [(0, w) for w in range(M)]
+    for v in order:
+        load, w = heapq.heappop(heap)
+        assign[v] = w
+        remaining[w] -= 1
+        if remaining[w] > 0:
+            heapq.heappush(heap, (load + int(cost[v]), w))
+    return assign
+
+
+def choose_split(edge_load: np.ndarray, split_factor: float = 1.2
+                 ) -> np.ndarray:
+    """Physical shards per worker for ``balance="split"``: a worker whose
+    edge load exceeds ``split_factor x`` the mean splits into
+    ceil(load / (split_factor * mean)) equal-edge-count shards (each shard
+    lands at or below the hot threshold); everyone else stays whole."""
+    load = np.asarray(edge_load, np.float64)
+    k = np.ones(len(load), np.int64)
+    mean = load.mean() if load.size else 0.0
+    if mean <= 0:
+        return k
+    target = split_factor * mean
+    hot = load > target
+    k[hot] = np.ceil(load[hot] / target).astype(np.int64)
+    return k
+
+
+def contiguous_bounds(loads: np.ndarray, D: int) -> np.ndarray:
+    """Partition a run of shard ``loads`` into D contiguous non-empty
+    groups minimizing the max group load (binary search on the bottleneck
+    + greedy feasibility).  Returns (D+1,) shard-index bounds."""
+    loads = np.asarray(loads, np.int64)
+    P = len(loads)
+    if P < D:
+        raise ValueError(f"{P} shards < {D} devices")
+    prefix = np.concatenate([[0], np.cumsum(loads)])
+
+    def bounds_for(cap):
+        b = [0]
+        for d in range(D):
+            s = b[-1]
+            # furthest end within cap that still leaves >=1 shard per
+            # remaining group
+            e_max = P - (D - d - 1)
+            e = int(np.searchsorted(prefix, prefix[s] + cap, side="right")
+                    ) - 1
+            e = min(max(e, s + 1), e_max)
+            b.append(e)
+        return np.asarray(b, np.int64) if b[-1] == P else None
+
+    lo = max(int(loads.max(initial=0)), -(-int(prefix[-1]) // D))
+    hi = int(prefix[-1]) or 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if bounds_for(mid) is None:
+            lo = mid + 1
+        else:
+            hi = mid
+    out = bounds_for(lo)
+    assert out is not None
+    return out
+
+
+def predicted_balance(cost: np.ndarray, assign: np.ndarray,
+                      M: int) -> Dict[str, float]:
+    """Balance predictor: the straggler report the cost model *expects*
+    from an assignment, before any graph arrays are built."""
+    loads = np.bincount(np.asarray(assign), weights=np.asarray(cost,
+                                                               np.float64),
+                        minlength=M)
+    return straggler_report(loads)
+
+
+def straggler_report(per_worker_msgs: np.ndarray) -> Dict[str, float]:
+    """Imbalance metrics for a per-worker load histogram (Figs. 1/2):
+    a worker 2x over the mean is a 2x straggler in a synchronous step."""
+    m = np.asarray(per_worker_msgs, np.float64)
+    mean = m.mean() if m.size else 0.0
+    return {
+        "max_over_mean": float(m.max() / mean) if mean > 0 else 0.0,
+        "cv": float(m.std() / mean) if mean > 0 else 0.0,
+        "gini": _gini(m),
+    }
+
+
+def _gini(x: np.ndarray) -> float:
+    if x.sum() == 0:
+        return 0.0
+    xs = np.sort(x)
+    n = len(xs)
+    cum = np.cumsum(xs)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
 
 
 # ---------------------------------------------------------------------------

@@ -41,8 +41,21 @@ float round-off of the exchange reduction) and *every* ``msgs_*`` /
 The flat CSR edge arrays are consumed per shard: each device receives the
 contiguous slice of edges owned by its workers (edges are stored sorted by
 owner), padded to the per-device maximum — O(E/D + M + n/D) per device,
-never the padded (M, E_hot) wall.  Hot-worker splitting in a future PR is
-"re-shard the csr offsets": only the device boundaries move.
+never the padded (M, E_hot) wall.
+
+Load balancing (``partition(..., balance="split")``): the partition's
+*physical shards* (hot workers split by csr row-offset boundaries) become
+the unit of device placement — ``device_edge_bounds`` packs contiguous
+shard runs onto devices minimizing the bottleneck edge load, so device
+boundaries are edge-balanced instead of worker-aligned.  A logical
+worker's shards may then land on different devices while its vertex state
+stays block-sharded, so the split executor (a) reads source values through
+an ``all_gather`` of the state shards, (b) keys sender-side combining and
+request dedup by physical shard (a shard never straddles devices, so
+per-device accounting composes exactly), and (c) joins inboxes through the
+op-matched global-buffer all-reduce — min/max results stay bitwise
+identical to the single-device split simulation and every stat
+integer-exact.
 """
 from __future__ import annotations
 
@@ -56,6 +69,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import bsp
+from repro.core import cost_model
 from repro.core import plan as planlib
 from repro.core.channels import _dedup_row, _reduce_op
 from repro.core.plan import identity_of, scatter_op
@@ -121,25 +135,42 @@ class TracedPlan:
 def _device_plans(pg, D: int, kind: str, nb: int):
     """One EdgePlan per device covering that device's workers' edges, with
     *global* source-worker ids in ``seg_worker`` (message accounting) and
-    *global* destination blocks (the exchange address space)."""
+    *global* destination blocks (the exchange address space).  For a split
+    partition the device slices follow the physical-shard bounds and
+    ``seg_worker`` holds shard ids (combining granularity)."""
     M, n_loc = pg.M, pg.n_loc
     m = M // D
+    split = _is_split(pg)
+    dbounds = device_edge_bounds(pg, D) if split else None
 
     def build(d, eb):
         if pg.layout == "csr":
+            M_src = pg.M_phys if split else M
             if kind in ("eg", "all"):
                 src = np.asarray(pg.eg_src if kind == "eg" else pg.all_src)
                 dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)
-                off = pg.eg_off if kind == "eg" else pg.all_off
-                s, e = int(off[d * m]), int(off[(d + 1) * m])
+                if split:
+                    s, e = int(dbounds[kind][d]), int(dbounds[kind][d + 1])
+                    pw = np.asarray(pg.eg_pw if kind == "eg"
+                                    else pg.all_pw)
+                    sw = pw[s:e]
+                else:
+                    off = pg.eg_off if kind == "eg" else pg.all_off
+                    s, e = int(off[d * m]), int(off[(d + 1) * m])
+                    sw = src[s:e] // n_loc
                 return planlib.build_edge_plan_flat(
-                    src[s:e] // n_loc, dst[s:e] // n_loc, dst[s:e] % n_loc,
-                    M, M, n_loc, nb, eb)
+                    sw, dst[s:e] // n_loc, dst[s:e] % n_loc,
+                    M_src, M, n_loc, nb, eb)
             edst = np.asarray(pg.mir_edst)
-            s, e = int(pg.mir_eoff[d * m]), int(pg.mir_eoff[(d + 1) * m])
+            if split:
+                s, e = int(dbounds["mir"][d]), int(dbounds["mir"][d + 1])
+                sw = np.asarray(pg.mir_pw)[s:e]
+            else:
+                s, e = int(pg.mir_eoff[d * m]), int(pg.mir_eoff[(d + 1) * m])
+                sw = edst[s:e] // n_loc
             return planlib.build_edge_plan_flat(
-                edst[s:e] // n_loc, edst[s:e] // n_loc, edst[s:e] % n_loc,
-                M, M, n_loc, nb, eb)
+                sw, edst[s:e] // n_loc, edst[s:e] % n_loc,
+                M_src, M, n_loc, nb, eb)
         sl = slice(d * m, (d + 1) * m)
         if kind in ("eg", "all"):
             dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)[sl]
@@ -202,6 +233,37 @@ def csr_device_bounds(off: np.ndarray, M: int, D: int) -> np.ndarray:
     return np.asarray(off)[np.arange(0, M + 1, m)]
 
 
+def _is_split(pg) -> bool:
+    return getattr(pg, "phys_log", None) is not None
+
+
+def device_edge_bounds(pg, D: int) -> Dict[str, np.ndarray]:
+    """Per-device (D+1,) edge bounds for each csr edge set.
+
+    Default partitions place boundaries at worker multiples (m = M/D
+    workers per device).  Split partitions place them between *physical
+    shards*, packed contiguously to minimize the bottleneck per-device
+    eg+mir edge load (``"phys"`` holds the shard-index bounds)."""
+    if _is_split(pg):
+        loads = np.diff(pg.phys_eg_off) + np.diff(pg.phys_mir_off)
+        pb = cost_model.contiguous_bounds(loads, D)
+        return {"phys": pb,
+                "eg": np.asarray(pg.phys_eg_off)[pb],
+                "all": np.asarray(pg.phys_all_off)[pb],
+                "mir": np.asarray(pg.phys_mir_off)[pb]}
+    return {"phys": None,
+            "eg": csr_device_bounds(pg.eg_off, pg.M, D),
+            "all": csr_device_bounds(pg.all_off, pg.M, D),
+            "mir": csr_device_bounds(pg.mir_eoff, pg.M, D)}
+
+
+def device_edge_loads(pg, D: int) -> np.ndarray:
+    """(D,) per-device superstep edge load (Ch_msg + mirror fan-out) the
+    mesh placement yields — the number the bench-balance gate watches."""
+    b = device_edge_bounds(pg, D)
+    return np.diff(b["eg"]) + np.diff(b["mir"])
+
+
 def _pad_device_slices(arr: np.ndarray, bounds: np.ndarray, pad_row):
     """Slice a flat (E,) array at ``bounds`` into (D, cap) with per-device
     padding values ``pad_row[d]``; also returns the validity mask."""
@@ -222,17 +284,29 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
     """Build the device-stacked array pytree + matching PartitionSpecs."""
     M, n_loc = pg.M, pg.n_loc
     m = M // D
+    split = _is_split(pg)
     arrays: Dict = {"vmask": pg.vmask, "deg": pg.deg,
                     "mir_ids": pg.mir_ids, "mir_nworkers": pg.mir_nworkers}
     specs: Dict = {"vmask": P(AXIS), "deg": P(AXIS),
                    "mir_ids": P(), "mir_nworkers": P()}
     meta = {"M": M, "n_loc": n_loc, "D": D, "m_loc": m, "n": pg.n,
-            "tau": pg.tau, "layout": pg.layout, "plan_meta": {}}
+            "tau": pg.tau, "layout": pg.layout, "split": split,
+            "plan_meta": {}}
 
     if pg.layout == "csr":
+        dbounds = device_edge_bounds(pg, D) if split else None
+        if split:
+            pb = dbounds["phys"]
+            meta["M_phys"] = pg.M_phys
+            meta["p_bounds"] = pb
+            meta["P_loc"] = int(np.diff(pb).max())
+            meta["device_edge_load"] = device_edge_loads(pg, D)
+            arrays["phys_log"] = jnp.asarray(pg.phys_log, jnp.int32)
+            specs["phys_log"] = P()
         base = np.arange(D) * m * n_loc        # a safe in-range pad id
         for name, off_name in (("eg", "eg_off"), ("all", "all_off")):
-            off = csr_device_bounds(getattr(pg, off_name), M, D)
+            off = (dbounds[name] if split
+                   else csr_device_bounds(getattr(pg, off_name), M, D))
             src, vs = _pad_device_slices(
                 np.asarray(getattr(pg, f"{name}_src")), off, base)
             dst, _ = _pad_device_slices(
@@ -245,7 +319,13 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
             arrays[f"{name}_mask"] = vs
             specs.update({f"{name}_src": P(AXIS), f"{name}_dst": P(AXIS),
                           f"{name}_w": P(AXIS), f"{name}_mask": P(AXIS)})
-        off = csr_device_bounds(pg.mir_eoff, M, D)
+            if split:
+                pw, _ = _pad_device_slices(
+                    np.asarray(getattr(pg, f"{name}_pw")), off, pb[:-1])
+                arrays[f"{name}_pw"] = pw
+                specs[f"{name}_pw"] = P(AXIS)
+        off = (dbounds["mir"] if split
+               else csr_device_bounds(pg.mir_eoff, M, D))
         esrc, vs = _pad_device_slices(np.asarray(pg.mir_esrc), off,
                                       np.zeros(D))
         edst, _ = _pad_device_slices(np.asarray(pg.mir_edst), off, base)
@@ -253,6 +333,10 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
         arrays.update(mir_esrc=esrc, mir_edst=edst, mir_ew=ew, mir_emask=vs)
         specs.update(mir_esrc=P(AXIS), mir_edst=P(AXIS), mir_ew=P(AXIS),
                      mir_emask=P(AXIS))
+        if split:
+            pw, _ = _pad_device_slices(np.asarray(pg.mir_pw), off, pb[:-1])
+            arrays["mir_pw"] = pw
+            specs["mir_pw"] = P(AXIS)
     else:
         for name in ("eg_src", "eg_dst", "eg_mask", "eg_w",
                      "all_src", "all_dst", "all_mask", "all_w",
@@ -309,10 +393,30 @@ class ShardedGraph:
     mir_emask: jnp.ndarray
     mir_ew: jnp.ndarray
     plans: Dict[str, TracedPlan] = dataclasses.field(default_factory=dict)
+    # split partitions (physical shards as the device placement unit):
+    split: bool = False
+    M_phys: int = 0
+    P_loc: int = 0                      # max shards per device
+    p0: Optional[jnp.ndarray] = None    # first shard id of this device
+    phys_log: Optional[jnp.ndarray] = None   # replicated (M_phys,)
+    eg_pw: Optional[jnp.ndarray] = None      # device-local per-edge shards
+    all_pw: Optional[jnp.ndarray] = None
+    mir_pw: Optional[jnp.ndarray] = None
 
     @property
     def n_pad(self) -> int:
         return self.M * self.n_loc
+
+    def log_of(self, worker: jnp.ndarray) -> jnp.ndarray:
+        """Physical shard ids -> logical worker ids (identity when the
+        partition is not split)."""
+        return self.phys_log[worker] if self.split else worker
+
+    def gather_state(self, vals: jnp.ndarray) -> jnp.ndarray:
+        """Replicate the (m_loc, n_loc) state shard to the full (M, n_loc)
+        array — split partitions read source values globally because a
+        device's edge slice can come from remote logical workers."""
+        return jax.lax.all_gather(vals, self.axis, axis=0, tiled=True)
 
     def local_ids(self) -> jnp.ndarray:
         return ((self.w0 + jnp.arange(self.m_loc))[:, None] * self.n_loc
@@ -336,6 +440,8 @@ class ShardedGraph:
 
     def edge_src_values(self, state, src):
         if self.layout == "csr":
+            if self.split:
+                return self.gather_state(state).reshape(-1)[src]
             return state.reshape(-1)[src - self.w0 * self.n_loc]
         return state[jnp.arange(self.m_loc)[:, None], src]
 
@@ -343,7 +449,8 @@ class ShardedGraph:
 def _make_sg(meta, a) -> ShardedGraph:
     layout = meta["layout"]
     m = meta["m_loc"]
-    w0 = jax.lax.axis_index(AXIS).astype(jnp.int32) * m
+    d = jax.lax.axis_index(AXIS).astype(jnp.int32)
+    w0 = d * m
 
     def loc(name):
         # csr edge leaves arrive as (1, cap) device rows; padded rows as
@@ -366,6 +473,14 @@ def _make_sg(meta, a) -> ShardedGraph:
             row_seg=a[f"plan_{kind}_row_seg"][0],
             seg_blk=a[f"plan_{kind}_seg_blk"][0],
             seg_worker=a[f"plan_{kind}_seg_worker"][0])
+    split = meta.get("split", False)
+    extra = {}
+    if split:
+        extra = dict(
+            split=True, M_phys=meta["M_phys"], P_loc=meta["P_loc"],
+            p0=jnp.asarray(meta["p_bounds"][:-1], jnp.int32)[d],
+            phys_log=a["phys_log"], eg_pw=loc("eg_pw"),
+            all_pw=loc("all_pw"), mir_pw=loc("mir_pw"))
     return ShardedGraph(
         M=meta["M"], n_loc=meta["n_loc"], m_loc=m, D=meta["D"],
         n=meta["n"], tau=meta["tau"], layout=layout, axis=AXIS, w0=w0,
@@ -377,7 +492,7 @@ def _make_sg(meta, a) -> ShardedGraph:
         mir_ids=a["mir_ids"], mir_nworkers=a["mir_nworkers"],
         mir_esrc=loc("mir_esrc"), mir_edst=loc("mir_edst"),
         mir_emask=loc("mir_emask"), mir_ew=loc("mir_ew"),
-        plans=plans)
+        plans=plans, **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -440,10 +555,11 @@ def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
 
     stats = None
     if count_cross:
+        seg_log = sg.log_of(plan.seg_worker)
         owner = plan.seg_blk // plan.B_per_w
-        cross = (seg_out != ident) & (owner != plan.seg_worker)[:, None]
+        cross = (seg_out != ident) & (owner != seg_log)[:, None]
         msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
-        per_worker = jnp.zeros((sg.M,), jnp.int32).at[plan.seg_worker].add(
+        per_worker = jnp.zeros((sg.M,), jnp.int32).at[seg_log].add(
             cross.sum(axis=1).astype(jnp.int32))
         stats = (msgs, jax.lax.psum(per_worker, sg.axis))
     return inbox, stats
@@ -474,8 +590,8 @@ def _combine_sorted_rows_sharded(sg: ShardedGraph, targets, values, mask,
 def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
                                  worker, op: str):
     """Flat-csr twin: ``plan.sorted_segments_flat`` on the local (E_dev,)
-    edges (source workers already global), all-reduce exchange, local
-    slice."""
+    edges (source workers already global — physical shard ids under a
+    split partition), all-reduce exchange, local slice."""
     n_pad = sg.n_pad
     real, seg_t, seg_val, seg_w, ident = planlib.sorted_segments_flat(
         targets, values, mask, worker, op, n_pad)
@@ -485,9 +601,10 @@ def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
                      jnp.where(real, seg_val, ident))
     inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
 
-    cross = real & (seg_val != ident) & (seg_t // sg.n_loc != seg_w)
+    seg_log = sg.log_of(jnp.where(real, seg_w, 0))
+    cross = real & (seg_val != ident) & (seg_t // sg.n_loc != seg_log)
     msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
-    per_worker = _scatter_workers(sg, seg_w, cross)
+    per_worker = _scatter_workers(sg, seg_log, cross)
     return inbox, (msgs, per_worker)
 
 
@@ -537,11 +654,14 @@ def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
                                worker, op: str, backend: str = "dense",
                                plan: Optional[TracedPlan] = None):
     """Sharded Ch_msg, csr layout: local flat (E_dev,) edges with global
-    per-edge source workers."""
+    per-edge source workers (physical shard ids under a split partition —
+    a shard never straddles devices, so the per-device distinct-pair
+    accounting composes exactly across any device count)."""
     ident = identity_of(op, values.dtype)
-    raw_cross = mask & ((targets // sg.n_loc) != worker)
+    wlog = sg.log_of(worker)
+    raw_cross = mask & ((targets // sg.n_loc) != wlog)
     base = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
-            "per_worker_basic": _scatter_workers(sg, worker, raw_cross)}
+            "per_worker_basic": _scatter_workers(sg, wlog, raw_cross)}
 
     if backend == "pallas":
         if plan is not None:
@@ -556,6 +676,33 @@ def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
         return inbox, stats
 
     n_pad = sg.n_pad
+    if sg.split:
+        # device boundaries sit between physical shards, not at worker
+        # multiples: the per-source partial is keyed by local shard and
+        # the join is the op-matched global-buffer all-reduce (the
+        # all_to_all needs a uniform per-device source count).
+        lp = jnp.clip(worker - sg.p0, 0, sg.P_loc - 1)
+        idx = lp * n_pad + jnp.where(mask, targets, 0)
+        v = jnp.where(mask, values, ident)
+        partial = jnp.full((sg.P_loc * n_pad,), ident, values.dtype)
+        partial3 = scatter_op(op, partial, idx, v).reshape(sg.P_loc, sg.M,
+                                                           sg.n_loc)
+        sent = partial3 != ident
+        row_log = sg.phys_log[jnp.clip(sg.p0 + jnp.arange(sg.P_loc),
+                                       0, sg.M_phys - 1)]
+        cross3 = sent & (jnp.arange(sg.M)[None, :, None]
+                         != row_log[:, None, None])
+        per_worker = jnp.zeros((sg.M,), jnp.int32).at[row_log].add(
+            cross3.sum(axis=(1, 2)).astype(jnp.int32))
+        stats = {
+            "msgs_combined": jax.lax.psum(cross3.sum(), sg.axis),
+            "per_worker_combined": jax.lax.psum(per_worker, sg.axis),
+        }
+        stats.update(base)
+        buf = _reduce_op(op, partial3, axis=0).reshape(-1)
+        inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+        return inbox, stats
+
     idx = (worker - sg.w0) * n_pad + jnp.where(mask, targets, 0)
     v = jnp.where(mask, values, ident)
     partial = jnp.full((sg.m_loc * n_pad,), ident, values.dtype)
@@ -594,13 +741,20 @@ def push_mirror_sharded(sg: ShardedGraph, vals, active, op: str,
     ev = raw + sg.mir_ew if relay == "add_w" else raw
     ev = jnp.where(sg.mir_emask & (raw != ident), ev, ident)
     if backend == "pallas":
+        # split partitions can hold mirror edges whose destination worker
+        # lives on another device: exchange the destination blocks
         inbox, _ = _combine_with_plan_sharded(
             sg, sg.plans["mir"], ev.reshape(-1), op,
-            count_cross=False, exchange=False)
+            count_cross=False, exchange=sg.split)
     elif sg.layout == "csr":
-        buf = jnp.full((m_slots,), ident, vals.dtype)
-        inbox = scatter_op(op, buf, sg.mir_edst - sg.w0 * sg.n_loc,
-                           ev).reshape(sg.m_loc, sg.n_loc)
+        if sg.split:
+            buf = jnp.full((n_pad,), ident, vals.dtype)
+            buf = scatter_op(op, buf, sg.mir_edst, ev)
+            inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+        else:
+            buf = jnp.full((m_slots,), ident, vals.dtype)
+            inbox = scatter_op(op, buf, sg.mir_edst - sg.w0 * sg.n_loc,
+                               ev).reshape(sg.m_loc, sg.n_loc)
     else:
         def fan_out(edst, emask, ev_row):
             buf = jnp.full((sg.n_loc,), ident, vals.dtype)
@@ -628,12 +782,20 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
     plan = (sg.plans.get("eg" if use_mirroring else "all")
             if backend == "pallas" else None)
     if sg.layout == "csr":
-        loc_src = esrc - sg.w0 * sg.n_loc
-        src_val = vals.reshape(-1)[loc_src]
-        src_act = active.reshape(-1)[loc_src]
+        if sg.split:
+            # edge-balanced device bounds: sources can be remote workers
+            allv = sg.gather_state(vals).reshape(-1)
+            alla = sg.gather_state(active).reshape(-1)
+            src_val, src_act = allv[esrc], alla[esrc]
+            worker = sg.eg_pw if use_mirroring else sg.all_pw
+        else:
+            loc_src = esrc - sg.w0 * sg.n_loc
+            src_val = vals.reshape(-1)[loc_src]
+            src_act = active.reshape(-1)[loc_src]
+            worker = esrc // sg.n_loc
         v = src_val + ew if relay == "add_w" else src_val
         inbox, stats = push_combined_flat_sharded(
-            sg, edst, v, emask & src_act, esrc // sg.n_loc, op,
+            sg, edst, v, emask & src_act, worker, op,
             backend=backend, plan=plan)
     else:
         src_val = vals[jnp.arange(sg.m_loc)[:, None], esrc]
@@ -695,7 +857,8 @@ def gather_edges_sharded(sg: ShardedGraph, vals, targets, tmask,
     if sg.layout != "csr":
         return gather_sharded(sg, vals, targets, tmask, dedup)
     n_pad = sg.n_pad
-    worker = sg.all_src // sg.n_loc
+    worker = sg.all_pw if sg.split else sg.all_src // sg.n_loc
+    wlog = sg.log_of(worker)
     allv = jax.lax.all_gather(vals, sg.axis, axis=0, tiled=True)
     t = jnp.where(tmask, targets, n_pad)
     ok = tmask & (t < n_pad)
@@ -703,21 +866,22 @@ def gather_edges_sharded(sg: ShardedGraph, vals, targets, tmask,
                     jnp.zeros((), vals.dtype))
     # (no E == 0 case: _pad_device_slices guarantees cap >= 1)
     owner = jnp.clip(targets // sg.n_loc, 0, sg.M - 1)
-    raw_remote = tmask & ((targets // sg.n_loc) != worker)
+    raw_remote = tmask & ((targets // sg.n_loc) != wlog)
     if dedup:
         _, ws, ts, first = planlib.sort_by_worker_target(worker, t)
+        ws_log = sg.log_of(ws)
         uniq = first & (ts < n_pad)
-        remote_u = uniq & (ts // sg.n_loc != ws)
-        u_w, u_owner = ws, jnp.clip(ts // sg.n_loc, 0, sg.M - 1)
+        remote_u = uniq & (ts // sg.n_loc != ws_log)
+        u_w, u_owner = ws_log, jnp.clip(ts // sg.n_loc, 0, sg.M - 1)
     else:
         remote_u = raw_remote
-        u_w, u_owner = worker, owner
+        u_w, u_owner = wlog, owner
     stats = {
         "msgs_rr": 2 * jax.lax.psum(remote_u.sum(), sg.axis),
         "msgs_basic": 2 * jax.lax.psum(raw_remote.sum(), sg.axis),
         "per_worker_rr": (_scatter_workers(sg, u_w, remote_u)
                           + _scatter_workers(sg, u_owner, remote_u)),
-        "per_worker_basic": (_scatter_workers(sg, worker, raw_remote)
+        "per_worker_basic": (_scatter_workers(sg, wlog, raw_remote)
                              + _scatter_workers(sg, owner, raw_remote)),
     }
     return out, stats
@@ -747,10 +911,11 @@ def scatter_edges_sharded(sg: ShardedGraph, base, targets, upd, mask,
     if sg.layout != "csr":
         return scatter_state_sharded(sg, base, targets, upd, mask, op,
                                      backend)
-    worker = sg.all_src // sg.n_loc
-    raw_cross = mask & ((targets // sg.n_loc) != worker)
+    worker = sg.all_pw if sg.split else sg.all_src // sg.n_loc
+    wlog = sg.log_of(worker)
+    raw_cross = mask & ((targets // sg.n_loc) != wlog)
     bstats = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
-              "per_worker_basic": _scatter_workers(sg, worker, raw_cross)}
+              "per_worker_basic": _scatter_workers(sg, wlog, raw_cross)}
     inbox, (msgs, pw) = _combine_sorted_flat_sharded(sg, targets, upd,
                                                      mask, worker, op)
     stats = {"msgs_combined": msgs, "per_worker_combined": pw}

@@ -258,24 +258,33 @@ def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
 
 
 def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
-                      count_cross: bool = True
+                      count_cross: bool = True,
+                      log_of: Optional[np.ndarray] = None,
+                      M_out: Optional[int] = None
                       ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
     """Combine per-edge values (flattened (M_src*E,)) into a (M_dst, n_loc)
     inbox.  Returns (inbox, (msgs_combined, per_worker_combined) | None);
     the count is the paper's combined-message metric: distinct (source
     worker, destination vertex) pairs with a non-identity combined value,
     destination owned by another worker.
+
+    Plans built from a *split* partition key their segments by physical
+    shard (combining runs per shard); ``log_of`` then maps shard ids back
+    to logical workers — a message is cross iff it leaves the *logical*
+    worker, and ``per_worker_combined`` is reported over the ``M_out``
+    logical workers.
     """
     assert flat_vals.ndim == 1, "pass per-edge values flattened"
     if plan.n_rows:
         assert int(plan.row_gather.max()) < flat_vals.shape[0], \
             "plan does not match this edge set"
+    M_out = M_out if M_out is not None else plan.M_src
     ident = identity_of(op, flat_vals.dtype)
     if plan.n_rows == 0:
         inbox = jnp.full((plan.M_dst, plan.n_loc), ident, flat_vals.dtype)
         if count_cross:
             return inbox, (jnp.zeros((), jnp.int32),
-                           jnp.zeros((plan.M_src,), jnp.int32))
+                           jnp.zeros((M_out,), jnp.int32))
         return inbox, None
 
     packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
@@ -290,11 +299,13 @@ def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
 
     stats = None
     if count_cross:
+        seg_log = (plan.seg_worker if log_of is None
+                   else np.asarray(log_of)[plan.seg_worker])
         owner = plan.seg_blk // plan.B_per_w
-        cross = (seg_out != ident) & (owner != plan.seg_worker)[:, None]
+        cross = (seg_out != ident) & (owner != seg_log)[:, None]
         msgs = cross.sum().astype(jnp.int32)
-        per_worker = jnp.zeros((plan.M_src,), jnp.int32).at[
-            plan.seg_worker].add(cross.sum(axis=1).astype(jnp.int32))
+        per_worker = jnp.zeros((M_out,), jnp.int32).at[
+            seg_log].add(cross.sum(axis=1).astype(jnp.int32))
         stats = (msgs, per_worker)
     return inbox, stats
 
@@ -401,14 +412,19 @@ def sorted_segments_flat(targets: jnp.ndarray, values: jnp.ndarray,
 
 def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
                         mask: jnp.ndarray, src_worker: jnp.ndarray,
-                        op: str, M: int, n_loc: int
+                        op: str, M: int, n_loc: int,
+                        log_of: Optional[np.ndarray] = None
                         ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray,
                                                       jnp.ndarray]]:
     """CSR twin of ``combine_sorted``: flat (E,) targets/values/mask with
     explicit per-edge source workers.  Sort by (worker, target), then a
     segmented reduce and one flat (n_pad,) scatter.  Combined counts are
     identical to the dense path (distinct non-identity (source worker,
-    destination vertex) pairs, destination remote)."""
+    destination vertex) pairs, destination remote).
+
+    With a split partition ``src_worker`` holds physical shard ids (the
+    combining granularity) and ``log_of`` maps them to the (M,) logical
+    workers for crossness and the per-worker report."""
     ident = identity_of(op, values.dtype)
     n_pad = M * n_loc
     if targets.shape[0] == 0:
@@ -422,10 +438,11 @@ def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
                      jnp.where(real, seg_val, ident))
     inbox = buf.reshape(M, n_loc)
 
-    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_w)
+    seg_log = seg_w if log_of is None else jnp.asarray(log_of)[seg_w]
+    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_log)
     msgs = cross.sum().astype(jnp.int32)
     per_worker = jnp.zeros((M,), jnp.int32).at[
-        jnp.where(cross, seg_w, 0)].add(cross.astype(jnp.int32))
+        jnp.where(cross, seg_log, 0)].add(cross.astype(jnp.int32))
     return inbox, (msgs, per_worker)
 
 
@@ -446,18 +463,26 @@ def get_plan(pg, kind: str, nb: Optional[int] = None,
     if kind not in ("eg", "all", "mir"):
         raise ValueError(f"unknown plan kind: {kind!r}")
     if getattr(pg, "layout", "padded") == "csr":
-        # flat edges feed the packer directly: no padded unpack, no mask
+        # flat edges feed the packer directly: no padded unpack, no mask.
+        # A split partition combines per *physical shard*: the plan's
+        # source-worker axis becomes the shard id (callers fold stats back
+        # to logical workers through pg.phys_log).
+        split = getattr(pg, "phys_log", None) is not None
+        M_src = pg.M_phys if split else pg.M
         if kind in ("eg", "all"):
             src = np.asarray(pg.eg_src if kind == "eg" else pg.all_src)
             dst = np.asarray(pg.eg_dst if kind == "eg" else pg.all_dst)
-            plan = build_edge_plan_flat(src // pg.n_loc, dst // pg.n_loc,
-                                        dst % pg.n_loc, pg.M, pg.M,
+            sw = (np.asarray(pg.eg_pw if kind == "eg" else pg.all_pw)
+                  if split else src // pg.n_loc)
+            plan = build_edge_plan_flat(sw, dst // pg.n_loc,
+                                        dst % pg.n_loc, M_src, pg.M,
                                         pg.n_loc, nb, eb)
         else:
             # mirror fan-out is local: source worker == hosting worker
             edst = np.asarray(pg.mir_edst)
-            plan = build_edge_plan_flat(edst // pg.n_loc, edst // pg.n_loc,
-                                        edst % pg.n_loc, pg.M, pg.M,
+            sw = (np.asarray(pg.mir_pw) if split else edst // pg.n_loc)
+            plan = build_edge_plan_flat(sw, edst // pg.n_loc,
+                                        edst % pg.n_loc, M_src, pg.M,
                                         pg.n_loc, nb, eb)
     elif kind == "eg":
         dst = np.asarray(pg.eg_dst)

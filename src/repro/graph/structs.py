@@ -22,9 +22,27 @@ Two edge layouts are supported (``partition(..., layout=...)``):
   ``src // n_loc``) and ``mir_edst`` holds *global* destination ids
   (hosting worker derivable the same way).
 
-Vertex ids are relabeled by a random permutation at partition time and then
-block-partitioned: ``owner(v) = v // n_loc`` — distributionally identical to
-Pregel's hash partitioning with O(1) owner computation.
+Vertex ids are relabeled at partition time and then block-partitioned:
+``owner(v) = v // n_loc`` with O(1) owner computation.  The relabeling is
+the load-balancing knob (``partition(..., balance=...)``):
+
+* ``"hash"``  — a random permutation: distributionally identical to
+  Pregel's hash partitioning (the reference baseline).
+* ``"edges"`` — greedy edge-count-balanced assignment: vertices are priced
+  by ``core/cost_model.vertex_cost`` (local edges + the Theorem-1 message
+  bound) and packed LPT-style onto workers, each worker's vertices taking
+  consecutive ids in its block.  Fixes multi-vertex skew; a single vertex
+  hotter than a whole worker's fair share still creates a straggler.
+* ``"split"`` — ``"edges"`` plus hot-worker splitting (csr layout only):
+  workers whose edge load exceeds ``split_factor x`` the mean are split
+  into equal-edge-count *physical shards* by moving csr row-offset
+  boundaries (``phys_*_off`` refine the per-worker offsets; ``phys_log``
+  maps shards back to logical workers).  Sender-side combining and the
+  Theorem-3 request dedup then run per physical shard — exactly what a
+  real deployment's split worker does — while cross-worker message stats
+  stay reported per *logical* worker, and ``core/exec.py`` places device
+  boundaries between shards so per-device edge loads balance even under
+  extreme degree skew.
 """
 from __future__ import annotations
 
@@ -34,7 +52,10 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import cost_model
+
 LAYOUTS = ("padded", "csr")
+BALANCES = ("hash", "edges", "split")
 
 
 @dataclasses.dataclass
@@ -127,6 +148,20 @@ class PartitionedGraph:
     all_off: Optional[np.ndarray] = None
     mir_eoff: Optional[np.ndarray] = None
 
+    # -- load balancing (partition(..., balance=...)) ---------------------
+    balance: str = "hash"
+    split_factor: float = 1.2
+    # physical worker axis (balance="split"): hot workers are split into
+    # equal-edge-count shards; M_phys == M and phys_log is None otherwise.
+    M_phys: int = 0
+    phys_log: Optional[np.ndarray] = None      # (M_phys,) logical worker
+    phys_eg_off: Optional[np.ndarray] = None   # (M_phys+1,) refined offsets
+    phys_all_off: Optional[np.ndarray] = None
+    phys_mir_off: Optional[np.ndarray] = None
+    eg_pw: Optional[jnp.ndarray] = None        # per-edge physical shard ids
+    all_pw: Optional[jnp.ndarray] = None
+    mir_pw: Optional[jnp.ndarray] = None
+
     # lazily-built message plans (core/plan.py), keyed (kind, nb, eb);
     # per-instance scratch, never part of equality or the pytree.
     plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -135,6 +170,19 @@ class PartitionedGraph:
     @property
     def n_pad(self) -> int:
         return self.M * self.n_loc
+
+    def edge_load(self, phys: bool = False) -> np.ndarray:
+        """Per-worker edge load: Ch_msg edges stored at the source worker
+        plus mirror fan-out edges at the hosting worker (== the full
+        adjacency count when mirroring is off).  ``phys=True`` returns the
+        per-physical-shard loads of a split partition."""
+        if self.layout == "csr":
+            if phys and self.phys_log is not None:
+                return (np.diff(self.phys_eg_off)
+                        + np.diff(self.phys_mir_off))
+            return np.diff(self.eg_off) + np.diff(self.mir_eoff)
+        return (np.asarray(self.eg_mask).sum(axis=1)
+                + np.asarray(self.mir_emask).sum(axis=1)).astype(np.int64)
 
     def local_ids(self) -> jnp.ndarray:
         """(M, n_loc) global id of each local slot."""
@@ -180,9 +228,54 @@ def _pad_rows(rows, pad_val, dtype):
     return out, mask
 
 
+def _balanced_perm(g: Graph, M: int, n_loc: int, tau: Optional[int]
+                   ) -> np.ndarray:
+    """Edge-balanced relabeling: LPT-assign vertices to workers by the
+    cost model, then give each worker's vertices consecutive new ids in
+    its block (``owner(v) = v // n_loc`` still holds; blocks may have
+    trailing unused slots)."""
+    deg = np.bincount(g.src, minlength=g.n)
+    cost = cost_model.vertex_cost(deg, M, tau)
+    assign = cost_model.greedy_assign(cost, M, n_loc)
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=M)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(g.n, dtype=np.int64) - np.repeat(starts, counts)
+    perm = np.empty(g.n, np.int64)
+    perm[order] = assign[order] * n_loc + pos
+    return perm
+
+
+def canonical_labels(pg: PartitionedGraph, labels) -> np.ndarray:
+    """Group labels computed in *relabeled* space (e.g. Hash-Min / S-V
+    component ids, which are min relabeled ids) -> per-original-vertex
+    canonical representative: the min ORIGINAL id of each group.  Makes
+    results comparable across balance modes, which permute differently."""
+    flat = np.asarray(labels).reshape(-1)
+    lab = flat[pg.perm]
+    uniq, inv = np.unique(lab, return_inverse=True)
+    rep = np.full(len(uniq), pg.n, np.int64)
+    np.minimum.at(rep, inv, np.arange(pg.n))
+    return rep[inv]
+
+
+def _refine_offsets(off: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Split each worker's [off[w], off[w+1]) edge range into k[w] near
+    equal parts -> (sum(k)+1,) physical offsets refining ``off``."""
+    off = np.asarray(off, np.int64)
+    starts = np.repeat(off[:-1], k)
+    lens = np.repeat(np.diff(off), k)
+    kk = np.repeat(k, k)
+    jj = (np.arange(int(k.sum()), dtype=np.int64)
+          - np.repeat(np.cumsum(k) - k, k))
+    return np.append(starts + (lens * jj) // kk, off[-1])
+
+
 def partition(g: Graph, M: int, tau: Optional[int] = None,
-              seed: int = 0, layout: str = "padded") -> PartitionedGraph:
-    """Hash-partition ``g`` over M workers with mirroring threshold ``tau``
+              seed: int = 0, layout: str = "padded",
+              balance: str = "hash",
+              split_factor: float = 1.2) -> PartitionedGraph:
+    """Partition ``g`` over M workers with mirroring threshold ``tau``
     (None => mirroring disabled, i.e. tau = inf).
 
     ``layout="padded"`` builds (M, E_hot) per-worker rows (reference);
@@ -190,20 +283,35 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     O(E + M + n) host memory, no hot-worker padding.  Both layouts come
     from the same single stable sort, so corresponding edge orders are
     identical (csr == padded rows concatenated without the padding).
+
+    ``balance`` picks the vertex->worker assignment (module docstring):
+    ``"hash"`` random, ``"edges"`` greedy edge-balanced, ``"split"``
+    edge-balanced plus physical splitting of workers whose edge load
+    exceeds ``split_factor x`` the mean (csr only).
     """
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; use one of {LAYOUTS}")
+    if balance not in BALANCES:
+        raise ValueError(f"unknown balance {balance!r}; use one of "
+                         f"{BALANCES}")
+    if balance == "split" and layout != "csr":
+        raise ValueError('balance="split" moves csr row-offset boundaries; '
+                         'use layout="csr"')
     rng = np.random.RandomState(seed)
-    perm = rng.permutation(g.n).astype(np.int64)
-    inv = np.empty_like(perm)
+    n_loc = -(-g.n // M)
+    if balance == "hash":
+        perm = rng.permutation(g.n).astype(np.int64)
+    else:
+        perm = _balanced_perm(g, M, n_loc, tau)
+    n_ids = M * n_loc
+    inv = np.full(n_ids, -1, np.int64)
     inv[perm] = np.arange(g.n)
     src = perm[g.src]
     dst = perm[g.dst]
     w = g.weight if g.weight is not None else np.ones(g.m, np.float32)
 
-    n_loc = -(-g.n // M)
     owner = src // n_loc
-    deg = np.bincount(src, minlength=g.n)
+    deg = np.bincount(src, minlength=n_ids)
     tau_eff = tau if tau is not None else g.n + 1
     mirrored = deg >= tau_eff                      # per (new) vertex id
 
@@ -268,7 +376,7 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         order = np.lexsort((hdst, hsrc, dst_owner))
         hsrc, hdst, hw, dst_owner = (hsrc[order], hdst[order], hw[order],
                                      dst_owner[order])
-        mir_idx_of = np.full(g.n, -1, np.int64)
+        mir_idx_of = np.full(n_ids, -1, np.int64)
         mir_idx_of[mir_vertex_ids] = np.arange(len(mir_vertex_ids))
         es_all = mir_idx_of[hsrc].astype(np.int32)
         edg_all = hdst.astype(np.int64)
@@ -276,7 +384,7 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         hb = np.searchsorted(dst_owner, np.arange(M + 1)).astype(np.int64)
         # workers per mirrored vertex
         pair = np.unique(hsrc * np.int64(M) + dst_owner)
-        cnt = np.bincount((pair // M).astype(np.int64), minlength=g.n)
+        cnt = np.bincount((pair // M).astype(np.int64), minlength=n_ids)
         nworkers = cnt[mir_vertex_ids] if len(mir_vertex_ids) else nworkers
     if layout == "csr":
         mir_esrc = es_all
@@ -294,13 +402,35 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         mir_ew, _ = _pad_rows(rows_ew, 0.0, np.float32)
         mir_eoff = None
 
-    deg_pad = np.zeros((M, n_loc), np.int32)
+    deg_pad = deg.astype(np.int32).reshape(M, n_loc)
     vmask = np.zeros((M, n_loc), bool)
-    vmask.reshape(-1)[:g.n] = True
-    deg_pad.reshape(-1)[:g.n] = deg
+    vmask.reshape(-1)[perm] = True
 
     mir_ids_arr = np.full(n_mir, M * n_loc, np.int32)
     mir_ids_arr[:len(mir_vertex_ids)] = mir_vertex_ids
+
+    # ---- hot-worker splitting: physical shard boundaries ---------------
+    M_phys, phys_log = M, None
+    phys_eg = phys_all = phys_mir = None
+    eg_pw = all_pw = mir_pw = None
+    if balance == "split":
+        load = np.diff(eg_off) + np.diff(hb)
+        k = cost_model.choose_split(load, split_factor)
+        M_phys = int(k.sum())
+        phys_log = np.repeat(np.arange(M, dtype=np.int64), k)
+        phys_eg = _refine_offsets(eg_off, k)
+        phys_all = _refine_offsets(all_off, k)
+        phys_mir = _refine_offsets(hb, k)
+        pids = np.arange(M_phys, dtype=np.int32)
+        eg_pw = jnp.asarray(np.repeat(pids, np.diff(phys_eg)))
+        all_pw = jnp.asarray(np.repeat(pids, np.diff(phys_all)))
+        mir_pw_np = np.repeat(pids, np.diff(phys_mir))
+        mir_pw = jnp.asarray(mir_pw_np)
+        if len(hsrc):
+            # Theorem-1 accounting at shard granularity: a mirrored vertex
+            # is broadcast once per *physical shard* hosting its edges
+            spair = np.unique(es_all.astype(np.int64) * M_phys + mir_pw_np)
+            nworkers = np.bincount(spair // M_phys, minlength=n_mir)
 
     return PartitionedGraph(
         n=g.n, M=M, n_loc=n_loc, tau=int(tau_eff), perm=perm, inv_perm=inv,
@@ -315,4 +445,7 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         mir_emask=jnp.asarray(mir_emask), mir_ew=jnp.asarray(mir_ew),
         deg=jnp.asarray(deg_pad), vmask=jnp.asarray(vmask),
         layout=layout, eg_off=eg_off, all_off=all_off, mir_eoff=mir_eoff,
+        balance=balance, split_factor=split_factor, M_phys=M_phys,
+        phys_log=phys_log, phys_eg_off=phys_eg, phys_all_off=phys_all,
+        phys_mir_off=phys_mir, eg_pw=eg_pw, all_pw=all_pw, mir_pw=mir_pw,
     )

@@ -32,7 +32,8 @@ def make_graph(graph: str, n: int, seed: int):
 
 
 def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
-          layout: str = "padded"):
+          layout: str = "padded", balance: str = "hash",
+          split_factor: float = 1.2):
     from repro.core.cost_model import choose_tau
     from repro.graph.structs import partition
     g = make_graph(graph, n, seed)
@@ -44,7 +45,8 @@ def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
         tau = None
     else:
         tau = int(tau_arg)
-    pg = partition(g, M, tau=tau, seed=seed, layout=layout)
+    pg = partition(g, M, tau=tau, seed=seed, layout=layout,
+                   balance=balance, split_factor=split_factor)
     return g, pg, tau
 
 
@@ -64,6 +66,14 @@ def main():
                     help="edge representation: padded (M, E_loc) rows "
                          "(reference) or flat csr arrays + row offsets "
                          "(O(E + M + n) host memory)")
+    ap.add_argument("--balance", default="hash",
+                    choices=["hash", "edges", "split"],
+                    help="vertex->worker placement: random hash "
+                         "(reference), greedy edge-count-balanced, or "
+                         "edge-balanced + hot-worker splitting (csr only)")
+    ap.add_argument("--split-factor", type=float, default=1.2,
+                    help="split workers whose edge load exceeds this "
+                         "multiple of the mean (balance=split)")
     ap.add_argument("--devices", type=int, default=0,
                     help="shard the worker axis over this many devices "
                          "(0 = single-device batched simulation); on CPU "
@@ -83,16 +93,30 @@ def main():
     from repro.algorithms.pagerank import pagerank
     from repro.algorithms.sssp import sssp
     from repro.algorithms.sv import sv
+    from repro.core.cost_model import straggler_report
     from repro.graph.structs import partition
-    from repro.train.fault import straggler_report
 
     g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau,
-                       layout=args.layout)
+                       layout=args.layout, balance=args.balance,
+                       split_factor=args.split_factor)
     dev = args.devices if args.devices else None
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
           f"tau={tau} max_deg={int(g.out_degrees().max())} "
           f"backend={args.backend} layout={args.layout} "
-          f"devices={dev or 1}")
+          f"balance={args.balance} devices={dev or 1}")
+
+    def report_balance(pg_run):
+        # printed for the partition the algorithm actually ran (sssp/msf
+        # rebuild a weighted partition)
+        rep = straggler_report(pg_run.edge_load(phys=True))
+        print(f"[balance] {args.balance}: workers {pg_run.M} -> "
+              f"{pg_run.M_phys} physical shards; edge-load max/mean="
+              f"{rep['max_over_mean']:.2f} cv={rep['cv']:.2f}")
+        if dev and args.layout == "csr":
+            from repro.core.exec import device_edge_loads
+            dl = straggler_report(device_edge_loads(pg_run, dev))
+            print(f"[balance] device edge-load max/mean="
+                  f"{dl['max_over_mean']:.2f} over {dev} devices")
 
     t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
@@ -111,7 +135,8 @@ def main():
             gw.weight = np.ones(gw.m, np.float32)
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
-                        layout=args.layout)
+                        layout=args.layout, balance=args.balance,
+                        split_factor=args.split_factor)
         _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
                               backend=be, devices=dev)
         pg = pgw
@@ -122,7 +147,8 @@ def main():
             gw.weight = rng.rand(gw.m).astype(np.float32) + 0.01
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=None, seed=args.seed,
-                        layout=args.layout)
+                        layout=args.layout, balance=args.balance,
+                        split_factor=args.split_factor)
         (res, stats, n_ss) = msf(pgw, backend=be, devices=dev)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")
@@ -134,6 +160,7 @@ def main():
         n_ss = 2
     dt = time.time() - t0
 
+    report_balance(pg)
     print(f"[run] {args.algo}: {int(n_ss)} supersteps in {dt:.2f}s")
     for k in ("msgs_total", "msgs_combined", "msgs_mirror", "msgs_basic",
               "msgs_rr"):

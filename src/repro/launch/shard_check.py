@@ -36,9 +36,12 @@ ALGOS = ("hashmin", "pagerank", "sssp", "sv", "msf", "attr_bcast")
 
 def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                backends=("dense", "pallas"), device_counts=(1, 2, 8),
-               n=180, M=8, tau=8, seed=0):
+               n=180, M=8, tau=8, seed=0, balance="hash",
+               split_factor=1.1):
     """Returns (report dict, ok flag).  Call only after jax sees enough
-    devices (``xla_flags.force_host_devices`` before the first import)."""
+    devices (``xla_flags.force_host_devices`` before the first import).
+    ``balance`` selects the partitioner mode; ``"split"`` requires the csr
+    layout, so padded cells are skipped there."""
     import numpy as np
     import jax.numpy as jnp
     from repro.algorithms.attr_bcast import attribute_broadcast
@@ -50,8 +53,11 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
     from repro.graph import generators as gen
     from repro.graph.structs import partition
 
+    if balance == "split":
+        layouts = tuple(lay for lay in layouts if lay == "csr")
     g = gen.powerlaw(n, avg_deg=5, seed=1, weighted=True).symmetrized()
-    pgs = {lay: partition(g, M, tau=tau, seed=seed, layout=lay)
+    pgs = {lay: partition(g, M, tau=tau, seed=seed, layout=lay,
+                          balance=balance, split_factor=split_factor)
            for lay in layouts}
 
     def run_algo(algo, pg, backend, devices):
@@ -79,7 +85,7 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
         ea, s = attribute_broadcast(pg, attr, devices=devices)
         return {"exact": np.asarray(ea)}, {}, s, 2
 
-    report = {"n": n, "M": M, "tau": tau, "cells": {}}
+    report = {"n": n, "M": M, "tau": tau, "balance": balance, "cells": {}}
     ok = True
     for algo in algos:
         for lay in layouts:
@@ -87,7 +93,7 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                 pg = pgs[lay]
                 ref_e, ref_a, ref_s, ref_n = run_algo(algo, pg, be, None)
                 for D in device_counts:
-                    name = f"{algo}/{lay}/{be}/devices={D}"
+                    name = f"{algo}/{lay}/{be}/{balance}/devices={D}"
                     errs = []
                     e, a, s, nss = run_algo(algo, pg, be, D)
                     if nss != ref_n:
@@ -152,16 +158,33 @@ def main() -> None:
     ap.add_argument("--algos", nargs="+", default=list(ALGOS))
     ap.add_argument("--n", type=int, default=180)
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--balance", nargs="+", default=["hash"],
+                    help="partition balance modes to sweep (hash / edges "
+                         "/ split; split runs csr cells only)")
+    ap.add_argument("--layouts", nargs="+", default=["padded", "csr"])
+    ap.add_argument("--skip-hlo-check", action="store_true",
+                    help="skip the dense all-to-all HLO assertion (it "
+                         "only applies to worker-aligned meshes)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
     force_host_devices(max(args.devices), default_platform="cpu")
 
-    report, ok = run_matrix(algos=tuple(args.algos),
-                            device_counts=tuple(args.devices),
-                            n=args.n, M=args.workers)
-    report["all_to_all_in_hlo"] = check_all_to_all(
-        n=args.n, M=args.workers, devices=max(args.devices))
-    ok &= report["all_to_all_in_hlo"]
+    report = None
+    ok = True
+    for bal in args.balance:
+        rep, bok = run_matrix(algos=tuple(args.algos),
+                              layouts=tuple(args.layouts),
+                              device_counts=tuple(args.devices),
+                              n=args.n, M=args.workers, balance=bal)
+        ok &= bok
+        if report is None:
+            report = rep
+        else:
+            report["cells"].update(rep["cells"])
+    if not args.skip_hlo_check:
+        report["all_to_all_in_hlo"] = check_all_to_all(
+            n=args.n, M=args.workers, devices=max(args.devices))
+        ok &= report["all_to_all_in_hlo"]
     report["ok"] = bool(ok)
     if args.out:
         with open(args.out, "w") as f:

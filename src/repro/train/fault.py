@@ -20,11 +20,14 @@ What a real deployment does and how this framework covers it:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 import numpy as np
 
+# straggler_report lives with the rest of the balance model in
+# core/cost_model.py; re-exported here for backwards compatibility.
+from repro.core.cost_model import straggler_report  # noqa: F401
 from repro.graph.structs import Graph, PartitionedGraph, partition
 
 
@@ -44,27 +47,6 @@ def repartition(g: Graph, state_by_vertex: np.ndarray, old_pg: PartitionedGraph,
     new_flat[new_pg.perm] = by_orig
     return new_pg, jax.numpy.asarray(
         new_flat.reshape(new_pg.M, new_pg.n_loc))
-
-
-def straggler_report(per_worker_msgs: np.ndarray) -> Dict[str, float]:
-    """Imbalance metrics for a per-worker message histogram (Figs. 1/2):
-    a worker 2x over the mean is a 2x straggler in a synchronous step."""
-    m = np.asarray(per_worker_msgs, np.float64)
-    mean = m.mean() if m.size else 0.0
-    return {
-        "max_over_mean": float(m.max() / mean) if mean > 0 else 0.0,
-        "cv": float(m.std() / mean) if mean > 0 else 0.0,
-        "gini": _gini(m),
-    }
-
-
-def _gini(x: np.ndarray) -> float:
-    if x.sum() == 0:
-        return 0.0
-    xs = np.sort(x)
-    n = len(xs)
-    cum = np.cumsum(xs)
-    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
 
 
 def simulate_preemption(run_steps: Callable[[int, int], list],

@@ -20,7 +20,7 @@ from repro.algorithms.pagerank import pagerank
 from repro.algorithms.sssp import sssp
 from repro.algorithms.sv import sv
 from repro.graph import generators as gen
-from repro.graph.structs import partition
+from repro.graph.structs import canonical_labels, partition
 
 N, M, TAU, SEED = 180, 4, 8, 0
 
@@ -149,6 +149,179 @@ def test_sharded_conformance_matrix():
                                         "all-to-all"
     # every cell of the full 6-algo matrix must have been exercised
     assert len(report["cells"]) == 6 * 2 * 2 * 3
+
+
+BAL_N, BAL_M = 240, 4
+
+_bal_graph = None
+_bal_pgs = {}
+
+
+def _get_bal_pg(balance):
+    """Hub-heavy powerlaw (alpha=1.5): the hottest vertex outweighs a
+    worker's fair share, so balance="split" actually splits workers."""
+    global _bal_graph
+    if _bal_graph is None:
+        _bal_graph = gen.powerlaw(BAL_N, avg_deg=6, seed=2, alpha=1.5,
+                                  weighted=True).symmetrized()
+    if balance not in _bal_pgs:
+        _bal_pgs[balance] = partition(_bal_graph, BAL_M, tau=10, seed=SEED,
+                                      layout="csr", balance=balance,
+                                      split_factor=1.1)
+    return _bal_pgs[balance]
+
+
+_canon_labels = canonical_labels
+
+
+def _run_balance(algo, balance, backend):
+    """Returns ([exact arrays...], approx array | None, stats) — exact
+    results canonicalized to original-vertex space so modes compare."""
+    pg = _get_bal_pg(balance)
+    if algo == "hashmin":
+        labels, stats, _ = hashmin(pg, backend=backend)
+        return [_canon_labels(pg, labels)], None, stats
+    if algo == "pagerank":
+        pr, stats, _ = pagerank(pg, n_iters=8, tol=1e-12, backend=backend)
+        return [], np.asarray(pr).reshape(-1)[pg.perm], stats
+    if algo == "sssp":
+        # source = relabeled id of ORIGINAL vertex 0 in each mode
+        dist, stats, _ = sssp(pg, int(pg.perm[0]), backend=backend)
+        return [np.asarray(dist).reshape(-1)[pg.perm]], None, stats
+    if algo == "sv":
+        labels, stats, _ = sv(pg, backend=backend)
+        return [_canon_labels(pg, labels)], None, stats
+    if algo == "msf":
+        (labels, tw, ne), stats, _ = msf(pg, backend=backend)
+        return ([_canon_labels(pg, labels), np.asarray(int(ne))],
+                np.float32(tw), stats)
+    # attr_bcast: attribute keyed by ORIGINAL id; edge order canonicalized
+    # by (orig src, orig dst) so modes are comparable
+    attr = np.zeros(pg.n_pad, np.float32)
+    attr[pg.perm] = np.arange(pg.n, dtype=np.float32) * 3
+    eattr, stats = attribute_broadcast(
+        pg, jnp.asarray(attr.reshape(pg.M, pg.n_loc)), backend=backend)
+    orig = np.full(pg.n_pad, -1, np.int64)
+    orig[pg.perm] = np.arange(pg.n)
+    key = (orig[np.asarray(pg.all_src)] * pg.n
+           + orig[np.asarray(pg.all_dst)])
+    return [np.asarray(eattr)[np.argsort(key)]], None, stats
+
+
+@pytest.mark.parametrize("algo", ("hashmin", "pagerank", "sssp", "sv",
+                                  "msf", "attr_bcast"))
+def test_balance_axis_conformance(algo):
+    """The balance mode is a placement choice, never a semantic one:
+    canonicalized results agree across {hash, edges, split}; within a
+    mode the two backends agree on every result and statistic; and a
+    split partition keeps the exact message totals of its "edges" twin
+    for the raw (basic) channel — splitting only re-shards combining."""
+    ref = {}
+    for balance in ("hash", "edges", "split"):
+        exact_d, approx_d, stats_d = _run_balance(algo, balance, "dense")
+        exact_p, approx_p, stats_p = _run_balance(algo, balance, "pallas")
+        ctx = f"{algo}/{balance}"
+        for a, b in zip(exact_d, exact_p):
+            np.testing.assert_array_equal(a, b, err_msg=ctx)
+        _assert_stats_equal(stats_d, stats_p, ctx)
+        if "ref_exact" in ref:
+            for a, b in zip(exact_d, ref["ref_exact"]):
+                np.testing.assert_array_equal(a, b, err_msg=ctx)
+        else:
+            ref["ref_exact"] = exact_d
+        if approx_d is not None:
+            if "ref_approx" in ref:
+                np.testing.assert_allclose(approx_d, ref["ref_approx"],
+                                           rtol=1e-5, atol=1e-7,
+                                           err_msg=ctx)
+            else:
+                ref["ref_approx"] = approx_d
+        ref[balance] = stats_d
+    # same assignment => same raw cross-worker message count: splitting
+    # must not invent or lose a single basic message
+    np.testing.assert_array_equal(
+        np.asarray(ref["edges"]["msgs_basic"]),
+        np.asarray(ref["split"]["msgs_basic"]), err_msg=algo)
+
+
+def test_sharded_balance_matrix():
+    """The balance axis of the sharded matrix: every algo x backend cell
+    under balance="edges" and balance="split" (csr) must be bitwise /
+    stats-identical between devices {1, 8} and the single-device batched
+    simulation — the split physical shards never straddle devices, so
+    the per-device accounting must compose exactly."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    out = os.path.join(tempfile.mkdtemp(), "balance-parity.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.shard_check",
+         "--devices", "1", "8", "--balance", "edges", "split",
+         "--layouts", "csr", "--skip-hlo-check", "--out", out],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=root)
+    assert r.returncode == 0, (r.stdout[-4000:] + "\n" + r.stderr[-4000:])
+    report = json.load(open(out))
+    bad = {cell: errs for cell, errs in report["cells"].items() if errs}
+    assert not bad, bad
+    # 6 algos x csr x 2 backends x 2 device counts x 2 balance modes
+    assert len(report["cells"]) == 6 * 2 * 2 * 2
+
+
+def test_split_shards_partition_csr_rows():
+    """Property: the physical shard offsets of a split partition exactly
+    refine the per-worker csr offsets — no edge lost, duplicated, or
+    reassigned — for every edge set, across graph shapes and seeds."""
+    from repro.core.cost_model import choose_split
+
+    cases = [gen.powerlaw(300, avg_deg=6, seed=s, alpha=a, weighted=True)
+             for s, a in ((0, 1.5), (1, 2.0), (2, 1.7))]
+    cases.append(gen.star(200))
+    cases.append(gen.chain(64))
+    for i, g in enumerate(cases):
+        g = g.symmetrized()
+        for M, tau in ((4, 10), (8, None)):
+            pg = partition(g, M, tau=tau, seed=i, layout="csr",
+                           balance="split", split_factor=1.1)
+            assert pg.M_phys == len(pg.phys_log) >= M
+            counts = np.bincount(pg.phys_log, minlength=M)
+            k = choose_split(pg.edge_load(), pg.split_factor)
+            np.testing.assert_array_equal(counts, k, err_msg=str(i))
+            firsts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            for name, off, poff in (
+                    ("eg", pg.eg_off, pg.phys_eg_off),
+                    ("all", pg.all_off, pg.phys_all_off),
+                    ("mir", pg.mir_eoff, pg.phys_mir_off)):
+                ctx = f"case{i} M={M} tau={tau} {name}"
+                assert len(poff) == pg.M_phys + 1, ctx
+                assert (np.diff(poff) >= 0).all(), ctx
+                # worker boundaries survive refinement: shard edge counts
+                # sum to the original per-worker counts exactly
+                np.testing.assert_array_equal(poff[firsts], off[:-1],
+                                              err_msg=ctx)
+                assert poff[-1] == off[-1], ctx
+                # per-edge shard ids agree with the offsets and map back
+                # to the owning logical worker
+                pw = np.asarray(getattr(
+                    pg, "mir_pw" if name == "mir" else f"{name}_pw"))
+                np.testing.assert_array_equal(
+                    pw, np.repeat(np.arange(pg.M_phys), np.diff(poff)),
+                    err_msg=ctx)
+            # every shard's load stays at or below the hot threshold
+            # whenever its worker was split
+            loads = pg.edge_load(phys=True)
+            target = pg.split_factor * pg.edge_load().mean()
+            split_workers = np.flatnonzero(k > 1)
+            for w in split_workers:
+                sel = pg.phys_log == w
+                assert loads[sel].max() <= int(np.ceil(target)), (i, M, w)
 
 
 def test_csr_arrays_are_flat():
