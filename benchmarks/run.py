@@ -110,21 +110,41 @@ def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
 def graph_bench(out_path: str, n: int = 200_000, M: int = 8,
                 device_counts=(1, 8)) -> None:
     """Perf-trajectory artifact: wall time + message counts for every
-    algo x backend x layout x device-count cell.  Wall times include the
-    per-call jit compile (each cell builds a fresh step closure) — they
-    are trend numbers, not steady-state throughput."""
+    algo x backend x layout x device-count cell, plus the per-device
+    compiled-buffer stats of every sharded channel family at D=8 — and
+    the HARD memory gate: no sharded channel may all-reduce/all-gather
+    an operand of >= n_pad elements (a replicated global buffer would
+    void the paper's per-worker communication bounds).  Wall times
+    include the per-call jit compile (each cell builds a fresh step
+    closure) — they are trend numbers, not steady-state throughput."""
     from repro.algorithms.hashmin import hashmin
     from repro.algorithms.pagerank import pagerank
     from repro.core.cost_model import choose_tau
     from repro.graph import generators as gen
     from repro.graph.structs import partition
+    from repro.launch.shard_check import routed_memory_report
 
     g = gen.powerlaw(n, avg_deg=8, seed=5, alpha=1.8).symmetrized()
     tau = choose_tau(g.out_degrees(), M)
     report = {"n": g.n, "m": g.m, "workers": M, "tau": int(tau),
-              "cells": []}
+              "cells": [], "memory": {}}
     for layout in ("padded", "csr"):
         pg = partition(g, M, tau=tau, seed=0, layout=layout)
+        # per-device peak live-buffer bytes + collective operand sizes of
+        # the compiled sharded channels (the routed-exchange artifact)
+        mem = routed_memory_report(pg, devices=max(device_counts))
+        report["memory"][layout] = mem
+        n_pad = pg.n_pad
+        for prog, entry in mem["programs"].items():
+            worst = entry["collective_max_elems"]
+            bad = max(worst["all-reduce"], worst["all-gather"])
+            print(f"[graph-bench] memory {layout}/{prog}: "
+                  f"worst replicated collective operand {bad:,d} elems, "
+                  f"temp {entry.get('temp_bytes', -1):,d} B")
+            assert bad < n_pad, (
+                f"{layout}/{prog}: replicated collective operand of "
+                f"{bad} elems >= n_pad {n_pad} — a sharded channel is "
+                f"replicating global state again")
         for backend in ("dense", "pallas"):
             for algo, fn in (("hashmin", hashmin),
                              ("pagerank", lambda p, **kw: pagerank(

@@ -84,10 +84,12 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
         if plan is not None:
             # the plan encodes the static edge mask; the runtime mask
             # (e.g. inactive sources) is folded in as identity values
+            # for the combine and passed as-is for the accounting
             masked = jnp.where(mask, values,
                                identity_of(op, values.dtype))
             inbox, (msgs, per_worker) = planlib.combine_with_plan(
-                plan, masked.reshape(-1), op, count_cross=True)
+                plan, masked.reshape(-1), op, count_cross=True,
+                flat_hits=mask.reshape(-1))
         else:
             inbox, (msgs, per_worker) = planlib.combine_sorted(
                 targets, values, mask, op, M, n_loc)
@@ -110,7 +112,10 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
     partial = jax.vmap(one)(targets, values, mask)      # (M_src, n_pad)
     partial3 = partial.reshape(M, M, n_loc)             # (src, dst, slot)
 
-    sent = partial3 != ident
+    # mask-driven accounting: a (source, destination) pair counts when a
+    # real message was sent, independent of the combined payload
+    sent = jax.vmap(lambda t, m: planlib.scatter_hits(n_pad, t, m)
+                    )(targets, mask).reshape(M, M, n_loc)
     cross = sent & ~jnp.eye(M, dtype=bool)[:, :, None]
     stats = {
         "msgs_combined": cross.sum(),
@@ -156,7 +161,7 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
                                identity_of(op, values.dtype))
             inbox, (msgs, per_worker) = planlib.combine_with_plan(
                 plan, masked, op, count_cross=True, log_of=log_of,
-                M_out=M)
+                M_out=M, flat_hits=mask)
         else:
             inbox, (msgs, per_worker) = planlib.combine_sorted_flat(
                 targets, values, mask, src_worker, op, M, n_loc,
@@ -178,7 +183,8 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
     partial = jnp.full((M_src * n_pad,), ident, values.dtype)
     partial3 = scatter_op(op, partial, idx, v).reshape(M_src, M, n_loc)
 
-    sent = partial3 != ident
+    sent = planlib.scatter_hits(M_src * n_pad, idx, mask
+                                ).reshape(M_src, M, n_loc)
     cross3 = sent & (jnp.arange(M)[None, :, None] != row_log[:, None, None])
     stats = {
         "msgs_combined": cross3.sum(),
@@ -228,7 +234,9 @@ def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
             return scatter_op(op, buf, jnp.where(emask, edst, 0), ev_row)
 
         inbox = jax.vmap(fan_out)(pg.mir_edst, pg.mir_emask, ev)
-    sent = jnp.where(mir_vals != ident, pg.mir_nworkers, 0)
+    # mask-driven accounting: an ACTIVE mirrored vertex is broadcast to its
+    # hosting workers whatever its value (even one equal to the identity)
+    sent = jnp.where(valid & flat_act[safe], pg.mir_nworkers, 0)
     owner_w = jnp.clip(safe // pg.n_loc, 0, pg.M - 1)
     per_worker = jnp.zeros((pg.M,), sent.dtype).at[owner_w].add(
         jnp.where(valid, sent, 0))

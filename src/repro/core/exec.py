@@ -4,32 +4,42 @@ On one device the engine simulates the paper's M workers as a batch axis;
 this module makes the simulation *distributed*: ``jax.jit`` + ``shard_map``
 over a 1-D device mesh (axis ``"w"``, built via ``launch/mesh.make_mesh``)
 shards the worker axis across D devices (M % D == 0, m = M/D workers per
-device), and the channel joins lower to real collectives:
+device).
 
-* Ch_msg, dense backend — each device builds only its m source workers'
-  partial buffers (m, M, n_loc); the worker-axis transpose that the
-  single-device path writes as ``swapaxes(partial3, 0, 1)`` becomes a real
-  ``jax.lax.all_to_all`` over the mesh axis, after which every device
-  reduces the full source axis for its local destinations in the same
-  order as the reference path.
+Every channel join is **destination-routed**: messages (and requests)
+travel straight to the device that owns their destination via
+``jax.lax.all_to_all`` with fixed per-destination-device lane caps, and
+each device only ever materializes O(n/D + E/D)-sized buffers.  No join
+replicates global state — there is no ``all_gather`` of the value shards
+and no op-matched all-reduce over a global (n_pad,) scatter buffer
+anywhere in the superstep (the paper's Theorems 1/3 bound per-worker
+*communication*; replicating O(n) state per device would void exactly
+that bound, and makes multi-host meshes untenable).
+
 * Ch_msg, pallas/plan backend — the destination-blocked rows are packed
-  *per device* at plan-build time (each device's plan covers its own
-  workers' outgoing edges, row/segment counts padded to the device
-  maximum); each device runs ``segment_combine_blocks`` on its rows and
-  the per-device (n_blocks, nb) partials meet in a psum-style exchange
-  (``pmin``/``pmax``/``psum`` matching the combine op) before each device
-  slices out its destination blocks.
-* Ch_mir — the mirror values are assembled with the same op-matched
-  all-reduce (each device contributes the mirrored vertices it owns, the
-  identity elsewhere: the all-gather payload of the paper), and the
-  fan-out runs on destination-sharded mirror edges.
-* Ch_req — the gather transports values with an ``all_gather`` of the
-  (m, n_loc) value shards; the request/response *accounting* (Theorem 3
-  dedup, per-worker charges on both requester and owner) is computed
-  per device and psum-merged, identical to the reference counts.
-* runtime-target scatters (S-V/MSF hooking) — per-device sorted segmented
-  combine into a global (n_pad,) buffer, op-matched all-reduce, local
-  slice.
+  *per device* at plan-build time; each device runs
+  ``segment_combine_blocks`` on its rows, then the per-(source, block)
+  segment partials are exchanged with ONE ``all_to_all``: the plan is
+  blocked per destination device at stack time (static exchange indices,
+  exact caps — runtime never overflows), and each device scatters the
+  received segments into its local (m·B_per_w, nb) block range only.
+* Ch_msg, dense backend / runtime-target scatters (S-V/MSF hooking) —
+  the shared sorted segmented combine (``plan.sorted_segments*``) reduces
+  duplicate (source, target) pairs locally, then the surviving segments
+  are bucketed by destination device (``target // (m·n_loc)``) and
+  exchanged in cap-sized ``all_to_all`` rounds: a psum'd remaining-lanes
+  count drives extra rounds when a hot destination overflows the cap, so
+  skew costs extra rounds, never correctness (and never a recompile).
+  Receivers combine into a local (m·n_loc,) buffer.
+* Ch_mir — mirror values are routed from the owner device to exactly the
+  devices hosting fan-out edges for them, through a static fetch plan
+  (per-device needed-value lists computed at graph-shard time; one
+  ``all_to_all``).  The fan-out then runs on the local mirror edges.
+* Ch_req — a real two-round trip: deduplicated requests route to the
+  owner devices (cap-sized ``all_to_all`` rounds), owners answer from
+  their local (m, n_loc) shard, responses route back.  The Theorem-3
+  accounting (dedup, per-worker charges on requester and owner) is
+  computed per device and psum-merged, identical to the reference counts.
 
 Parity contract (pinned by tests/test_conformance.py's sharded axis and
 ``launch/shard_check.py``): for every algorithm x backend x layout,
@@ -50,12 +60,12 @@ shard runs onto devices minimizing the bottleneck edge load, so device
 boundaries are edge-balanced instead of worker-aligned.  A logical
 worker's shards may then land on different devices while its vertex state
 stays block-sharded, so the split executor (a) reads source values through
-an ``all_gather`` of the state shards, (b) keys sender-side combining and
-request dedup by physical shard (a shard never straddles devices, so
-per-device accounting composes exactly), and (c) joins inboxes through the
-op-matched global-buffer all-reduce — min/max results stay bitwise
-identical to the single-device split simulation and every stat
-integer-exact.
+a static fetch plan (each device's needed source slots are known at
+graph-shard time — never an all_gather of the state), (b) keys sender-side
+combining and request dedup by physical shard (a shard never straddles
+devices, so per-device accounting composes exactly), and (c) joins inboxes
+through the routed exchange — min/max results stay bitwise identical to
+the single-device split simulation and every stat integer-exact.
 """
 from __future__ import annotations
 
@@ -71,19 +81,13 @@ from jax.sharding import PartitionSpec as P
 from repro.core import bsp
 from repro.core import cost_model
 from repro.core import plan as planlib
-from repro.core.channels import _dedup_row, _reduce_op
+from repro.core.channels import _dedup_row
 from repro.core.plan import identity_of, scatter_op
 from repro.launch import mesh as meshlib
 
 AXIS = "w"
 
 _MERGE = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}
-
-
-def _preduce(op: str, x: jnp.ndarray, axis: str) -> jnp.ndarray:
-    """Cross-device all-reduce matching the combine op."""
-    return {"min": jax.lax.pmin, "max": jax.lax.pmax,
-            "sum": jax.lax.psum}[op](x, axis)
 
 
 def broadcast_plan_kinds(backend: str, use_mirroring: bool = True) -> tuple:
@@ -106,6 +110,23 @@ def graph_mesh(devices: int):
     return meshlib.make_mesh((devices,), (AXIS,))
 
 
+def _pad8(x: int) -> int:
+    return max(8, -(-int(x) // 8) * 8)
+
+
+def _cap_for(L: int, D: int, hint: Optional[int] = None) -> int:
+    """Per-destination-device lane cap of one routed-exchange round.
+
+    ``ceil(L/D)`` is exact for balanced traffic (one round); a hot
+    destination just takes extra rounds.  ``hint`` — a static bound on the
+    worst per-device-pair traffic (``PartitionedGraph.pair_counts``) —
+    widens the cap up to 4x so statically-known skew still lands in one
+    round without unbounding the (D, cap) buffer."""
+    base = -(-L // D)
+    cap = base if hint is None else max(base, min(int(hint), 4 * base))
+    return min(_pad8(cap), _pad8(L))
+
+
 # ---------------------------------------------------------------------------
 # per-device plan stacking (pallas backend)
 # ---------------------------------------------------------------------------
@@ -116,20 +137,30 @@ class TracedPlan:
 
     Row/segment counts are padded to the maximum across devices; dummy rows
     have ``row_valid`` all-False (they combine to identity and scatter into
-    segment 0 harmlessly) and dummy segments stay at the identity, so they
-    never contribute to inboxes or message counts."""
+    segment 0 harmlessly) and dummy segments are excluded from the exchange
+    index lists, so they never contribute to inboxes or message counts.
+
+    ``xseg``/``xval`` index MY segments per destination device (send side);
+    ``rblk``/``rval`` give, per source device, the local destination block
+    of each segment routed to me (receive side) — both built statically at
+    stack time, so the all_to_all caps are exact."""
     nb: int
     eb: int
     B_per_w: int
     n_blocks: int
     n_rows: int                # padded maximum
     n_segs: int                # padded maximum
+    xcap: int                  # max segments routed between one device pair
     row_gather: jnp.ndarray    # (n_rows, eb) -> local flat edge index
     row_valid: jnp.ndarray     # (n_rows, eb)
     row_local: jnp.ndarray     # (n_rows, eb)
     row_seg: jnp.ndarray       # (n_rows,)
     seg_blk: jnp.ndarray       # (n_segs,) global block id
     seg_worker: jnp.ndarray    # (n_segs,) global source worker
+    xseg: jnp.ndarray          # (D, xcap) my segment index per dest device
+    xval: jnp.ndarray          # (D, xcap)
+    rblk: jnp.ndarray          # (D, xcap) local dst block per source device
+    rval: jnp.ndarray          # (D, xcap)
 
 
 def _device_plans(pg, D: int, kind: str, nb: int):
@@ -196,13 +227,29 @@ def _device_plans(pg, D: int, kind: str, nb: int):
     return plans
 
 
-def _stack_plans(plans):
-    """Pad per-device plans to common row/segment counts and stack with a
-    leading device axis.  Returns (static_meta, arrays_dict)."""
+def _stack_plans(plans, m: int):
+    """Pad per-device plans to common row/segment counts, build the
+    per-destination-device exchange index lists, and stack everything with
+    a leading device axis.  Returns (static_meta, arrays_dict)."""
     D = len(plans)
     nb, eb = plans[0].nb, plans[0].eb
+    bpd = m * plans[0].B_per_w               # destination blocks per device
     R = max(1, max(p.n_rows for p in plans))
     S = max(1, max(p.n_segs for p in plans))
+
+    # destination-device blocking of the (real, un-padded) segments: the
+    # routed exchange is fully static, so the caps are exact by
+    # construction and the runtime never overflows them
+    pair = {}
+    xcap = 1
+    for d, p in enumerate(plans):
+        dd = (p.seg_blk // bpd if p.n_segs
+              else np.zeros(0, np.int64))
+        for d2 in range(D):
+            sel = np.flatnonzero(dd == d2)
+            pair[(d, d2)] = sel
+            xcap = max(xcap, len(sel))
+
     a = {
         "row_gather": np.zeros((D, R, eb), np.int32),
         "row_valid": np.zeros((D, R, eb), bool),
@@ -210,6 +257,10 @@ def _stack_plans(plans):
         "row_seg": np.zeros((D, R), np.int32),
         "seg_blk": np.zeros((D, S), np.int32),
         "seg_worker": np.zeros((D, S), np.int32),
+        "xseg": np.zeros((D, D, xcap), np.int32),
+        "xval": np.zeros((D, D, xcap), bool),
+        "rblk": np.zeros((D, D, xcap), np.int32),
+        "rval": np.zeros((D, D, xcap), bool),
     }
     for d, p in enumerate(plans):
         a["row_gather"][d, :p.n_rows] = p.row_gather
@@ -218,9 +269,69 @@ def _stack_plans(plans):
         a["row_seg"][d, :p.n_rows] = p.row_seg
         a["seg_blk"][d, :p.n_segs] = p.seg_blk
         a["seg_worker"][d, :p.n_segs] = p.seg_worker
+    for (d, d2), sel in pair.items():
+        c = len(sel)
+        a["xseg"][d, d2, :c] = sel
+        a["xval"][d, d2, :c] = True
+        a["rblk"][d2, d, :c] = plans[d].seg_blk[sel] - d2 * bpd
+        a["rval"][d2, d, :c] = True
     meta = {"nb": nb, "eb": eb, "B_per_w": plans[0].B_per_w,
-            "n_blocks": plans[0].n_blocks, "n_rows": R, "n_segs": S}
+            "n_blocks": plans[0].n_blocks, "n_rows": R, "n_segs": S,
+            "xcap": xcap}
     return meta, a
+
+
+# ---------------------------------------------------------------------------
+# static fetch plans: route known value sets owner -> consumer devices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TracedFetch:
+    """Device-local view of a static fetch plan: this device's needed
+    remote/local values arrive as a compact (n_need,) array through ONE
+    exchange (consumers' needed-slot lists are static, so the per-pair
+    caps are exact)."""
+    n_need: int                # padded compact-array length
+    cap: int                   # max slots between one device pair
+    send_slot: jnp.ndarray     # (D, cap) LOCAL state slot to serve, -1 pad
+    recv_pos: jnp.ndarray      # (D, cap) position in my compact array, -1
+
+
+def _build_fetch_plan(need_lists, D: int, loc_n: int):
+    """``need_lists``: per-device sorted unique GLOBAL slot ids (host
+    numpy).  Owner of slot g is ``g // loc_n``.  Returns (meta, stacked
+    host arrays) for :class:`TracedFetch`."""
+    cap = 1
+    pair = {}
+    for d, need in enumerate(need_lists):
+        need = np.asarray(need, np.int64)
+        bounds = np.searchsorted(need, np.arange(D + 1) * loc_n)
+        for s in range(D):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            pair[(s, d)] = (need[lo:hi], np.arange(lo, hi))
+            cap = max(cap, hi - lo)
+    send_slot = np.full((D, D, cap), -1, np.int32)
+    recv_pos = np.full((D, D, cap), -1, np.int32)
+    for (s, d), (slots, pos) in pair.items():
+        c = len(slots)
+        send_slot[s, d, :c] = slots - s * loc_n
+        recv_pos[d, s, :c] = pos
+    n_need = max(1, max((len(x) for x in need_lists), default=1))
+    meta = {"cap": cap, "n_need": n_need}
+    return meta, {"send_slot": send_slot, "recv_pos": recv_pos}
+
+
+def _fetch_planned(sg, fp: TracedFetch, flat_vals: jnp.ndarray, fill
+                   ) -> jnp.ndarray:
+    """Run one static fetch plan: returns my compact (n_need,) value
+    array.  ``flat_vals`` is my local (m_loc*n_loc,) owner-side array."""
+    n = flat_vals.shape[0]
+    send = jnp.where(fp.send_slot >= 0,
+                     flat_vals[jnp.clip(fp.send_slot, 0, n - 1)], fill)
+    recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
+    idx = jnp.where(fp.recv_pos >= 0, fp.recv_pos, fp.n_need)
+    buf = jnp.full((fp.n_need + 1,), fill, flat_vals.dtype)
+    return buf.at[idx].set(recv)[:-1]
 
 
 # ---------------------------------------------------------------------------
@@ -280,10 +391,24 @@ def _pad_device_slices(arr: np.ndarray, bounds: np.ndarray, pad_row):
     return out, valid
 
 
+def _cap_hint(pg, D: int) -> Optional[int]:
+    """Static per-device-pair distinct-target bound from the partition's
+    (M, M) worker-pair message-count matrix — the initial cap the routed
+    edge-shaped exchanges use (None when unavailable, e.g. split bounds
+    don't align with worker blocks)."""
+    pc = getattr(pg, "pair_counts", None)
+    if pc is None or _is_split(pg):
+        return None
+    m = pg.M // D
+    blocks = pc.reshape(D, m, D, m).sum(axis=(1, 3))
+    return int(blocks.max())
+
+
 def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
     """Build the device-stacked array pytree + matching PartitionSpecs."""
     M, n_loc = pg.M, pg.n_loc
     m = M // D
+    loc_n = m * n_loc
     split = _is_split(pg)
     arrays: Dict = {"vmask": pg.vmask, "deg": pg.deg,
                     "mir_ids": pg.mir_ids, "mir_nworkers": pg.mir_nworkers}
@@ -291,7 +416,15 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
                    "mir_ids": P(), "mir_nworkers": P()}
     meta = {"M": M, "n_loc": n_loc, "D": D, "m_loc": m, "n": pg.n,
             "tau": pg.tau, "layout": pg.layout, "split": split,
-            "plan_meta": {}}
+            "cap_hint": _cap_hint(pg, D), "plan_meta": {},
+            "fetch_meta": {}}
+
+    def add_fetch(name, need_lists):
+        fmeta, farr = _build_fetch_plan(need_lists, D, loc_n)
+        meta["fetch_meta"][name] = fmeta
+        for k, v in farr.items():
+            arrays[f"fetch_{name}_{k}"] = v
+            specs[f"fetch_{name}_{k}"] = P(AXIS)
 
     if pg.layout == "csr":
         dbounds = device_edge_bounds(pg, D) if split else None
@@ -324,6 +457,17 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
                     np.asarray(getattr(pg, f"{name}_pw")), off, pb[:-1])
                 arrays[f"{name}_pw"] = pw
                 specs[f"{name}_pw"] = P(AXIS)
+                # split device bounds cross worker state blocks: build the
+                # static source-value fetch plan + compact per-edge index
+                # (the padded src rows reuse base[d], a real slot, so pad
+                # lanes simply share a fetched value and stay masked)
+                need = [np.unique(src[d]) for d in range(D)]
+                add_fetch(name, need)
+                csrc = np.stack([
+                    np.searchsorted(need[d], src[d]).astype(np.int32)
+                    for d in range(D)])
+                arrays[f"{name}_csrc"] = csrc
+                specs[f"{name}_csrc"] = P(AXIS)
         off = (dbounds["mir"] if split
                else csr_device_bounds(pg.mir_eoff, M, D))
         esrc, vs = _pad_device_slices(np.asarray(pg.mir_esrc), off,
@@ -344,9 +488,34 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
             arrays[name] = getattr(pg, name)
             specs[name] = P(AXIS)
 
+    # mirror-value fetch plan: each device needs the state slots of the
+    # mirrored vertices referenced by ITS mirror edges (static)
+    mir_ids_np = np.asarray(pg.mir_ids, np.int64)
+    n_pad = M * n_loc
+    esrc_np = np.asarray(arrays["mir_esrc"])
+    emask_np = np.asarray(arrays["mir_emask"])
+    if pg.layout != "csr":
+        mm = M // D
+        esrc_np = esrc_np.reshape(D, mm * esrc_np.shape[1])
+        emask_np = emask_np.reshape(D, mm * emask_np.shape[1])
+    need_lists, cesrc = [], []
+    for d in range(D):
+        safe = np.clip(esrc_np[d], 0, len(mir_ids_np) - 1)
+        gids = mir_ids_np[safe]
+        ok = emask_np[d] & (gids < n_pad)
+        need = np.unique(gids[ok]) if ok.any() else np.zeros(0, np.int64)
+        need_lists.append(need)
+        pos = (np.searchsorted(need, gids) if len(need)
+               else np.zeros(len(gids), np.int64))
+        pos = np.where(ok, np.clip(pos, 0, max(len(need) - 1, 0)), 0)
+        cesrc.append(pos.astype(np.int32))
+    add_fetch("mir", need_lists)
+    arrays["mir_cesrc"] = np.stack(cesrc)
+    specs["mir_cesrc"] = P(AXIS)
+
     for kind in plan_kinds:
-        pmeta, parrs = _stack_plans(_device_plans(pg, D, kind,
-                                                  planlib.default_nb()))
+        pmeta, parrs = _stack_plans(
+            _device_plans(pg, D, kind, planlib.default_nb()), m)
         meta["plan_meta"][kind] = pmeta
         for k, v in parrs.items():
             arrays[f"plan_{kind}_{k}"] = v
@@ -392,7 +561,10 @@ class ShardedGraph:
     mir_edst: jnp.ndarray
     mir_emask: jnp.ndarray
     mir_ew: jnp.ndarray
+    mir_cesrc: jnp.ndarray     # mirror edge -> index into the fetched values
     plans: Dict[str, TracedPlan] = dataclasses.field(default_factory=dict)
+    fetch: Dict[str, TracedFetch] = dataclasses.field(default_factory=dict)
+    cap_hint: Optional[int] = None
     # split partitions (physical shards as the device placement unit):
     split: bool = False
     M_phys: int = 0
@@ -402,6 +574,8 @@ class ShardedGraph:
     eg_pw: Optional[jnp.ndarray] = None      # device-local per-edge shards
     all_pw: Optional[jnp.ndarray] = None
     mir_pw: Optional[jnp.ndarray] = None
+    eg_csrc: Optional[jnp.ndarray] = None    # edge -> fetched-source index
+    all_csrc: Optional[jnp.ndarray] = None
 
     @property
     def n_pad(self) -> int:
@@ -411,12 +585,6 @@ class ShardedGraph:
         """Physical shard ids -> logical worker ids (identity when the
         partition is not split)."""
         return self.phys_log[worker] if self.split else worker
-
-    def gather_state(self, vals: jnp.ndarray) -> jnp.ndarray:
-        """Replicate the (m_loc, n_loc) state shard to the full (M, n_loc)
-        array — split partitions read source values globally because a
-        device's edge slice can come from remote logical workers."""
-        return jax.lax.all_gather(vals, self.axis, axis=0, tiled=True)
 
     def local_ids(self) -> jnp.ndarray:
         return ((self.w0 + jnp.arange(self.m_loc))[:, None] * self.n_loc
@@ -441,7 +609,19 @@ class ShardedGraph:
     def edge_src_values(self, state, src):
         if self.layout == "csr":
             if self.split:
-                return self.gather_state(state).reshape(-1)[src]
+                # split device bounds cross state blocks: read through the
+                # static source fetch plan of the matching edge set
+                if src is self.all_src:
+                    fp, csrc = self.fetch["all"], self.all_csrc
+                elif src is self.eg_src:
+                    fp, csrc = self.fetch["eg"], self.eg_csrc
+                else:
+                    raise ValueError(
+                        "split edge_src_values needs a planned edge set "
+                        "(pass sg.all_src or sg.eg_src)")
+                flat = state.reshape(-1)
+                return _fetch_planned(self, fp, flat,
+                                      jnp.zeros((), flat.dtype))[csrc]
             return state.reshape(-1)[src - self.w0 * self.n_loc]
         return state[jnp.arange(self.m_loc)[:, None], src]
 
@@ -466,13 +646,23 @@ def _make_sg(meta, a) -> ShardedGraph:
         plans[kind] = TracedPlan(
             nb=pm["nb"], eb=pm["eb"], B_per_w=pm["B_per_w"],
             n_blocks=pm["n_blocks"], n_rows=pm["n_rows"],
-            n_segs=pm["n_segs"],
+            n_segs=pm["n_segs"], xcap=pm["xcap"],
             row_gather=a[f"plan_{kind}_row_gather"][0],
             row_valid=a[f"plan_{kind}_row_valid"][0],
             row_local=a[f"plan_{kind}_row_local"][0],
             row_seg=a[f"plan_{kind}_row_seg"][0],
             seg_blk=a[f"plan_{kind}_seg_blk"][0],
-            seg_worker=a[f"plan_{kind}_seg_worker"][0])
+            seg_worker=a[f"plan_{kind}_seg_worker"][0],
+            xseg=a[f"plan_{kind}_xseg"][0],
+            xval=a[f"plan_{kind}_xval"][0],
+            rblk=a[f"plan_{kind}_rblk"][0],
+            rval=a[f"plan_{kind}_rval"][0])
+    fetch = {}
+    for name, fm in meta["fetch_meta"].items():
+        fetch[name] = TracedFetch(
+            n_need=fm["n_need"], cap=fm["cap"],
+            send_slot=a[f"fetch_{name}_send_slot"][0],
+            recv_pos=a[f"fetch_{name}_recv_pos"][0])
     split = meta.get("split", False)
     extra = {}
     if split:
@@ -480,7 +670,8 @@ def _make_sg(meta, a) -> ShardedGraph:
             split=True, M_phys=meta["M_phys"], P_loc=meta["P_loc"],
             p0=jnp.asarray(meta["p_bounds"][:-1], jnp.int32)[d],
             phys_log=a["phys_log"], eg_pw=loc("eg_pw"),
-            all_pw=loc("all_pw"), mir_pw=loc("mir_pw"))
+            all_pw=loc("all_pw"), mir_pw=loc("mir_pw"),
+            eg_csrc=a["eg_csrc"][0], all_csrc=a["all_csrc"][0])
     return ShardedGraph(
         M=meta["M"], n_loc=meta["n_loc"], m_loc=m, D=meta["D"],
         n=meta["n"], tau=meta["tau"], layout=layout, axis=AXIS, w0=w0,
@@ -492,11 +683,12 @@ def _make_sg(meta, a) -> ShardedGraph:
         mir_ids=a["mir_ids"], mir_nworkers=a["mir_nworkers"],
         mir_esrc=loc("mir_esrc"), mir_edst=loc("mir_edst"),
         mir_emask=loc("mir_emask"), mir_ew=loc("mir_ew"),
-        plans=plans, **extra)
+        mir_cesrc=a["mir_cesrc"][0],
+        plans=plans, fetch=fetch, cap_hint=meta.get("cap_hint"), **extra)
 
 
 # ---------------------------------------------------------------------------
-# sharded channel implementations
+# routed exchange cores
 # ---------------------------------------------------------------------------
 
 def _place_rows(sg: ShardedGraph, local_counts: jnp.ndarray) -> jnp.ndarray:
@@ -513,51 +705,151 @@ def _scatter_workers(sg: ShardedGraph, workers, flags) -> jnp.ndarray:
     return jax.lax.psum(pw, sg.axis)
 
 
-def _local_slice(sg: ShardedGraph, buf: jnp.ndarray) -> jnp.ndarray:
-    """(n_pad,) global buffer -> this device's (m_loc, n_loc) rows."""
-    loc = jax.lax.dynamic_slice(buf, (sg.w0 * sg.n_loc,),
-                                (sg.m_loc * sg.n_loc,))
-    return loc.reshape(sg.m_loc, sg.n_loc)
+def _bucket_by_device(sg: ShardedGraph, targets, valid):
+    """Sort lanes by destination device (invalid last).  Returns
+    (order, (D+1,) bucket offsets, per-pair round count)."""
+    loc_n = sg.m_loc * sg.n_loc
+    dd = jnp.where(valid,
+                   jnp.clip(targets, 0, sg.n_pad - 1) // loc_n,
+                   sg.D).astype(jnp.int32)
+    order = jnp.argsort(dd, stable=True)
+    off = jnp.searchsorted(dd[order], jnp.arange(sg.D + 1, dtype=jnp.int32))
+    return order, off
 
 
-def _exchange_dense(sg: ShardedGraph, partial3: jnp.ndarray, op: str
-                    ) -> jnp.ndarray:
-    """(m_src, M, n_loc) local partials -> (m_dst, n_loc) inbox.
+def _rounds_for(sg: ShardedGraph, off: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Replicated number of all_to_all rounds: the psum'd overflow signal.
+    Balanced traffic fits the cap in one round; a hot destination just
+    adds rounds (extra cap-sized exchanges), never dropped lanes."""
+    counts = off[1:] - off[:-1]
+    return jax.lax.pmax(((counts + cap - 1) // cap).max(), sg.axis)
 
-    The worker-axis transpose of the single-device path IS the all_to_all:
-    after the exchange each device holds (M_src, m_dst, n_loc) ordered by
-    global source worker, and reduces the full source axis exactly like
-    the reference ``swapaxes`` + reduce."""
-    m, D = sg.m_loc, sg.D
-    x = partial3.reshape(m, D, m, sg.n_loc)
-    y = jax.lax.all_to_all(x, sg.axis, split_axis=1, concat_axis=1)
-    recv = jnp.transpose(y, (1, 0, 2, 3)).reshape(D * m, m, sg.n_loc)
-    return _reduce_op(op, recv, axis=0)
 
+def _round_lanes(off: jnp.ndarray, r, cap: int, L: int):
+    """Round ``r``'s (D, cap) lane window into the device-sorted arrays:
+    per destination device the slice [off[d] + r*cap, off[d+1]) clipped to
+    ``cap`` lanes.  Returns (clipped indices, in-bucket validity) — the
+    indexing core both routed exchanges share."""
+    idx = off[:-1, None] + r * cap + jnp.arange(cap, dtype=jnp.int32)[None]
+    ok = idx < off[1:, None]
+    return jnp.clip(idx, 0, L - 1), ok
+
+
+def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
+                            op: str, cap: Optional[int] = None
+                            ) -> jnp.ndarray:
+    """Destination-routed combine: (L,) lanes of (global target, value)
+    pairs are bucketed by owner device, exchanged in cap-sized
+    ``all_to_all`` rounds, and combined into MY local (m_loc*n_loc,)
+    buffer — the per-device footprint is O(L + D*cap), never (n_pad,)."""
+    D, loc_n = sg.D, sg.m_loc * sg.n_loc
+    L = targets.shape[0]
+    cap = cap or _cap_for(L, D)
+    ident = identity_of(op, values.dtype)
+    order, off = _bucket_by_device(sg, targets, valid)
+    st_ = jnp.where(valid, targets, sg.n_pad)[order]
+    sv_ = jnp.where(valid, values, ident)[order]
+    rounds = _rounds_for(sg, off, cap)
+    base = sg.w0 * sg.n_loc
+
+    def body(r, buf):
+        idxc, ok = _round_lanes(off, r, cap, L)
+        t_send = jnp.where(ok, st_[idxc], sg.n_pad)
+        v_send = jnp.where(ok, sv_[idxc], ident)
+        t_recv = jax.lax.all_to_all(t_send, sg.axis, 0, 0)
+        v_recv = jax.lax.all_to_all(v_send, sg.axis, 0, 0)
+        slot = t_recv - base
+        okr = (slot >= 0) & (slot < loc_n)
+        return scatter_op(op, buf, jnp.where(okr, slot, 0),
+                          jnp.where(okr, v_recv, ident))
+
+    buf0 = jnp.full((loc_n,), ident, values.dtype)
+    return jax.lax.fori_loop(0, rounds, body, buf0)
+
+
+def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
+                  cap: Optional[int] = None) -> jnp.ndarray:
+    """The request-respond transport: a real two-round trip.  (L,) global
+    ``targets`` are bucketed by owner device; requests travel out in
+    cap-sized ``all_to_all`` rounds, owners answer from their local
+    (m_loc, n_loc) shard, responses travel back on the mirrored lanes.
+    Returns (L,) gathered values, 0 where ``~valid`` (the reference
+    convention for masked request lanes)."""
+    D, loc_n = sg.D, sg.m_loc * sg.n_loc
+    L = targets.shape[0]
+    cap = cap or _cap_for(L, D)
+    flat = vals.reshape(-1)
+    ok_t = valid & (targets >= 0) & (targets < sg.n_pad)
+    order, off = _bucket_by_device(sg, targets, ok_t)
+    st_ = jnp.where(ok_t, targets, sg.n_pad)[order]
+    rounds = _rounds_for(sg, off, cap)
+    base = sg.w0 * sg.n_loc
+
+    def body(r, out):
+        idxc, ok = _round_lanes(off, r, cap, L)
+        req = jnp.where(ok, st_[idxc], sg.n_pad)
+        req_r = jax.lax.all_to_all(req, sg.axis, 0, 0)
+        slot = req_r - base
+        okr = (slot >= 0) & (slot < loc_n)
+        resp = jnp.where(okr, flat[jnp.clip(slot, 0, loc_n - 1)],
+                         jnp.zeros((), vals.dtype))
+        resp_b = jax.lax.all_to_all(resp, sg.axis, 0, 0)
+        return out.at[jnp.where(ok, idxc, L)].set(
+            jnp.where(ok, resp_b, jnp.zeros((), vals.dtype)))
+
+    out0 = jnp.zeros((L + 1,), vals.dtype)
+    got_sorted = jax.lax.fori_loop(0, rounds, body, out0)[:L]
+    got = jnp.zeros((L,), vals.dtype).at[order].set(got_sorted)
+    return jnp.where(ok_t, got, jnp.zeros((), vals.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sharded channel implementations
+# ---------------------------------------------------------------------------
 
 def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
                                flat_vals: jnp.ndarray, op: str,
+                               flat_hits: Optional[jnp.ndarray] = None,
                                count_cross: bool = True,
                                exchange: bool = True):
-    """Per-device destination-blocked combine + psum-style exchange."""
+    """Per-device destination-blocked combine + destination-routed
+    segment exchange: my (source, block) segment partials travel straight
+    to the device owning their block through ONE statically-capped
+    ``all_to_all``; I scatter the segments routed to me into my local
+    (m_loc*B_per_w, nb) block range.  Never a global (n_blocks, nb)
+    buffer, never an all-reduce over one.
+
+    ``exchange=False`` skips the collective when the caller knows every
+    segment is destination-local (the non-split mirror fan-out: mirror
+    edges are destination-sharded, so self-routing them through the
+    all_to_all would be a pointless per-superstep collective)."""
     ident = identity_of(op, flat_vals.dtype)
     packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
     row_out = planlib._combine_rows(packed, plan.row_local, op, plan.nb)
     seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
     seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
-    glob = jnp.full((plan.n_blocks, plan.nb), ident, flat_vals.dtype)
-    glob = scatter_op(op, glob, plan.seg_blk, seg_out)
+
+    nbl = sg.m_loc * plan.B_per_w
+    loc = jnp.full((nbl, plan.nb), ident, flat_vals.dtype)
     if exchange:
-        glob = _preduce(op, glob, sg.axis)
-    rows = jax.lax.dynamic_slice_in_dim(glob, sg.w0 * plan.B_per_w,
-                                        sg.m_loc * plan.B_per_w, 0)
-    inbox = rows.reshape(sg.m_loc, plan.B_per_w * plan.nb)[:, :sg.n_loc]
+        send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg], ident)
+        recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
+        loc = scatter_op(op, loc, jnp.where(plan.rval, plan.rblk, 0),
+                         jnp.where(plan.rval[:, :, None], recv, ident))
+    else:
+        # all segments are mine: scatter by local block id directly
+        # (padded dummy segments carry all-identity rows — harmless)
+        lblk = jnp.clip(plan.seg_blk - sg.w0 * plan.B_per_w, 0, nbl - 1)
+        loc = scatter_op(op, loc, lblk, seg_out)
+    inbox = loc.reshape(sg.m_loc, plan.B_per_w * plan.nb)[:, :sg.n_loc]
 
     stats = None
     if count_cross:
+        # mask-driven accounting (TracedPlan duck-types EdgePlan here)
+        sh = planlib.plan_seg_hits(plan, flat_hits)
         seg_log = sg.log_of(plan.seg_worker)
         owner = plan.seg_blk // plan.B_per_w
-        cross = (seg_out != ident) & (owner != seg_log)[:, None]
+        cross = sh & (owner != seg_log)[:, None]
         msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
         per_worker = jnp.zeros((sg.M,), jnp.int32).at[seg_log].add(
             cross.sum(axis=1).astype(jnp.int32))
@@ -569,40 +861,38 @@ def _combine_sorted_rows_sharded(sg: ShardedGraph, targets, values, mask,
                                  op: str):
     """Sharded twin of plan.combine_sorted: the shared segment core
     (``plan.sorted_segments``) runs on the local (m_loc, K) rows, then the
-    global (n_pad,) buffer meets in an op-matched all-reduce and the local
-    slice is taken; source rows are rebased by ``w0`` for the accounting."""
+    surviving segments are destination-routed (all_to_all rounds) into the
+    owners' local buffers; source rows are rebased by ``w0`` for the
+    accounting.  Crossness is mask-driven: a live segment IS >= 1 real
+    message, whatever its combined payload."""
     n_pad = sg.n_pad
     real, seg_t, seg_val, seg_row, ident = planlib.sorted_segments(
         targets, values, mask, op, n_pad)
 
-    buf = jnp.full((n_pad,), ident, values.dtype)
-    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
-                     jnp.where(real, seg_val, ident))
-    inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+    buf = _routed_scatter_combine(sg, seg_t, seg_val, real, op)
+    inbox = buf.reshape(sg.m_loc, sg.n_loc)
 
-    cross = real & (seg_val != ident) & (seg_t // sg.n_loc
-                                         != seg_row + sg.w0)
+    cross = real & (seg_t // sg.n_loc != seg_row + sg.w0)
     msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
     per_worker = _scatter_workers(sg, seg_row + sg.w0, cross)
     return inbox, (msgs, per_worker)
 
 
 def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
-                                 worker, op: str):
+                                 worker, op: str,
+                                 cap: Optional[int] = None):
     """Flat-csr twin: ``plan.sorted_segments_flat`` on the local (E_dev,)
     edges (source workers already global — physical shard ids under a
-    split partition), all-reduce exchange, local slice."""
+    split partition), destination-routed exchange, mask-driven counts."""
     n_pad = sg.n_pad
     real, seg_t, seg_val, seg_w, ident = planlib.sorted_segments_flat(
         targets, values, mask, worker, op, n_pad)
 
-    buf = jnp.full((n_pad,), ident, values.dtype)
-    buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
-                     jnp.where(real, seg_val, ident))
-    inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+    buf = _routed_scatter_combine(sg, seg_t, seg_val, real, op, cap=cap)
+    inbox = buf.reshape(sg.m_loc, sg.n_loc)
 
     seg_log = sg.log_of(jnp.where(real, seg_w, 0))
-    cross = real & (seg_val != ident) & (seg_t // sg.n_loc != seg_log)
+    cross = real & (seg_t // sg.n_loc != seg_log)
     msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
     per_worker = _scatter_workers(sg, seg_log, cross)
     return inbox, (msgs, per_worker)
@@ -611,43 +901,28 @@ def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
 def push_combined_sharded(sg: ShardedGraph, targets, values, mask, op: str,
                           backend: str = "dense",
                           plan: Optional[TracedPlan] = None):
-    """Sharded Ch_msg, padded rows: local (m_loc, K) edges."""
-    ident = identity_of(op, values.dtype)
+    """Sharded Ch_msg, padded rows: local (m_loc, K) edges.  With a plan
+    the combine runs destination-blocked through the kernel path; without
+    one (dense backend, runtime targets) through the sorted segmented
+    core.  Both exchange destination-routed — inboxes and stats are
+    identical to the reference paths (min/max bitwise, stats exact)."""
     gw = sg.worker_ids()[:, None]
     raw_cross = mask & ((targets // sg.n_loc) != gw)
     base = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
             "per_worker_basic": _place_rows(sg, raw_cross.sum(axis=1))}
 
-    if backend == "pallas":
-        if plan is not None:
-            masked = jnp.where(mask, values, ident)
-            inbox, (msgs, pw) = _combine_with_plan_sharded(
-                sg, plan, masked.reshape(-1), op)
-        else:
-            inbox, (msgs, pw) = _combine_sorted_rows_sharded(
-                sg, targets, values, mask, op)
-        stats = {"msgs_combined": msgs, "per_worker_combined": pw}
-        stats.update(base)
-        return inbox, stats
-
-    n_pad = sg.n_pad
-
-    def one(tgt, val, msk):
-        v = jnp.where(msk, val, ident)
-        t = jnp.where(msk, tgt, 0)
-        buf = jnp.full((n_pad,), ident, values.dtype)
-        return scatter_op(op, buf, t, v)
-
-    partial = jax.vmap(one)(targets, values, mask)      # (m_loc, n_pad)
-    partial3 = partial.reshape(sg.m_loc, sg.M, sg.n_loc)
-    sent = partial3 != ident
-    cross = sent & (jnp.arange(sg.M)[None, :, None] != gw[:, :, None])
-    stats = {
-        "msgs_combined": jax.lax.psum(cross.sum(), sg.axis),
-        "per_worker_combined": _place_rows(sg, cross.sum(axis=(1, 2))),
-    }
+    if backend == "pallas" and plan is not None:
+        ident = identity_of(op, values.dtype)
+        masked = jnp.where(mask, values, ident)
+        inbox, (msgs, pw) = _combine_with_plan_sharded(
+            sg, plan, masked.reshape(-1), op,
+            flat_hits=mask.reshape(-1))
+    else:
+        inbox, (msgs, pw) = _combine_sorted_rows_sharded(
+            sg, targets, values, mask, op)
+    stats = {"msgs_combined": msgs, "per_worker_combined": pw}
     stats.update(base)
-    return _exchange_dense(sg, partial3, op), stats
+    return inbox, stats
 
 
 def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
@@ -657,102 +932,63 @@ def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
     per-edge source workers (physical shard ids under a split partition —
     a shard never straddles devices, so the per-device distinct-pair
     accounting composes exactly across any device count)."""
-    ident = identity_of(op, values.dtype)
     wlog = sg.log_of(worker)
     raw_cross = mask & ((targets // sg.n_loc) != wlog)
     base = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
             "per_worker_basic": _scatter_workers(sg, wlog, raw_cross)}
 
-    if backend == "pallas":
-        if plan is not None:
-            masked = jnp.where(mask, values, ident)
-            inbox, (msgs, pw) = _combine_with_plan_sharded(
-                sg, plan, masked, op)
-        else:
-            inbox, (msgs, pw) = _combine_sorted_flat_sharded(
-                sg, targets, values, mask, worker, op)
-        stats = {"msgs_combined": msgs, "per_worker_combined": pw}
-        stats.update(base)
-        return inbox, stats
-
-    n_pad = sg.n_pad
-    if sg.split:
-        # device boundaries sit between physical shards, not at worker
-        # multiples: the per-source partial is keyed by local shard and
-        # the join is the op-matched global-buffer all-reduce (the
-        # all_to_all needs a uniform per-device source count).
-        lp = jnp.clip(worker - sg.p0, 0, sg.P_loc - 1)
-        idx = lp * n_pad + jnp.where(mask, targets, 0)
-        v = jnp.where(mask, values, ident)
-        partial = jnp.full((sg.P_loc * n_pad,), ident, values.dtype)
-        partial3 = scatter_op(op, partial, idx, v).reshape(sg.P_loc, sg.M,
-                                                           sg.n_loc)
-        sent = partial3 != ident
-        row_log = sg.phys_log[jnp.clip(sg.p0 + jnp.arange(sg.P_loc),
-                                       0, sg.M_phys - 1)]
-        cross3 = sent & (jnp.arange(sg.M)[None, :, None]
-                         != row_log[:, None, None])
-        per_worker = jnp.zeros((sg.M,), jnp.int32).at[row_log].add(
-            cross3.sum(axis=(1, 2)).astype(jnp.int32))
-        stats = {
-            "msgs_combined": jax.lax.psum(cross3.sum(), sg.axis),
-            "per_worker_combined": jax.lax.psum(per_worker, sg.axis),
-        }
-        stats.update(base)
-        buf = _reduce_op(op, partial3, axis=0).reshape(-1)
-        inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
-        return inbox, stats
-
-    idx = (worker - sg.w0) * n_pad + jnp.where(mask, targets, 0)
-    v = jnp.where(mask, values, ident)
-    partial = jnp.full((sg.m_loc * n_pad,), ident, values.dtype)
-    partial3 = scatter_op(op, partial, idx, v).reshape(sg.m_loc, sg.M,
-                                                       sg.n_loc)
-    sent = partial3 != ident
-    gw = sg.worker_ids()[:, None]
-    cross3 = sent & (jnp.arange(sg.M)[None, :, None] != gw[:, :, None])
-    stats = {
-        "msgs_combined": jax.lax.psum(cross3.sum(), sg.axis),
-        "per_worker_combined": _place_rows(sg, cross3.sum(axis=(1, 2))),
-    }
+    if backend == "pallas" and plan is not None:
+        ident = identity_of(op, values.dtype)
+        masked = jnp.where(mask, values, ident)
+        inbox, (msgs, pw) = _combine_with_plan_sharded(
+            sg, plan, masked, op, flat_hits=mask)
+    else:
+        inbox, (msgs, pw) = _combine_sorted_flat_sharded(
+            sg, targets, values, mask, worker, op,
+            cap=(_cap_for(targets.shape[0], sg.D, sg.cap_hint)
+                 if sg.cap_hint else None))
+    stats = {"msgs_combined": msgs, "per_worker_combined": pw}
     stats.update(base)
-    return _exchange_dense(sg, partial3, op), stats
+    return inbox, stats
 
 
 def push_mirror_sharded(sg: ShardedGraph, vals, active, op: str,
                         relay: str = "none", backend: str = "dense"):
-    """Sharded Ch_mir: op-matched all-reduce assembles the mirror values
-    (each device contributes the mirrored vertices it owns), then the
-    fan-out runs on the destination-sharded mirror edges."""
+    """Sharded Ch_mir: each device fetches the mirror values it actually
+    references through the static mirror fetch plan (owner devices serve
+    their active mirrored vertices; ONE statically-capped all_to_all —
+    never an all-reduce over the full mirror set), then fans out on the
+    local mirror edges.  Stats are owner-side and psum-merged: a mirrored
+    vertex is owned by exactly one device, so the counts compose
+    exactly."""
     ident = identity_of(op, vals.dtype)
     n_pad = sg.n_pad
-    m_slots = sg.m_loc * sg.n_loc
-    safe_g = jnp.clip(sg.mir_ids, 0, n_pad - 1)
-    valid = sg.mir_ids < n_pad
-    slot = safe_g - sg.w0 * sg.n_loc
-    owned = (slot >= 0) & (slot < m_slots)
-    sl = jnp.clip(slot, 0, m_slots - 1)
+    loc_n = sg.m_loc * sg.n_loc
     flat_vals = vals.reshape(-1)
     flat_act = active.reshape(-1)
-    contrib = jnp.where(valid & owned & flat_act[sl], flat_vals[sl], ident)
-    mir_vals = _preduce(op, contrib, sg.axis)      # replicated (n_mir,)
+    contrib = jnp.where(flat_act, flat_vals, ident)     # owner-side payload
+    lv = _fetch_planned(sg, sg.fetch["mir"], contrib, ident)
 
-    raw = mir_vals[sg.mir_esrc]
+    cesrc = (sg.mir_cesrc if sg.layout == "csr"
+             else sg.mir_cesrc.reshape(sg.mir_esrc.shape))
+    raw = lv[cesrc]
     ev = raw + sg.mir_ew if relay == "add_w" else raw
     ev = jnp.where(sg.mir_emask & (raw != ident), ev, ident)
     if backend == "pallas":
-        # split partitions can hold mirror edges whose destination worker
-        # lives on another device: exchange the destination blocks
+        # a non-split partition's mirror edges are destination-sharded:
+        # every plan segment is local, so the exchange is skipped
         inbox, _ = _combine_with_plan_sharded(
-            sg, sg.plans["mir"], ev.reshape(-1), op,
-            count_cross=False, exchange=sg.split)
+            sg, sg.plans["mir"], ev.reshape(-1), op, count_cross=False,
+            exchange=sg.split)
     elif sg.layout == "csr":
         if sg.split:
-            buf = jnp.full((n_pad,), ident, vals.dtype)
-            buf = scatter_op(op, buf, sg.mir_edst, ev)
-            inbox = _local_slice(sg, _preduce(op, buf, sg.axis))
+            # shard placement can put fan-out edges on a device that does
+            # not own their destination rows: route the combined values
+            buf = _routed_scatter_combine(
+                sg, sg.mir_edst, ev, sg.mir_emask & (raw != ident), op)
+            inbox = buf.reshape(sg.m_loc, sg.n_loc)
         else:
-            buf = jnp.full((m_slots,), ident, vals.dtype)
+            buf = jnp.full((loc_n,), ident, vals.dtype)
             inbox = scatter_op(op, buf, sg.mir_edst - sg.w0 * sg.n_loc,
                                ev).reshape(sg.m_loc, sg.n_loc)
     else:
@@ -762,13 +998,20 @@ def push_mirror_sharded(sg: ShardedGraph, vals, active, op: str,
 
         inbox = jax.vmap(fan_out)(sg.mir_edst, sg.mir_emask, ev)
 
-    # stats are computed from the replicated mirror values: every device
-    # derives the identical (M,) array — no psum (it would double-count)
-    sent = jnp.where(mir_vals != ident, sg.mir_nworkers, 0)
+    # owner-side mask-driven stats: an ACTIVE mirrored vertex is broadcast
+    # to its hosting workers whatever its value; each device charges the
+    # mirrored vertices it owns and the psum restores the exact totals
+    safe_g = jnp.clip(sg.mir_ids, 0, n_pad - 1)
+    valid = sg.mir_ids < n_pad
+    slot = safe_g - sg.w0 * sg.n_loc
+    owned = (slot >= 0) & (slot < loc_n)
+    act = flat_act[jnp.clip(slot, 0, loc_n - 1)]
+    sent = jnp.where(valid & owned & act, sg.mir_nworkers, 0)
+    msgs = jax.lax.psum(sent.sum(), sg.axis)
     owner_w = jnp.clip(safe_g // sg.n_loc, 0, sg.M - 1)
-    per_worker = jnp.zeros((sg.M,), sent.dtype).at[owner_w].add(
-        jnp.where(valid, sent, 0))
-    return inbox, {"msgs_mirror": sent.sum(), "per_worker_mirror": per_worker}
+    per_worker = jnp.zeros((sg.M,), sent.dtype).at[owner_w].add(sent)
+    per_worker = jax.lax.psum(per_worker, sg.axis)
+    return inbox, {"msgs_mirror": msgs, "per_worker_mirror": per_worker}
 
 
 def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
@@ -783,10 +1026,18 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
             if backend == "pallas" else None)
     if sg.layout == "csr":
         if sg.split:
-            # edge-balanced device bounds: sources can be remote workers
-            allv = sg.gather_state(vals).reshape(-1)
-            alla = sg.gather_state(active).reshape(-1)
-            src_val, src_act = allv[esrc], alla[esrc]
+            # edge-balanced device bounds: sources can be remote workers —
+            # read them through the static source fetch plan (owner
+            # devices serve exactly the slots this device's edges need)
+            kind = "eg" if use_mirroring else "all"
+            fp = sg.fetch[kind]
+            csrc = sg.eg_csrc if use_mirroring else sg.all_csrc
+            cv = _fetch_planned(sg, fp, vals.reshape(-1),
+                                jnp.zeros((), vals.dtype))
+            ca = _fetch_planned(sg, fp,
+                                active.reshape(-1).astype(jnp.int32),
+                                jnp.zeros((), jnp.int32))
+            src_val, src_act = cv[csrc], ca[csrc] > 0
             worker = sg.eg_pw if use_mirroring else sg.all_pw
         else:
             loc_src = esrc - sg.w0 * sg.n_loc
@@ -819,21 +1070,26 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
 
 def gather_sharded(sg: ShardedGraph, vals, targets, tmask,
                    dedup: bool = True):
-    """Sharded Ch_req for row-shaped targets (m_loc, R): the values travel
-    in one all_gather of the (m, n_loc) shards; the request-respond
-    *counts* (Theorem 3) are computed per device and psum-merged so they
-    match the reference accounting exactly."""
+    """Sharded Ch_req for row-shaped targets (m_loc, R): a real two-round
+    trip — each worker's deduplicated requests route to the owner devices,
+    owners answer from their local (m_loc, n_loc) shard, responses route
+    back (``_routed_fetch``).  The request-respond *counts* (Theorem 3)
+    are computed per device and psum-merged so they match the reference
+    accounting exactly."""
     n_pad = sg.n_pad
-    allv = jax.lax.all_gather(vals, sg.axis, axis=0, tiled=True)
     t = jnp.where(tmask, targets, n_pad)
-    ok = tmask & (t < n_pad)
-    out = jnp.where(ok, allv.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
-                    jnp.zeros((), vals.dtype))
-
+    R = t.shape[1]
     if dedup:
-        uniq, _ = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)
+        uniq, inv = jax.vmap(lambda r: _dedup_row(r, n_pad))(t)
     else:
         uniq = t
+        inv = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), t.shape)
+    flat_u = uniq.reshape(-1)
+    got = _routed_fetch(sg, vals, flat_u, flat_u < n_pad
+                        ).reshape(uniq.shape)
+    out = jnp.take_along_axis(got, inv, axis=1)
+    out = jnp.where(tmask, out, jnp.zeros((), vals.dtype))
+
     owner = jnp.clip(uniq // sg.n_loc, 0, sg.M - 1)
     uvalid = uniq < n_pad
     self_w = sg.worker_ids()[:, None]
@@ -853,24 +1109,33 @@ def gather_sharded(sg: ShardedGraph, vals, targets, tmask,
 
 def gather_edges_sharded(sg: ShardedGraph, vals, targets, tmask,
                          dedup: bool = True):
-    """Sharded Ch_req for edge-shaped targets (layout-dispatching)."""
+    """Sharded Ch_req for edge-shaped targets (layout-dispatching).  The
+    transport always rides the deduplicated (worker, target) segment heads
+    — responses are propagated back down each segment — so the wire cost
+    follows Theorem 3 regardless of the accounting mode requested."""
     if sg.layout != "csr":
         return gather_sharded(sg, vals, targets, tmask, dedup)
     n_pad = sg.n_pad
     worker = sg.all_pw if sg.split else sg.all_src // sg.n_loc
     wlog = sg.log_of(worker)
-    allv = jax.lax.all_gather(vals, sg.axis, axis=0, tiled=True)
     t = jnp.where(tmask, targets, n_pad)
-    ok = tmask & (t < n_pad)
-    out = jnp.where(ok, allv.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
-                    jnp.zeros((), vals.dtype))
-    # (no E == 0 case: _pad_device_slices guarantees cap >= 1)
+    L = t.shape[0]
+
+    order, ws, ts, first = planlib.sort_by_worker_target(worker, t)
+    heads = first & (ts < n_pad)
+    cap = _cap_for(L, sg.D, sg.cap_hint) if sg.cap_hint else None
+    head_vals = _routed_fetch(sg, vals, ts, heads, cap=cap)
+    hidx = jax.lax.cummax(jnp.where(first, jnp.arange(L, dtype=jnp.int32),
+                                    0))
+    val_sorted = head_vals[hidx]
+    out = jnp.zeros((L,), vals.dtype).at[order].set(val_sorted)
+    out = jnp.where(t < n_pad, out, jnp.zeros((), vals.dtype))
+
     owner = jnp.clip(targets // sg.n_loc, 0, sg.M - 1)
     raw_remote = tmask & ((targets // sg.n_loc) != wlog)
     if dedup:
-        _, ws, ts, first = planlib.sort_by_worker_target(worker, t)
         ws_log = sg.log_of(ws)
-        uniq = first & (ts < n_pad)
+        uniq = heads
         remote_u = uniq & (ts // sg.n_loc != ws_log)
         u_w, u_owner = ws_log, jnp.clip(ts // sg.n_loc, 0, sg.M - 1)
     else:
@@ -891,9 +1156,9 @@ def scatter_state_sharded(sg: ShardedGraph, base, targets, upd, mask,
                           op: str, backend: str = "dense"):
     """Sharded scatter-op for row-shaped runtime targets (S-V hooking).
     Runtime destinations admit no precomputed plan, so both backends share
-    the sorted segmented combine + op-matched exchange (the reference
-    paths' stats are identical by construction, and min/max values are
-    order-exact)."""
+    the sorted segmented combine + destination-routed exchange (the
+    reference paths' stats are identical by construction, and min/max
+    values are order-exact)."""
     gw = sg.worker_ids()[:, None]
     raw_cross = mask & ((targets // sg.n_loc) != gw)
     bstats = {"msgs_basic": jax.lax.psum(raw_cross.sum(), sg.axis),
@@ -933,12 +1198,21 @@ def _state_specs(tree, M: int):
                               and x.shape[0] == M) else P(), tree)
 
 
+def _acc_specs(stats_shape):
+    """PartitionSpec pytree matching bsp's (hi, lo) limb accumulator."""
+    return [
+        (P(), P()) if jnp.issubdtype(leaf.dtype, jnp.integer) else P()
+        for leaf in jax.tree.leaves(stats_shape)
+    ]
+
+
 def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
                   record_history: bool = False, devices: int = 1,
                   plan_kinds: Sequence[str] = ()):
     """Build the jitted sharded BSP program.  Returns (fn, args) with
-    ``fn(*args) == (final_state, stats_totals, n_supersteps, history)`` —
-    the same contract as ``bsp.run``.
+    ``fn(*args) == (final_state, raw_acc, n_supersteps, history)`` —
+    fold ``raw_acc`` with ``finalize_stats`` (run_sharded does) to get
+    the ``bsp.run`` totals contract.
 
     ``make_step(g)`` must build the superstep function against either a
     PartitionedGraph (used here only to trace the stats structure) or the
@@ -957,22 +1231,34 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
 
     def inner(arrs, st0):
         sg = _make_sg(meta, arrs)
-        return bsp.run(make_step(sg), st0, max_supersteps, record_history)
+        return bsp.run(make_step(sg), st0, max_supersteps, record_history,
+                       raw_totals=True)
 
-    fn = shard_map(inner, mesh=mesh, in_specs=(arr_specs, st_specs),
-                   out_specs=(st_specs, stats_specs, P(), hist_specs),
+    fn = shard_map(inner, mesh=mesh,
+                   in_specs=(arr_specs, st_specs),
+                   out_specs=(st_specs, _acc_specs(stats_shape), P(),
+                              hist_specs),
                    check_rep=False)
-    return jax.jit(fn), (arrays, state0)
+    return jax.jit(fn), (arrays, state0), stats_shape
+
+
+def finalize_stats(raw_acc, stats_shape):
+    """Fold the limb accumulator returned by a ``build_sharded`` program
+    into exact host-side totals (Python ints / numpy int64)."""
+    _, treedef = jax.tree.flatten(stats_shape)
+    return bsp.finalize_totals(raw_acc, treedef)
 
 
 def run_sharded(pg, make_step: Callable, state0, max_supersteps: int,
                 record_history: bool = False, devices: int = 1,
                 plan_kinds: Sequence[str] = ()):
     """Run a BSP program sharded over ``devices`` devices; same return
-    contract as ``bsp.run``."""
-    fn, args = build_sharded(pg, make_step, state0, max_supersteps,
-                             record_history, devices, plan_kinds)
-    return fn(*args)
+    contract as ``bsp.run`` (stats totals folded into exact host int64)."""
+    fn, args, stats_shape = build_sharded(pg, make_step, state0,
+                                          max_supersteps, record_history,
+                                          devices, plan_kinds)
+    st, raw_acc, n, hist = fn(*args)
+    return st, finalize_stats(raw_acc, stats_shape), n, hist
 
 
 def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,

@@ -93,6 +93,16 @@ def scatter_op(op: str, buf, idx, vals):
     return buf.at[idx].add(vals)
 
 
+def scatter_hits(n: int, idx, hits) -> jnp.ndarray:
+    """(n,) bool "did at least one real message land here" from per-lane
+    ``hits`` flags — the honest (mask-driven) message-accounting primitive:
+    a destination counts when a real message was SENT to it, whatever its
+    payload (a PageRank contribution of exactly 0.0 is still a message).
+    ``idx`` lanes with ``hits`` False may point anywhere in range."""
+    buf = jnp.zeros((n,), jnp.int32)
+    return buf.at[jnp.where(hits, idx, 0)].max(hits.astype(jnp.int32)) > 0
+
+
 @dataclasses.dataclass
 class EdgePlan:
     """Packed destination-blocked layout of one edge set.
@@ -257,16 +267,31 @@ def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
     return out
 
 
+def plan_seg_hits(plan: EdgePlan, flat_hits: jnp.ndarray) -> jnp.ndarray:
+    """(n_segs, nb) bool: did >= 1 real (masked-in) message land in each
+    per-(source, block) destination slot?  The mask-driven twin of the
+    value combine — counting by ``combined != identity`` silently drops
+    genuine messages whose payload equals the identity.  Rides the same
+    block-combine kernel as the values (op=max over 0/1 lanes)."""
+    hitp = plan.row_valid & flat_hits[plan.row_gather]       # (n_rows, eb)
+    rh = _combine_rows(hitp.astype(jnp.int32), plan.row_local, "max",
+                       plan.nb)
+    sh = jnp.zeros((plan.n_segs, plan.nb), jnp.int32)
+    return sh.at[plan.row_seg].max(rh) > 0
+
+
 def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
                       count_cross: bool = True,
                       log_of: Optional[np.ndarray] = None,
-                      M_out: Optional[int] = None
+                      M_out: Optional[int] = None,
+                      flat_hits: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
     """Combine per-edge values (flattened (M_src*E,)) into a (M_dst, n_loc)
     inbox.  Returns (inbox, (msgs_combined, per_worker_combined) | None);
     the count is the paper's combined-message metric: distinct (source
-    worker, destination vertex) pairs with a non-identity combined value,
-    destination owned by another worker.
+    worker, destination vertex) pairs that received at least one real
+    message (``flat_hits``, the runtime send mask — identity-valued real
+    messages count too), destination owned by another worker.
 
     Plans built from a *split* partition key their segments by physical
     shard (combining runs per shard); ``log_of`` then maps shard ids back
@@ -299,10 +324,12 @@ def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
 
     stats = None
     if count_cross:
+        assert flat_hits is not None, \
+            "count_cross=True needs the per-lane send mask (flat_hits)"
         seg_log = (plan.seg_worker if log_of is None
                    else np.asarray(log_of)[plan.seg_worker])
         owner = plan.seg_blk // plan.B_per_w
-        cross = (seg_out != ident) & (owner != seg_log)[:, None]
+        cross = plan_seg_hits(plan, flat_hits) & (owner != seg_log)[:, None]
         msgs = cross.sum().astype(jnp.int32)
         per_worker = jnp.zeros((M_out,), jnp.int32).at[
             seg_log].add(cross.sum(axis=1).astype(jnp.int32))
@@ -366,7 +393,10 @@ def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
                       jnp.where(real, seg_val, ident))
     inbox = buf.reshape(M, n_loc)
 
-    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_row)
+    # mask-driven crossness: a live segment IS >= 1 real message — never
+    # test the combined value against the identity (a genuine payload can
+    # equal it, e.g. a PageRank contribution of exactly 0.0 under sum)
+    cross = real & (seg_t // n_loc != seg_row)
     msgs = cross.sum().astype(jnp.int32)
     per_worker = jnp.zeros((M,), jnp.int32).at[
         jnp.where(cross, seg_row, 0)].add(cross.astype(jnp.int32))
@@ -439,7 +469,8 @@ def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
     inbox = buf.reshape(M, n_loc)
 
     seg_log = seg_w if log_of is None else jnp.asarray(log_of)[seg_w]
-    cross = real & (seg_val != ident) & (seg_t // n_loc != seg_log)
+    # mask-driven crossness (see combine_sorted): live segment == real send
+    cross = real & (seg_t // n_loc != seg_log)
     msgs = cross.sum().astype(jnp.int32)
     per_worker = jnp.zeros((M,), jnp.int32).at[
         jnp.where(cross, seg_log, 0)].add(cross.astype(jnp.int32))

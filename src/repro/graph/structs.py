@@ -162,6 +162,13 @@ class PartitionedGraph:
     all_pw: Optional[jnp.ndarray] = None
     mir_pw: Optional[jnp.ndarray] = None
 
+    # (M, M) distinct (source worker, destination vertex) pair counts of
+    # the full adjacency: pair_counts[s, d] bounds the combined messages
+    # worker s can ever route to worker d in one superstep.  The sharded
+    # executor folds worker blocks into per-device-pair caps so the
+    # routed all_to_all exchanges are sized from the graph, not guessed.
+    pair_counts: Optional[np.ndarray] = None
+
     # lazily-built message plans (core/plan.py), keyed (kind, nb, eb);
     # per-instance scratch, never part of equality or the pytree.
     plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -406,6 +413,15 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     vmask = np.zeros((M, n_loc), bool)
     vmask.reshape(-1)[perm] = True
 
+    # per-destination caps (Theorem-1-style static bound): distinct
+    # (source worker, destination vertex) pairs per worker pair — one
+    # unique over the edge list, O(E log E) like the layout sorts above
+    pkey = np.unique(owner.astype(np.int64) * n_ids + dst)
+    pair_counts = np.zeros((M, M), np.int64)
+    np.add.at(pair_counts,
+              ((pkey // n_ids).astype(np.int64),
+               ((pkey % n_ids) // n_loc).astype(np.int64)), 1)
+
     mir_ids_arr = np.full(n_mir, M * n_loc, np.int32)
     mir_ids_arr[:len(mir_vertex_ids)] = mir_vertex_ids
 
@@ -448,4 +464,5 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         balance=balance, split_factor=split_factor, M_phys=M_phys,
         phys_log=phys_log, phys_eg_off=phys_eg, phys_all_off=phys_all,
         phys_mir_off=phys_mir, eg_pw=eg_pw, all_pw=all_pw, mir_pw=mir_pw,
+        pair_counts=pair_counts,
     )

@@ -1,8 +1,8 @@
-"""Sharded-vs-single-device parity harness.
+"""Sharded-vs-single-device parity + memory harness.
 
-Runs every algorithm x layout x backend cell of the conformance matrix
-through the sharded executor at each requested device count and compares
-against the single-device batched simulation:
+Runs algorithm x layout x backend cells of the conformance matrix through
+the sharded executor at each requested device count and compares against
+the single-device batched simulation:
 
 * integer / min / max results (hashmin, sssp, sv, msf labels, attribute
   gather) must be **bitwise identical**;
@@ -10,22 +10,31 @@ against the single-device batched simulation:
   exchange changes float reduction order, nothing else);
 * every ``msgs_*`` / ``per_worker_*`` statistic must be integer-exact;
 * the dense sharded Ch_msg must actually lower to an ``all-to-all``
-  collective (checked in the compiled HLO).
+  collective (checked in the compiled HLO);
+* the routed-exchange memory contract must hold: no compiled sharded
+  channel may all-reduce / all-gather an operand of >= n_pad elements
+  (``check_routed_memory`` — the destination-routed exchange exists
+  precisely to kill the per-device O(n) replicated buffers);
+* masked request lanes must never leak into gathered values
+  (``check_masked_lanes`` — sharded == unsharded bitwise, masked = 0).
 
 Run as a module (it forces the host device count BEFORE importing jax, so
 it works on a plain CPU machine and in CI):
 
-    PYTHONPATH=src python -m repro.launch.shard_check --devices 1 8 \
+    PYTHONPATH=src python -m repro.launch.shard_check --suite tier1 \
         --out shard-parity.json
 
-Exits non-zero on the first violated cell.  tests/test_conformance.py
-drives it in a subprocess (the in-process suite keeps the single-device
-invariant); benchmarks/run.py --smoke asserts its verdict too.
+``--suite tier1`` is the consolidated fast profile driven by the tier-1
+test suite in ONE subprocess; ``--suite full`` is the nightly
+6 algos x 2 layouts x 2 backends x 3 balance modes x devices {1,2,8}
+matrix.  Explicit ``--devices/--algos/--balance/--layouts`` compose a
+custom matrix instead.  Exits non-zero on the first violated cell.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 from repro.launch.xla_flags import force_host_devices
@@ -122,16 +131,22 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
     return report, ok
 
 
-def check_all_to_all(n=180, M=8, tau=8, devices=8) -> bool:
-    """The dense sharded Ch_msg join must compile to a real all-to-all."""
-    from repro.core import exec as exec_mod
-    from repro.core.plan import identity_of
-    import jax.numpy as jnp
+def _test_graph(n, M, tau, layout="csr", balance="hash"):
     from repro.graph import generators as gen
     from repro.graph.structs import partition
 
-    g = gen.powerlaw(n, avg_deg=5, seed=1).symmetrized()
-    pg = partition(g, M, tau=tau, seed=0, layout="csr")
+    g = gen.powerlaw(n, avg_deg=5, seed=1, weighted=True).symmetrized()
+    return partition(g, M, tau=tau, seed=0, layout=layout, balance=balance,
+                     split_factor=1.1)
+
+
+def check_all_to_all(n=180, M=8, tau=8, devices=8) -> bool:
+    """The sharded Ch_msg join must compile to a real all-to-all."""
+    from repro.core import exec as exec_mod
+    from repro.core.plan import identity_of
+    import jax.numpy as jnp
+
+    pg = _test_graph(n, M, tau)
 
     def make_step(gr):
         def step(state, i):
@@ -142,16 +157,260 @@ def check_all_to_all(n=180, M=8, tau=8, devices=8) -> bool:
 
     state0 = jnp.where(pg.vmask, pg.local_ids().astype(jnp.int32),
                        identity_of("min", jnp.int32))
-    fn, args = exec_mod.build_sharded(pg, make_step, state0, 3,
-                                      devices=devices)
+    fn, args, _ = exec_mod.build_sharded(pg, make_step, state0, 3,
+                                         devices=devices)
     txt = fn.lower(*args).compile().as_text()
     found = "all-to-all" in txt
     print(f"[shard_check] dense join lowers to all-to-all: {found}")
     return found
 
 
+# ---------------------------------------------------------------------------
+# routed-exchange memory contract
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"[a-z][a-z0-9]*\[([0-9,]*)\]")
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    out = 1
+    for d in dims.split(","):
+        out *= int(d)
+    return out
+
+
+def collective_operand_elems(hlo_text: str) -> dict:
+    """Per collective kind, the largest result-operand element count in a
+    compiled HLO module — the needle the memory gate looks for: the old
+    executor all-reduced (n_pad,) scatter buffers and all-gathered the
+    full value vector; the routed exchange must leave only scalar / (M,)
+    stats reductions.  Async spellings (``all-reduce-start`` etc.) and
+    the reduce-scatter decomposition fold into their base kind so the
+    gate cannot pass vacuously on backends that pipeline collectives."""
+    worst = {"all-reduce": 0, "all-gather": 0, "all-to-all": 0}
+    spellings = [(f" {kind}{suffix}(", kind)
+                 for kind in worst for suffix in ("", "-start")]
+    spellings += [(" reduce-scatter(", "all-reduce"),
+                  (" reduce-scatter-start(", "all-reduce")]
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for tag, kind in spellings:
+            if tag not in line:
+                continue
+            result = line.split("=", 1)[1].split(tag)[0]
+            for m in _SHAPE_RE.finditer(result):
+                worst[kind] = max(worst[kind], _shape_elems(m.group(1)))
+    return worst
+
+
+def _compiled_channel_programs(pg, devices):
+    """Compile one representative sharded program per gated join family.
+    Returns {name: jax Compiled}."""
+    import jax.numpy as jnp
+    from repro.core import exec as exec_mod
+    from repro.core.channels import broadcast, gather, scatter_state
+    from repro.core.plan import identity_of
+
+    imax = identity_of("min", jnp.int32)
+    ids = pg.local_ids().astype(jnp.int32)
+    state0 = jnp.where(pg.vmask, ids, imax)
+
+    def bcast_step(backend):
+        def make_step(g):
+            def step(state, i):
+                inbox, stats = broadcast(g, state, g.vmask, op="min",
+                                         backend=backend)
+                return jnp.minimum(state, inbox), g.gany(inbox < state), stats
+            return step
+        return make_step
+
+    def scatter_step(g):
+        # S-V-style runtime-target scatter: targets are algorithm state
+        def step(state, i):
+            new, stats = scatter_state(g, state, state, state, g.vmask,
+                                       "min")
+            return new, g.gall(new == state), stats
+        return step
+
+    def gather_step(g):
+        # request-respond pointer chase (the Ch_req two-round trip)
+        def step(state, i):
+            got, stats = gather(g, state, state, g.vmask)
+            new = jnp.minimum(state, got)
+            return new, g.gall(new == state), stats
+        return step
+
+    progs = {}
+    for name, mk, kinds in (
+            ("broadcast_dense", bcast_step("dense"), ()),
+            ("broadcast_plan", bcast_step("pallas"),
+             exec_mod.broadcast_plan_kinds("pallas")),
+            ("runtime_scatter", scatter_step, ()),
+            ("request_respond", gather_step, ())):
+        fn, args, _ = exec_mod.build_sharded(pg, mk, state0, 3,
+                                             devices=devices,
+                                             plan_kinds=kinds)
+        progs[name] = fn.lower(*args).compile()
+    return progs
+
+
+def routed_memory_report(pg, devices: int) -> dict:
+    """Compile the gated channel programs and record, per program, the
+    worst collective operand (elements) and the per-device compiled
+    buffer stats (bytes) — the numbers the bench-graph artifact tracks."""
+    report = {"n_pad": int(pg.n_pad), "devices": int(devices),
+              "programs": {}}
+    for name, compiled in _compiled_channel_programs(pg, devices).items():
+        worst = collective_operand_elems(compiled.as_text())
+        entry = {"collective_max_elems": worst}
+        try:
+            ma = compiled.memory_analysis()
+            entry["temp_bytes"] = int(ma.temp_size_in_bytes)
+            entry["argument_bytes"] = int(ma.argument_size_in_bytes)
+            entry["output_bytes"] = int(ma.output_size_in_bytes)
+            entry["peak_live_bytes"] = int(ma.temp_size_in_bytes
+                                           + ma.output_size_in_bytes)
+        except Exception:  # backend without buffer stats
+            pass
+        report["programs"][name] = entry
+    return report
+
+
+def check_routed_memory(n=180, M=8, tau=8, devices=8,
+                        balance="hash") -> dict:
+    """The acceptance gate: at D=8 no sharded channel may all-reduce or
+    all-gather an operand of >= n_pad elements — the replicated-buffer
+    wall the destination-routed exchange removes.  (all-to-all operands
+    are the routed exchange itself and scale with the caps, not n.)"""
+    pg = _test_graph(n, M, tau, balance=balance)
+    rep = routed_memory_report(pg, devices)
+    ok = True
+    for name, entry in rep["programs"].items():
+        worst = entry["collective_max_elems"]
+        bad = max(worst["all-reduce"], worst["all-gather"])
+        cell_ok = bad < pg.n_pad
+        ok &= cell_ok
+        print(f"[shard_check] routed-memory {name}: worst all-reduce/"
+              f"all-gather operand {bad} elems vs n_pad {pg.n_pad}: "
+              + ("OK" if cell_ok else "REPLICATED BUFFER"))
+    rep["ok"] = bool(ok)
+    return rep
+
+
+def check_masked_lanes(n=160, M=8, devices=(8,)) -> bool:
+    """Masked request lanes must never leak into gathered values: the
+    sharded Ch_req output is bitwise identical to the unsharded channel
+    for dedup on AND off, and masked lanes hold exactly the reference
+    fill (0) — even when the masked target id aliases a real vertex."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import exec as exec_mod
+    from repro.core.channels import gather, gather_edges
+
+    ok = True
+    # csr covers both Ch_req shapes: the row-shaped path never touches
+    # edge arrays (layout-independent), the edge-shaped one rides the csr
+    # adjacency
+    for layout in ("csr",):
+        pg = _test_graph(n, M, tau=None, layout=layout)
+        rng = np.random.RandomState(3)
+        vals = jnp.asarray(rng.randn(pg.M, pg.n_loc).astype(np.float32)
+                           + 1.0)  # nonzero everywhere: 0 == masked fill
+        R = 17
+        targets = rng.randint(0, pg.n_pad, (pg.M, R)).astype(np.int32)
+        # masked lanes deliberately alias vertex 0 / hot vertices
+        targets[:, ::3] = 0
+        mask = jnp.asarray(rng.rand(pg.M, R) > 0.4)
+        tj = jnp.asarray(targets)
+
+        for dedup in (True, False):
+            ref, _ = gather(pg, vals, tj, mask, dedup=dedup)
+            ref = np.asarray(ref)
+            masked_zero = bool((ref[~np.asarray(mask)] == 0).all())
+            ok &= masked_zero
+            for D in devices:
+                def mk(g, dd=dedup):
+                    return lambda v, t, m: gather(g, v, t, m, dedup=dd)
+                out, _ = exec_mod.apply_sharded(pg, mk, (vals, tj, mask),
+                                                devices=D)
+                same = bool(np.array_equal(np.asarray(out), ref))
+                ok &= same
+                print(f"[shard_check] masked-lanes gather {layout} "
+                      f"dedup={dedup} devices={D}: "
+                      + ("OK" if same and masked_zero else "LEAK"))
+
+        # edge-shaped twin on the csr layout: targets/mask derived
+        # lane-for-lane from the (device-sliced) adjacency so the same
+        # formula runs identically unsharded and per device
+        if layout == "csr":
+            def lanes(dst, emask):
+                t = (dst * 37 + 13) % pg.n_pad     # arbitrary alias ids
+                m = emask & ((dst * 31 + 7) % 5 > 1)
+                return t, m
+            for dedup in (True, False):
+                def mk(g, dd=dedup):
+                    def fn(v):
+                        t, m = lanes(g.all_dst, g.all_mask)
+                        return gather_edges(g, v, t, m, dedup=dd)
+                    return fn
+                ref, _ = mk(pg)(vals)
+                ref = np.asarray(ref)
+                t_np, m_np = lanes(np.asarray(pg.all_dst),
+                                   np.asarray(pg.all_mask))
+                ok &= bool((ref[~m_np] == 0).all())
+                for D in devices:
+                    out, _ = exec_mod.apply_sharded(pg, mk, (vals,),
+                                                    devices=D)
+                    bounds = exec_mod.device_edge_bounds(pg, D)["all"]
+                    counts = np.diff(bounds)
+                    cap = out.shape[0] // D
+                    flat = np.concatenate(
+                        [np.asarray(out)[d * cap:d * cap + int(counts[d])]
+                         for d in range(D)])
+                    same = bool(np.array_equal(flat, ref))
+                    ok &= same
+                    print(f"[shard_check] masked-lanes gather_edges "
+                          f"dedup={dedup} devices={D}: "
+                          + ("OK" if same else "LEAK"))
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# suites
+# ---------------------------------------------------------------------------
+
+def _suite_cells(suite: str):
+    """Matrix slices per suite: (algos, layouts, backends, devices,
+    balance) tuples."""
+    if suite == "tier1":
+        # one cell per join-family x regime: the pallas row covers every
+        # algorithm at one-worker-per-device, the devices=2 cells pin the
+        # general m_loc>1 collectives, split covers shard-crossing routes,
+        # padded the non-csr edge slicing.  Nightly runs the full matrix.
+        return [
+            (ALGOS, ("csr",), ("pallas",), (8,), "hash"),
+            (("sv",), ("csr",), ("dense",), (2,), "hash"),
+            (("hashmin",), ("csr",), ("pallas",), (8,), "split"),
+        ]
+    if suite == "full":
+        return [
+            (ALGOS, ("padded", "csr"), ("dense", "pallas"), (1, 2, 8),
+             "hash"),
+            (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "edges"),
+            (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "split"),
+        ]
+    raise ValueError(f"unknown suite {suite!r}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=("tier1", "full"), default=None,
+                    help="consolidated profiles (matrix + HLO + memory + "
+                         "masked-lane checks in ONE process); overrides "
+                         "the explicit matrix flags")
     # 1 = degenerate one-device mesh, 2 = several workers per device
     # (m_loc > 1 with real collectives), 8 = one worker per device
     ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 8])
@@ -167,24 +426,39 @@ def main() -> None:
                          "only applies to worker-aligned meshes)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
-    force_host_devices(max(args.devices), default_platform="cpu")
+    force_host_devices(8 if args.suite else max(args.devices),
+                       default_platform="cpu")
 
-    report = None
+    report = {"cells": {}}
     ok = True
-    for bal in args.balance:
-        rep, bok = run_matrix(algos=tuple(args.algos),
-                              layouts=tuple(args.layouts),
-                              device_counts=tuple(args.devices),
-                              n=args.n, M=args.workers, balance=bal)
-        ok &= bok
-        if report is None:
-            report = rep
-        else:
+    if args.suite:
+        for algos, layouts, backends, devs, bal in _suite_cells(args.suite):
+            rep, bok = run_matrix(algos=algos, layouts=layouts,
+                                  backends=backends, device_counts=devs,
+                                  n=args.n, M=args.workers, balance=bal)
+            ok &= bok
             report["cells"].update(rep["cells"])
-    if not args.skip_hlo_check:
         report["all_to_all_in_hlo"] = check_all_to_all(
-            n=args.n, M=args.workers, devices=max(args.devices))
+            n=args.n, M=args.workers, devices=8)
         ok &= report["all_to_all_in_hlo"]
+        report["routed_memory"] = check_routed_memory(
+            n=args.n, M=args.workers, devices=8)
+        ok &= report["routed_memory"]["ok"]
+        report["masked_lanes_ok"] = check_masked_lanes(
+            devices=(1, 8) if args.suite == "full" else (8,))
+        ok &= report["masked_lanes_ok"]
+    else:
+        for bal in args.balance:
+            rep, bok = run_matrix(algos=tuple(args.algos),
+                                  layouts=tuple(args.layouts),
+                                  device_counts=tuple(args.devices),
+                                  n=args.n, M=args.workers, balance=bal)
+            ok &= bok
+            report["cells"].update(rep["cells"])
+        if not args.skip_hlo_check:
+            report["all_to_all_in_hlo"] = check_all_to_all(
+                n=args.n, M=args.workers, devices=max(args.devices))
+            ok &= report["all_to_all_in_hlo"]
     report["ok"] = bool(ok)
     if args.out:
         with open(args.out, "w") as f:

@@ -20,6 +20,16 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+RUN_SLOW = bool(os.environ.get("REPRO_RUN_SLOW"))
+
+
+def sweep(n_full: int) -> int:
+    """Hypothesis example budget: the full sweep nightly
+    (REPRO_RUN_SLOW=1), a 1/3 budget (>= 3) in tier-1 — property tests
+    keep their breadth where the wall-clock budget allows it."""
+    return n_full if RUN_SLOW else max(3, n_full // 3)
+
+
 def pytest_collection_modifyitems(config, items):
     """Skip ``slow``-marked tests unless explicitly requested.
 

@@ -1,0 +1,139 @@
+"""Honest message accounting + overflow-safe totals.
+
+Two regression families:
+
+* Mask-driven crossness: a genuine message whose payload equals the
+  combine identity (a PageRank contribution of exactly 0.0 under sum, an
+  id equal to iinfo.max under min) must still be counted — every combine
+  path (dense scatter, plan/kernel, sorted segmented) counts distinct
+  (source worker, destination) pairs by the SEND mask, never by comparing
+  the combined value against the identity.
+
+* int64 totals: per-superstep counts are int32, but ``bsp.run`` carries
+  totals as (hi, lo) limb pairs and folds them into exact Python ints /
+  numpy int64 on the host — multi-superstep totals past 2^31 must be
+  exact, not wrapped.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bsp
+from repro.core.channels import (broadcast, push_combined,
+                                 push_combined_flat, scatter_combine)
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+
+def _expected_pairs(targets, mask, M, n_loc):
+    """Distinct (source worker, destination) pairs with >= 1 real message,
+    destination owned by another worker — the honest combined count."""
+    pairs = set()
+    for w in range(targets.shape[0]):
+        for k in range(targets.shape[1]):
+            if mask[w, k]:
+                pairs.add((w, int(targets[w, k])))
+    return sum(1 for w, t in pairs if t // n_loc != w)
+
+
+@pytest.mark.parametrize("op,ident_val", [
+    ("sum", 0.0),                 # a 0.0 contribution IS a message
+    ("min", np.float32(np.inf)),  # +inf payload under min
+])
+def test_identity_valued_messages_counted(op, ident_val):
+    M, n_loc, K = 3, 8, 6
+    rng = np.random.RandomState(0)
+    targets = rng.randint(0, M * n_loc, (M, K)).astype(np.int32)
+    mask = np.ones((M, K), bool)
+    mask[1, 2] = False
+    # EVERY payload equals the combine identity: value-driven accounting
+    # would report zero combined messages
+    values = np.full((M, K), ident_val, np.float32)
+    want = _expected_pairs(targets, mask, M, n_loc)
+    assert want > 0
+
+    for backend in ("dense", "pallas"):
+        _, stats = push_combined(jnp.asarray(targets), jnp.asarray(values),
+                                 jnp.asarray(mask), op, M, n_loc,
+                                 backend=backend)
+        assert int(stats["msgs_combined"]) == want, backend
+        assert int(np.asarray(stats["per_worker_combined"]).sum()) == want
+
+    # flat (csr) twin, dense + sorted paths
+    worker = np.repeat(np.arange(M), K).astype(np.int32)
+    for backend in ("dense", "pallas"):
+        _, stats = push_combined_flat(
+            jnp.asarray(targets.reshape(-1)), jnp.asarray(values.reshape(-1)),
+            jnp.asarray(mask.reshape(-1)), jnp.asarray(worker), op, M, n_loc,
+            backend=backend)
+        assert int(stats["msgs_combined"]) == want, f"flat/{backend}"
+
+    # runtime-target scatter (sorted segmented combine)
+    base = jnp.zeros((M, n_loc), jnp.float32)
+    for backend in ("dense", "pallas"):
+        _, stats = scatter_combine(base, jnp.asarray(targets),
+                                   jnp.asarray(values), jnp.asarray(mask),
+                                   op, M, n_loc, backend=backend)
+        assert int(stats["msgs_combined"]) == want, f"scatter/{backend}"
+
+
+def test_identity_payload_invariant_broadcast():
+    """Channel-level: broadcasting all-zero values under sum must report
+    exactly the same message statistics as broadcasting nonzero values
+    with the same activity mask (plan/kernel path included)."""
+    g = gen.powerlaw(150, avg_deg=5, seed=2, weighted=True).symmetrized()
+    for layout in ("csr",):     # the padded twins share the counting code
+        pg = partition(g, 4, tau=8, seed=0, layout=layout)
+        active = pg.vmask
+        ones = jnp.ones((pg.M, pg.n_loc), jnp.float32)
+        zeros = jnp.zeros((pg.M, pg.n_loc), jnp.float32)
+        for backend in ("dense", "pallas"):
+            _, s1 = broadcast(pg, ones, active, op="sum", backend=backend)
+            _, s0 = broadcast(pg, zeros, active, op="sum", backend=backend)
+            for k in s1:
+                np.testing.assert_array_equal(
+                    np.asarray(s0[k]), np.asarray(s1[k]),
+                    err_msg=f"{layout}/{backend}/{k}")
+
+
+BIG = 2 ** 31 - 5
+
+
+def test_totals_exceed_int32_exactly():
+    """8 supersteps of a count just under 2^31 must total exactly
+    8 * (2^31 - 5) — far past int32 — for scalars and (M,) arrays."""
+    def step(state, i):
+        stats = {"msgs_x": jnp.full((), BIG, jnp.int32),
+                 "per_worker_x": jnp.full((3,), BIG, jnp.int32),
+                 "float_x": jnp.ones((), jnp.float32)}
+        return state + 1.0, state >= 7.0, stats
+
+    final, stats, n, hist = bsp.run(step, jnp.zeros(()), 100)
+    assert int(n) == 8
+    assert isinstance(stats["msgs_x"], int)
+    assert stats["msgs_x"] == 8 * BIG
+    assert stats["msgs_x"] > 2 ** 31          # really crossed the boundary
+    pw = np.asarray(stats["per_worker_x"])
+    assert pw.dtype == np.int64
+    np.testing.assert_array_equal(pw, np.full(3, 8 * BIG, np.int64))
+    assert float(stats["float_x"]) == 8.0
+
+
+def test_totals_small_counts_unchanged():
+    """The limb accumulator is invisible for ordinary counts."""
+    def step(state, i):
+        return state + 1.0, state >= 2.0, {"m": jnp.full((), 7, jnp.int32)}
+
+    _, stats, n, _ = bsp.run(step, jnp.zeros(()), 10)
+    assert int(n) == 3 and stats["m"] == 21
+
+
+def test_limb_carry_boundary():
+    """Accumulation that repeatedly wraps the 32-bit boundary stays exact
+    (the unsigned-compare carry)."""
+    def step(state, i):
+        return state + 1.0, state >= 99.0, {"m": jnp.full((), BIG, jnp.int32)}
+
+    _, stats, n, _ = bsp.run(step, jnp.zeros(()), 1000)
+    assert int(n) == 100
+    assert stats["m"] == 100 * BIG

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import sweep
 from repro.algorithms.attr_bcast import attribute_broadcast
 from repro.algorithms.hashmin import hashmin
 from repro.algorithms.msf import msf
@@ -26,7 +27,7 @@ def _check_cc(g, pg, labels, cc_oracle):
     assert len(set(labs)) == len(labs)
 
 
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=sweep(6), deadline=None)
 @given(st.integers(0, 1000), st.sampled_from([4, 8]),
        st.sampled_from(["powerlaw", "two_cliques", "chain"]))
 def test_hashmin_cc(seed, M, kind, ):
@@ -42,9 +43,7 @@ def test_hashmin_cc(seed, M, kind, ):
     _check_cc(g, pg, labels, union_find_cc)
 
 
-@settings(max_examples=6, deadline=None)
-@given(st.integers(0, 1000), st.sampled_from([4, 8]))
-def test_sv_cc(seed, M):
+def _check_sv_cc(seed, M):
     g = gen.powerlaw(400, avg_deg=5, seed=seed).symmetrized()
     pg = partition(g, M, tau=None, seed=seed % 5)
     labels, stats, n = sv(pg)
@@ -52,6 +51,18 @@ def test_sv_cc(seed, M):
     _check_cc(g, pg, labels, union_find_cc)
     # request-respond strictly reduces messages in S-V (Fig. 13)
     assert int(stats["msgs_rr"]) < int(stats["msgs_basic"])
+
+
+def test_sv_cc():
+    """One-seed oracle check in tier-1; the multi-seed sweep is nightly."""
+    _check_sv_cc(11, 8)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 8]))
+def test_sv_cc_sweep(seed, M):
+    _check_sv_cc(seed, M)
 
 
 def test_sv_logarithmic_rounds():
@@ -116,9 +127,7 @@ def test_sssp_relay_with_mirroring():
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
 
 
-@settings(max_examples=5, deadline=None)
-@given(st.integers(0, 100))
-def test_msf_matches_kruskal(seed):
+def _check_msf_kruskal(seed):
     g = gen.powerlaw(300, avg_deg=5, seed=seed, weighted=True).symmetrized()
     pg = partition(g, 8, tau=None, seed=seed % 3)
     (res, stats, n) = msf(pg)
@@ -128,6 +137,18 @@ def test_msf_matches_kruskal(seed):
     assert int(ne) == ne_o
     assert abs(float(tw) - tw_o) < 1e-3
     assert int(stats["msgs_rr"]) < int(stats["msgs_basic"])
+
+
+def test_msf_matches_kruskal():
+    """One-seed oracle check in tier-1; the multi-seed sweep is nightly."""
+    _check_msf_kruskal(7)
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_msf_matches_kruskal_sweep(seed):
+    _check_msf_kruskal(seed)
 
 
 def test_attr_broadcast_annotates_adjacency():

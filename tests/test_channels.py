@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import sweep
 from repro.core import cost_model
 from repro.core.channels import (broadcast, push_combined, rr_gather,
                                  scatter_combine)
@@ -17,7 +18,7 @@ def _rand_pg(n, M, tau, seed, avg_deg=6):
     return g, partition(g, M, tau=tau, seed=seed)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=sweep(15), deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 8), st.integers(40, 400))
 def test_push_combined_matches_numpy(seed, M, n):
     rng = np.random.RandomState(seed % (2 ** 31))
@@ -39,7 +40,7 @@ def test_push_combined_matches_numpy(seed, M, n):
         assert int(stats["msgs_combined"]) <= int(stats["msgs_basic"])
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000))
 def test_rr_gather_matches_take_and_thm3(seed):
     rng = np.random.RandomState(seed % (2 ** 31))
@@ -87,6 +88,7 @@ def test_mirroring_equivalence():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow  # bench --smoke asserts the same Fig.12 property at scale
 def test_mirroring_reduces_messages_on_skewed_graph():
     """The paper's headline effect (Fig. 12, BTC/Hash-Min)."""
     g = gen.powerlaw(3000, avg_deg=8, seed=5, alpha=1.8).symmetrized()
@@ -135,6 +137,7 @@ def test_thm1_thm3_bounds(M, d):
     assert cost_model.thm3_bound(M, d) == 2 * min(M, d)
 
 
+@pytest.mark.slow
 def test_cost_model_tau_is_near_optimal():
     """Sweeping tau on a skewed graph: the Thm-2 tau is within 20% of the
     best tested threshold's message count (paper §7.1 claim)."""

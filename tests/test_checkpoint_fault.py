@@ -43,6 +43,7 @@ def test_restore_or_init(tmp_path):
     np.testing.assert_array_equal(np.asarray(state2["w"]), 9.0 * np.ones(3))
 
 
+@pytest.mark.slow  # multi-restart BSP loop: nightly
 def test_preemption_continuity(tmp_path):
     """Kill training mid-run; the resumed loss curve equals the straight
     run bit-for-bit (deterministic data + checkpointed state)."""

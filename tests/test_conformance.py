@@ -96,8 +96,22 @@ CASES = ([(a, m) for a in ("hashmin", "pagerank", "sssp")
          + [(a, False) for a in ("sv", "msf", "attr_bcast")])
 
 
-@pytest.mark.parametrize("layout,backend", LAYOUT_BACKEND)
-@pytest.mark.parametrize("algo,mirror", CASES)
+def _cell_params():
+    # the padded/pallas sv+msf cells are the two slowest of the matrix;
+    # their csr twins and the padded/dense reference stay in tier-1
+    out = []
+    for algo, mirror in CASES:
+        for layout, backend in LAYOUT_BACKEND:
+            p = (algo, mirror, layout, backend)
+            if algo in ("sv", "msf") and (layout, backend) == ("padded",
+                                                              "pallas"):
+                out.append(pytest.param(*p, marks=pytest.mark.slow))
+            else:
+                out.append(pytest.param(*p))
+    return out
+
+
+@pytest.mark.parametrize("algo,mirror,layout,backend", _cell_params())
 def test_conformance_matrix(algo, mirror, layout, backend):
     ref_exact, ref_approx, ref_stats, ref_n = _run(algo, mirror,
                                                    "padded", "dense")
@@ -113,18 +127,13 @@ def test_conformance_matrix(algo, mirror, layout, backend):
     _assert_stats_equal(stats, ref_stats, ctx)
 
 
-def test_sharded_conformance_matrix():
-    """The sharded axis of the matrix: every algo x backend x layout cell
-    must be bitwise identical (min/max results; pagerank to float
-    tolerance) and stats-identical between devices 1 / 2 / 8 and the
-    single-device batched simulation (devices=2 pins the general
-    several-workers-per-device collectives, devices=8 the
-    one-worker-per-device extreme), and the dense Ch_msg join must
-    lower to a real all-to-all.
-
-    The in-process suite keeps the repo's one-device invariant, so the
-    whole matrix runs in ONE subprocess with 8 forced host CPU devices
-    (launch/shard_check.py sets XLA_FLAGS before importing jax)."""
+def _run_shard_suite(suite):
+    """Run one consolidated shard_check suite in ONE subprocess (the
+    in-process tests keep the repo's one-device invariant; shard_check
+    sets XLA_FLAGS for 8 host CPU devices before importing jax).  The
+    suite covers the parity matrix PLUS the all-to-all HLO assertion, the
+    routed-memory gate (no >= n_pad all-reduce/all-gather operand at
+    D=8), and the masked-request-lane parity check."""
     import json
     import os
     import subprocess
@@ -133,22 +142,46 @@ def test_sharded_conformance_matrix():
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     src = os.path.join(root, "src")
-    out = os.path.join(tempfile.mkdtemp(), "shard-parity.json")
+    out = os.path.join(tempfile.mkdtemp(), f"shard-{suite}.json")
     env = dict(os.environ)
     env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
                          if env.get("PYTHONPATH") else src)
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.shard_check",
-         "--devices", "1", "2", "8", "--out", out],
-        capture_output=True, text=True, timeout=1800, env=env, cwd=root)
+         "--suite", suite, "--out", out],
+        capture_output=True, text=True, timeout=3600, env=env, cwd=root)
     assert r.returncode == 0, (r.stdout[-4000:] + "\n" + r.stderr[-4000:])
     report = json.load(open(out))
     bad = {cell: errs for cell, errs in report["cells"].items() if errs}
     assert not bad, bad
-    assert report["all_to_all_in_hlo"], "dense join did not lower to " \
-                                        "all-to-all"
-    # every cell of the full 6-algo matrix must have been exercised
-    assert len(report["cells"]) == 6 * 2 * 2 * 3
+    assert report["all_to_all_in_hlo"], "join did not lower to all-to-all"
+    assert report["routed_memory"]["ok"], report["routed_memory"]
+    assert report["masked_lanes_ok"]
+    return report
+
+
+def test_sharded_conformance_suite():
+    """Tier-1 sharded axis, consolidated in ONE subprocess: a curated
+    join-family x regime slice of the matrix (every algorithm at
+    one-worker-per-device, m_loc>1 collectives, split shard-crossing
+    routes, padded slicing) plus the HLO / routed-memory / masked-lane
+    checks.  The FULL 6 x 2 x 2 x 3 x {1,2,8} matrix runs nightly
+    (``-m slow``); the tier-1 slice keeps every algorithm at D=8, the
+    m_loc>1 regime through S-V (every join family: broadcast, gather,
+    runtime scatter), and a split cell."""
+    report = _run_shard_suite("tier1")
+    assert len(report["cells"]) == 8
+
+
+@pytest.mark.slow
+def test_sharded_conformance_matrix_full():
+    """Nightly: the full conformance matrix — 6 algos x 2 layouts x 2
+    backends x devices {1,2,8} under balance=hash plus the csr cells of
+    balance edges/split at every device count — bitwise / integer-exact
+    vs the unsharded reference."""
+    report = _run_shard_suite("full")
+    # hash: 6*2*2*3; edges: 6*1*2*3; split: 6*1*2*3
+    assert len(report["cells"]) == 72 + 36 + 36
 
 
 BAL_N, BAL_M = 240, 4
@@ -208,8 +241,12 @@ def _run_balance(algo, balance, backend):
     return [np.asarray(eattr)[np.argsort(key)]], None, stats
 
 
-@pytest.mark.parametrize("algo", ("hashmin", "pagerank", "sssp", "sv",
-                                  "msf", "attr_bcast"))
+# sv/msf run many BSP rounds x 3 balance modes x 2 backends: the two
+# slowest cells of the in-process suite move to the nightly slow run
+@pytest.mark.parametrize(
+    "algo", ("hashmin", "pagerank", "sssp", "attr_bcast",
+             pytest.param("sv", marks=pytest.mark.slow),
+             pytest.param("msf", marks=pytest.mark.slow)))
 def test_balance_axis_conformance(algo):
     """The balance mode is a placement choice, never a semantic one:
     canonicalized results agree across {hash, edges, split}; within a
@@ -242,37 +279,6 @@ def test_balance_axis_conformance(algo):
     np.testing.assert_array_equal(
         np.asarray(ref["edges"]["msgs_basic"]),
         np.asarray(ref["split"]["msgs_basic"]), err_msg=algo)
-
-
-def test_sharded_balance_matrix():
-    """The balance axis of the sharded matrix: every algo x backend cell
-    under balance="edges" and balance="split" (csr) must be bitwise /
-    stats-identical between devices {1, 8} and the single-device batched
-    simulation — the split physical shards never straddle devices, so
-    the per-device accounting must compose exactly."""
-    import json
-    import os
-    import subprocess
-    import sys
-    import tempfile
-
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    src = os.path.join(root, "src")
-    out = os.path.join(tempfile.mkdtemp(), "balance-parity.json")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
-                         if env.get("PYTHONPATH") else src)
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.shard_check",
-         "--devices", "1", "8", "--balance", "edges", "split",
-         "--layouts", "csr", "--skip-hlo-check", "--out", out],
-        capture_output=True, text=True, timeout=1800, env=env, cwd=root)
-    assert r.returncode == 0, (r.stdout[-4000:] + "\n" + r.stderr[-4000:])
-    report = json.load(open(out))
-    bad = {cell: errs for cell, errs in report["cells"].items() if errs}
-    assert not bad, bad
-    # 6 algos x csr x 2 backends x 2 device counts x 2 balance modes
-    assert len(report["cells"]) == 6 * 2 * 2 * 2
 
 
 def test_split_shards_partition_csr_rows():

@@ -2,6 +2,8 @@
 steps on a small fake mesh (subprocess, 8 devices) and assert batch
 sharding survives the embedding (the §Perf iteration-1 defect class)."""
 import subprocess
+
+import pytest
 import sys
 import textwrap
 
@@ -16,6 +18,7 @@ def _run(code: str, timeout=900):
     return r.stdout
 
 
+@pytest.mark.slow  # 8-device subprocess dry-run: nightly
 def test_train_step_lowers_sharded():
     out = _run("""
         import os
@@ -54,6 +57,7 @@ def test_train_step_lowers_sharded():
     assert "train lower OK" in out
 
 
+@pytest.mark.slow  # 8-device subprocess dry-run: nightly
 def test_decode_step_lowers_with_cache_specs():
     out = _run("""
         import os
@@ -92,6 +96,7 @@ def test_decode_step_lowers_with_cache_specs():
     assert "decode lower OK" in out
 
 
+@pytest.mark.slow  # 8-device subprocess dry-run: nightly
 def test_collective_parser():
     from repro.launch.hlo_stats import collective_bytes
     hlo = """

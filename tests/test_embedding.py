@@ -5,11 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from conftest import sweep
 from repro.models.embedding import (dedup_ids, embed_lookup, logits_matmul,
                                     softmax_xent)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=sweep(15), deadline=None)
 @given(st.integers(0, 10_000), st.integers(4, 200), st.integers(8, 64))
 def test_lookup_methods_agree(seed, V, T):
     rng = np.random.RandomState(seed)

@@ -77,12 +77,16 @@ def test_segment_combine_end_to_end(seed, op, E, N):
 # flash attention
 # ---------------------------------------------------------------------------
 
+# tier-1 keeps one causal and one non-causal cell; the rest nightly
 @pytest.mark.parametrize("B,S,H,K,hd,causal,window,dtype", [
     (2, 256, 4, 2, 32, True, 0, jnp.float32),
-    (1, 512, 4, 4, 64, True, 128, jnp.float32),
     (2, 128, 8, 2, 16, False, 0, jnp.float32),
-    (1, 256, 4, 1, 32, True, 0, jnp.bfloat16),   # MQA, bf16
-    (1, 128, 2, 2, 128, True, 64, jnp.float32),  # hd = lane width
+    pytest.param(1, 512, 4, 4, 64, True, 128, jnp.float32,
+                 marks=pytest.mark.slow),
+    pytest.param(1, 256, 4, 1, 32, True, 0, jnp.bfloat16,
+                 marks=pytest.mark.slow),   # MQA, bf16
+    pytest.param(1, 128, 2, 2, 128, True, 64, jnp.float32,
+                 marks=pytest.mark.slow),   # hd = lane width
 ])
 def test_flash_attention_vs_ref(B, S, H, K, hd, causal, window, dtype):
     key = jax.random.PRNGKey(0)
@@ -123,8 +127,9 @@ def test_flash_attention_matches_model_attention():
 
 @pytest.mark.parametrize("b,s,h,p,n,chunk", [
     (2, 256, 4, 16, 32, 64),
-    (1, 128, 2, 64, 128, 128),   # full-size head dims
-    (3, 64, 8, 8, 16, 16),
+    pytest.param(1, 128, 2, 64, 128, 128,
+                 marks=pytest.mark.slow),   # full-size head dims
+    pytest.param(3, 64, 8, 8, 16, 16, marks=pytest.mark.slow),
 ])
 def test_ssd_kernel_vs_recurrent(b, s, h, p, n, chunk):
     key = jax.random.PRNGKey(0)
@@ -139,6 +144,7 @@ def test_ssd_kernel_vs_recurrent(b, s, h, p, n, chunk):
     assert float(jnp.abs(y1 - y2).max()) < 5e-3
 
 
+@pytest.mark.slow
 def test_ssd_model_impl_matches_kernel():
     key = jax.random.PRNGKey(3)
     b, s, h, p, n, chunk = 2, 128, 4, 16, 32, 32
@@ -153,6 +159,7 @@ def test_ssd_model_impl_matches_kernel():
     assert float(jnp.abs(ym - yk).max()) < 5e-3
 
 
+@pytest.mark.slow
 def test_ssd_decode_matches_scan():
     """The O(1) decode recurrence continues the chunked scan exactly."""
     from repro.models.ssm import ssd_decode_step

@@ -8,6 +8,7 @@ sees) contains the adjacent ids 2^24 and 2^24 + 1 in different components,
 and the message path itself must transport an id > 2^24 exactly.
 """
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
 from repro.core.plan import identity_of
@@ -21,6 +22,7 @@ def _label_of(pg, labels, new_id):
     return int(np.asarray(labels).reshape(-1)[new_id])
 
 
+@pytest.mark.slow  # 16.7M-vertex host arrays: nightly
 def test_hashmin_distinguishes_ids_straddling_2_24():
     """Two components whose min ids are 2^24 and 2^24 + 1 must keep
     distinct labels, and the +1 label must survive being *sent* through

@@ -48,6 +48,7 @@ def test_moe_ref_no_drop_equals_dense_mix():
     assert float(aux) > 0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     key = jax.random.PRNGKey(0)
     T, D, E, F = 64, 8, 4, 16
@@ -62,6 +63,7 @@ def test_moe_capacity_drops_tokens():
     assert (hi_norm < 1e-9).sum() == 0
 
 
+@pytest.mark.slow  # subprocess with 8 forced host devices: nightly
 def test_moe_ep_matches_ref_multidevice():
     """shard_map EP dispatch == local reference (8 fake devices)."""
     import subprocess, sys, textwrap

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import sweep
 from repro.core import plan as planlib
 from repro.core.channels import broadcast, push_combined, scatter_combine
 from repro.graph import generators as gen
@@ -36,7 +37,7 @@ def _assert_inbox_equal(a, b, op):
         np.testing.assert_array_equal(a, b)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 8),
        st.sampled_from(["min", "max", "sum"]),
        st.sampled_from([None, 6, 16]))
@@ -58,7 +59,7 @@ def test_broadcast_backend_equivalence(seed, M, op, tau):
         _assert_stats_equal(sa, sb)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 8),
        st.sampled_from(["min", "max", "sum"]))
 def test_scatter_combine_backend_equivalence(seed, M, op):

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from conftest import sweep
 from repro.core.channels import _dedup_row, rr_gather, rr_gather_flat
 
 
@@ -23,7 +24,7 @@ def _case(seed, M=5, n_loc=40, R=60, hot_frac=0.4):
             M, n_loc, R)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=sweep(15), deadline=None)
 @given(st.integers(0, 10_000))
 def test_thm3_bound_two_M_per_distinct_target(seed):
     """msgs_rr <= 2 * M * (#distinct requested targets): each distinct
@@ -40,7 +41,7 @@ def test_thm3_bound_two_M_per_distinct_target(seed):
     assert int(stats["msgs_rr"]) <= bound
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=sweep(15), deadline=None)
 @given(st.integers(0, 10_000))
 def test_dedup_row_idempotent(seed):
     """Deduplicating an already-deduplicated request list is a no-op."""
@@ -52,7 +53,7 @@ def test_dedup_row_idempotent(seed):
     np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000))
 def test_dedup_gains_nothing_on_unique_targets(seed):
     """When every worker's masked targets are already distinct,
@@ -68,7 +69,7 @@ def test_dedup_gains_nothing_on_unique_targets(seed):
     assert int(stats["msgs_rr"]) == int(stats["msgs_basic"])
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000))
 def test_dedup_false_same_values_basic_counts(seed):
     """dedup only changes the message accounting, never the values."""
@@ -82,7 +83,7 @@ def test_dedup_false_same_values_basic_counts(seed):
                                   np.asarray(s_n["per_worker_basic"]))
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=sweep(10), deadline=None)
 @given(st.integers(0, 10_000))
 def test_flat_matches_padded_values_and_stats(seed):
     """rr_gather_flat (csr layout) reproduces the padded channel's

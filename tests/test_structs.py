@@ -101,3 +101,23 @@ def test_partition_rejects_unknown_layout():
     g = gen.chain(16)
     with pytest.raises(ValueError):
         partition(g, 2, layout="coo")
+
+
+def test_pair_counts_bound_routed_traffic():
+    """pair_counts[s, d] is exactly the number of distinct (source worker,
+    destination vertex) pairs of the full adjacency — the static cap the
+    routed sharded exchange sizes its all_to_all lanes from."""
+    g = gen.powerlaw(240, avg_deg=6, seed=4, weighted=True).symmetrized()
+    for M in (4, 8):
+        pg = partition(g, M, tau=10, seed=1, layout="csr")
+        pc = pg.pair_counts
+        assert pc.shape == (M, M) and (pc >= 0).all()
+        src = np.asarray(pg.all_src)
+        dst = np.asarray(pg.all_dst)
+        pairs = set(zip((src // pg.n_loc).tolist(), dst.tolist()))
+        ref = np.zeros((M, M), np.int64)
+        for sw, d in pairs:
+            ref[sw, d // pg.n_loc] += 1
+        np.testing.assert_array_equal(pc, ref)
+        # total distinct pairs can never exceed the edge count
+        assert pc.sum() == len(pairs) <= g.m
