@@ -1,0 +1,48 @@
+"""Merge every ``BENCH_*.json`` gate artifact into one summary file.
+
+CI runs one hard-gated benchmark per perf surface (balance, graph,
+pipeline), each writing its own ``BENCH_<name>.json`` artifact.  The
+``bench-summary`` job downloads them all and runs this script so the
+whole perf trajectory of a commit is a single download:
+
+    python benchmarks/collect_summary.py --root artifacts \
+        --out bench-summary.json
+
+Exits non-zero when no report is found (a silently empty summary would
+read as "no perf surface regressed" when nothing was measured at all).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def collect(root: str = ".", out: str = "bench-summary.json") -> dict:
+    summary: dict = {"reports": {}, "sources": {}}
+    for p in sorted(Path(root).rglob("BENCH_*.json")):
+        name = p.stem[len("BENCH_"):]
+        summary["reports"][name] = json.loads(p.read_text())
+        summary["sources"][name] = str(p)
+        print(f"[bench-summary] merged {name} <- {p}")
+    if not summary["reports"]:
+        raise SystemExit(
+            f"[bench-summary] no BENCH_*.json found under {root!r} — "
+            f"nothing was measured")
+    Path(out).write_text(json.dumps(summary, indent=2))
+    print(f"[bench-summary] {len(summary['reports'])} report(s) -> {out}")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".",
+                    help="directory searched recursively for BENCH_*.json "
+                         "(the downloaded-artifacts dir in CI)")
+    ap.add_argument("--out", default="bench-summary.json")
+    args = ap.parse_args()
+    collect(root=args.root, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Quickstart: the paper's two techniques in 40 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [scale]
 """
 import sys
 from pathlib import Path
@@ -16,7 +16,8 @@ from repro.graph import generators as gen
 from repro.graph.structs import partition
 
 # A skewed graph: a few vertices have enormous degree (BTC/Twitter-like).
-g = gen.powerlaw(20_000, avg_deg=8, alpha=1.8, seed=0).symmetrized()
+scale = int(sys.argv[1]) if len(sys.argv) > 1 else 20_000
+g = gen.powerlaw(scale, avg_deg=8, alpha=1.8, seed=0).symmetrized()
 M = 16
 deg = g.out_degrees()
 tau = choose_tau(deg, M)

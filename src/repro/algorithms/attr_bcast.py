@@ -14,7 +14,8 @@ from repro.graph.structs import PartitionedGraph
 
 def attribute_broadcast(pg: PartitionedGraph, attr,
                         backend: str = "dense",
-                        devices: int | None = None):
+                        devices: int | None = None,
+                        pipeline: bool = False):
     """attr: (M, n_loc) vertex attribute.  Returns (edge_attr aligned with
     pg.all_dst — (M, A_loc) padded layout, (E,) csr layout — and stats).
     stats['msgs_basic'] is the 3-superstep Pregel cost (request+response
@@ -35,7 +36,7 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
         return out, stats
 
     out, stats = exec_mod.apply_sharded(pg, make_fn, (attr,),
-                                        devices=devices)
+                                        devices=devices, pipeline=pipeline)
     if pg.layout == "csr":
         # sharded csr outputs come back device-concatenated with per-device
         # padding: strip back to the flat (E,) edge order (split partitions

@@ -21,10 +21,13 @@ from repro.graph.structs import PartitionedGraph
 
 def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
             use_mirroring: bool = True, record_history: bool = False,
-            backend: str = "dense", devices: int | None = None):
+            backend: str = "dense", devices: int | None = None,
+            pipeline: bool = False):
     """Returns (labels, stats, n_supersteps[, history]).  ``devices=None``
     runs the single-device batched simulation; an int runs the sharded
-    executor over that many devices (bitwise-identical labels & stats)."""
+    executor over that many devices (bitwise-identical labels & stats).
+    ``pipeline=True`` double-buffers the sharded exchanges (still
+    bitwise — min combine)."""
     imax = identity_of("min", jnp.int32)
 
     def make_step(g):
@@ -45,13 +48,15 @@ def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
     if devices is None:
         st, stats, n, hist = bsp.run(jax.jit(make_step(pg)), state0,
                                      max_supersteps,
-                                     record_history=record_history)
+                                     record_history=record_history,
+                                     pipeline=pipeline)
     else:
         st, stats, n, hist = exec_mod.run_sharded(
             pg, make_step, state0, max_supersteps,
             record_history=record_history, devices=devices,
             plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring))
+                                                     use_mirroring),
+            pipeline=pipeline)
     minv = st[0]
     if record_history:
         return minv, stats, n, hist

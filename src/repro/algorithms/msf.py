@@ -28,7 +28,8 @@ IMAX = jnp.iinfo(jnp.int32).max
 
 
 def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
-        backend: str = "dense", devices: int | None = None):
+        backend: str = "dense", devices: int | None = None,
+        pipeline: bool = False):
     """Returns ((labels, total_weight, n_edges), stats, rounds).
     Requires pg built from a *weighted, symmetrized* graph.
 
@@ -124,8 +125,9 @@ def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
               jnp.zeros((), jnp.int32))
     if devices is None:
         st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
-                                  max_rounds)
+                                  max_rounds, pipeline=pipeline)
     else:
         st, stats, n, _ = exec_mod.run_sharded(pg, make_step, state0,
-                                               max_rounds, devices=devices)
+                                               max_rounds, devices=devices,
+                                               pipeline=pipeline)
     return st, stats, n

@@ -14,8 +14,10 @@ from repro.graph.structs import PartitionedGraph
 def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
              tol: float = 1e-4, use_mirroring: bool = True,
              record_history: bool = False, backend: str = "dense",
-             devices: int | None = None):
-    """Returns (pr, stats, n_supersteps[, history])."""
+             devices: int | None = None, pipeline: bool = False):
+    """Returns (pr, stats, n_supersteps[, history]).  ``pipeline=True``
+    double-buffers the sharded exchanges (sum combine: values agree to
+    the usual float exchange-order round-off; stats stay exact)."""
     n = pg.n
 
     def make_step(g):
@@ -38,13 +40,15 @@ def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
     pr0 = jnp.where(pg.vmask, 1.0 / n, 0.0)
     if devices is None:
         st, stats, nss, hist = bsp.run(jax.jit(make_step(pg)), pr0, n_iters,
-                                       record_history=record_history)
+                                       record_history=record_history,
+                                       pipeline=pipeline)
     else:
         st, stats, nss, hist = exec_mod.run_sharded(
             pg, make_step, pr0, n_iters, record_history=record_history,
             devices=devices,
             plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring))
+                                                     use_mirroring),
+            pipeline=pipeline)
     if record_history:
         return st, stats, nss, hist
     return st, stats, nss

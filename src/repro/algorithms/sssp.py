@@ -14,7 +14,7 @@ from repro.graph.structs import PartitionedGraph
 
 def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
          use_mirroring: bool = True, backend: str = "dense",
-         devices: int | None = None):
+         devices: int | None = None, pipeline: bool = False):
     """source: vertex id in the *relabeled* space (use pg.perm[orig])."""
 
     def make_step(g):
@@ -35,10 +35,11 @@ def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
     state0 = (dist0, ids == source)
     if devices is None:
         st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
-                                  max_supersteps)
+                                  max_supersteps, pipeline=pipeline)
     else:
         st, stats, n, _ = exec_mod.run_sharded(
             pg, make_step, state0, max_supersteps, devices=devices,
             plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring))
+                                                     use_mirroring),
+            pipeline=pipeline)
     return st[0], stats, n

@@ -39,7 +39,8 @@ def _acc(stats, s, workers):
 
 
 def sv(pg: PartitionedGraph, max_supersteps: int = 64,
-       backend: str = "dense", devices: int | None = None):
+       backend: str = "dense", devices: int | None = None,
+       pipeline: bool = False):
     """Returns (labels (M, n_loc) int32 = min id of each CC, stats, rounds)."""
     imax = identity_of("min", jnp.int32)
 
@@ -99,10 +100,12 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64,
 
     D0 = pg.local_ids().astype(jnp.int32)
     if devices is None:
-        D, stats, n, _ = bsp.run(jax.jit(make_step(pg)), D0, max_supersteps)
+        D, stats, n, _ = bsp.run(jax.jit(make_step(pg)), D0, max_supersteps,
+                                 pipeline=pipeline)
     else:
         D, stats, n, _ = exec_mod.run_sharded(
             pg, make_step, D0, max_supersteps, devices=devices,
             plan_kinds=exec_mod.broadcast_plan_kinds(
-                backend, use_mirroring=False))
+                backend, use_mirroring=False),
+            pipeline=pipeline)
     return D, stats, n

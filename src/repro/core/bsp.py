@@ -91,7 +91,8 @@ def finalize_totals(acc, treedef):
 
 
 def run(step: Callable, state, max_supersteps: int,
-        record_history: bool = False, raw_totals: bool = False
+        record_history: bool = False, raw_totals: bool = False,
+        pipeline: bool = False
         ) -> Tuple[object, Dict, jnp.ndarray, Optional[Dict]]:
     """Run ``step`` until halt or max_supersteps.
 
@@ -106,30 +107,49 @@ def run(step: Callable, state, max_supersteps: int,
     it passes ``raw_totals=True`` to get the raw limb list back (fold it
     with ``finalize_totals`` + the treedef of the per-superstep stats
     once outside the jit boundary).
+
+    ``pipeline=True`` double-buffers the (hi, lo) limb fold: superstep
+    ``i``'s counts are carried one iteration and folded while superstep
+    ``i+1``'s exchange is in flight (the last pending superstep folds in
+    an epilogue after the loop).  Limb addition is associative and the
+    initial pending slot is all-zero, so totals are bit-identical to the
+    unpipelined fold — the flag only moves the add off the superstep's
+    critical path.
     """
     _, _, stats0 = jax.eval_shape(step, state, jnp.zeros((), jnp.int32))
     leaves0, treedef = jax.tree.flatten(stats0)
     zero_acc = acc_init(leaves0)
+    zero_pending = [jnp.zeros(s.shape, s.dtype) for s in leaves0]
     history0 = None
     if record_history:
         history0 = jax.tree.map(
             lambda s: jnp.zeros((max_supersteps,) + s.shape, s.dtype), stats0)
 
     def cond(carry):
-        _, halted, i, _, _ = carry
+        _, halted, i, _, _, _ = carry
         return (~halted) & (i < max_supersteps)
 
     def body(carry):
-        st, _, i, acc, hist = carry
+        st, _, i, acc, hist, pending = carry
         st, halted, stats = step(st, i)
-        acc = acc_add(acc, jax.tree.leaves(stats))
+        leaves = jax.tree.leaves(stats)
+        if pipeline:
+            # fold the PREVIOUS superstep's counts while this superstep's
+            # exchange is still in flight; stash this one for the next
+            # iteration (or the epilogue)
+            acc = acc_add(acc, pending)
+            pending = leaves
+        else:
+            acc = acc_add(acc, leaves)
         if record_history:
             hist = jax.tree.map(lambda h, s: h.at[i].set(s), hist, stats)
-        return st, halted, i + 1, acc, hist
+        return st, halted, i + 1, acc, hist, pending
 
     carry = (state, jnp.zeros((), bool), jnp.zeros((), jnp.int32),
-             zero_acc, history0)
-    st, _, n, acc, hist = jax.lax.while_loop(cond, body, carry)
+             zero_acc, history0, zero_pending)
+    st, _, n, acc, hist, pending = jax.lax.while_loop(cond, body, carry)
+    if pipeline:
+        acc = acc_add(acc, pending)          # the last deferred superstep
     if raw_totals:
         return st, acc, n, hist
     return st, finalize_totals(acc, treedef), n, hist

@@ -89,6 +89,15 @@ AXIS = "w"
 
 _MERGE = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}
 
+# Exchange chunks per superstep join when the double-buffered pipeline is
+# on: each routed exchange is split into ~this many cap-sized chunks so
+# chunk k's all_to_all can fly while chunk k-1 combines locally.  Two is
+# the minimum that overlaps at all — exactly one exchange outstanding,
+# matching the two-slot buffer — and each extra chunk deepens the
+# pipeline at the price of another collective launch + kernel dispatch
+# per join, which only pays off once collectives are asynchronous.
+DEFAULT_PIPELINE_CHUNKS = 2
+
 
 def broadcast_plan_kinds(backend: str, use_mirroring: bool = True) -> tuple:
     """The message plans the executor must pre-build (per device) for one
@@ -143,7 +152,16 @@ class TracedPlan:
     ``xseg``/``xval`` index MY segments per destination device (send side);
     ``rblk``/``rval`` give, per source device, the local destination block
     of each segment routed to me (receive side) — both built statically at
-    stack time, so the all_to_all caps are exact."""
+    stack time, so the all_to_all caps are exact.
+
+    When the pipeline is on, the exchange is additionally blocked into
+    ``n_chunks`` position-chunks of the xcap axis (same chunking on both
+    sides of the all_to_all, so the pair caps stay exact).  Per chunk the
+    tables list the rows feeding its segments (``crow``, chunk-local
+    ``crow_seg`` remap) and the chunk-local exchange indices
+    (``cxseg``/``cxval`` send, ``crblk``/``crval`` receive), so one
+    chunk's rows can run ``segment_combine_blocks`` independently while
+    another chunk's all_to_all is in flight."""
     nb: int
     eb: int
     B_per_w: int
@@ -161,6 +179,18 @@ class TracedPlan:
     xval: jnp.ndarray          # (D, xcap)
     rblk: jnp.ndarray          # (D, xcap) local dst block per source device
     rval: jnp.ndarray          # (D, xcap)
+    # pipeline chunk tables (None when the pipeline is off):
+    n_chunks: int = 1
+    ccap: int = 0                          # exchange lanes per chunk
+    cr: int = 0                            # max rows per chunk
+    cs: int = 0                            # max segments per chunk
+    crow: Optional[jnp.ndarray] = None     # (C, cr) row index
+    crow_ok: Optional[jnp.ndarray] = None  # (C, cr)
+    crow_seg: Optional[jnp.ndarray] = None  # (C, cr) chunk-local segment
+    cxseg: Optional[jnp.ndarray] = None    # (C, D, ccap) chunk-local send
+    cxval: Optional[jnp.ndarray] = None    # (C, D, ccap)
+    crblk: Optional[jnp.ndarray] = None    # (C, D, ccap) local dst block
+    crval: Optional[jnp.ndarray] = None    # (C, D, ccap)
 
 
 def _device_plans(pg, D: int, kind: str, nb: int):
@@ -227,10 +257,16 @@ def _device_plans(pg, D: int, kind: str, nb: int):
     return plans
 
 
-def _stack_plans(plans, m: int):
+def _stack_plans(plans, m: int, chunks: Optional[int] = None):
     """Pad per-device plans to common row/segment counts, build the
     per-destination-device exchange index lists, and stack everything with
-    a leading device axis.  Returns (static_meta, arrays_dict)."""
+    a leading device axis.  Returns (static_meta, arrays_dict).
+
+    ``chunks`` (the pipeline) additionally blocks the xcap axis into
+    position-chunks and emits, per (device, chunk), the static row subset
+    feeding that chunk's segments plus chunk-local segment/exchange
+    remaps — the tables :func:`_combine_with_plan_sharded` walks to
+    overlap chunk k's all_to_all with chunk k±1's local combines."""
     D = len(plans)
     nb, eb = plans[0].nb, plans[0].eb
     bpd = m * plans[0].B_per_w               # destination blocks per device
@@ -278,7 +314,65 @@ def _stack_plans(plans, m: int):
     meta = {"nb": nb, "eb": eb, "B_per_w": plans[0].B_per_w,
             "n_blocks": plans[0].n_blocks, "n_rows": R, "n_segs": S,
             "xcap": xcap}
+    if chunks:
+        meta.update(_chunk_plans(plans, pair, a, D, bpd, xcap, chunks))
     return meta, a
+
+
+def _chunk_plans(plans, pair, a, D: int, bpd: int, xcap: int, chunks: int):
+    """Pipeline chunk tables (see :func:`_stack_plans`).  Chunk c covers
+    positions [c*ccap, (c+1)*ccap) of every pair's exchange list — the
+    same position window on sender and receiver, so a chunk's all_to_all
+    caps stay exact by construction.  Every real segment lands in exactly
+    one chunk (its position in its destination-device list), hence every
+    real row in exactly one chunk's row table: the chunks partition the
+    local combine work."""
+    ccap = max(1, -(-xcap // max(int(chunks), 1)))
+    C = -(-xcap // ccap)
+
+    # collect per (device, chunk): segment list (in d2-major position
+    # order), row list, chunk-local remaps
+    rows_dc, segs_dc = {}, {}
+    for d, p in enumerate(plans):
+        row_seg = p.row_seg            # sorted ascending by construction
+        for c in range(C):
+            seg_list = []              # (d2, j, seg) in collection order
+            row_list = []
+            row_cseg = []
+            for d2 in range(D):
+                sel = pair[(d, d2)][c * ccap:(c + 1) * ccap]
+                for j, s in enumerate(sel):
+                    local = len(seg_list)
+                    seg_list.append((d2, j, int(s)))
+                    lo = np.searchsorted(row_seg, s, "left")
+                    hi = np.searchsorted(row_seg, s, "right")
+                    row_list.extend(range(int(lo), int(hi)))
+                    row_cseg.extend([local] * int(hi - lo))
+            segs_dc[(d, c)] = seg_list
+            rows_dc[(d, c)] = (row_list, row_cseg)
+
+    CR = max(1, max(len(r) for r, _ in rows_dc.values()))
+    CS = max(1, max(len(s) for s in segs_dc.values()))
+    crow = np.zeros((D, C, CR), np.int32)
+    crow_ok = np.zeros((D, C, CR), bool)
+    crow_seg = np.zeros((D, C, CR), np.int32)
+    cxseg = np.zeros((D, C, D, ccap), np.int32)
+    cxval = np.zeros((D, C, D, ccap), bool)
+    crblk = np.zeros((D, C, D, ccap), np.int32)
+    crval = np.zeros((D, C, D, ccap), bool)
+    for (d, c), (row_list, row_cseg) in rows_dc.items():
+        k = len(row_list)
+        crow[d, c, :k] = row_list
+        crow_ok[d, c, :k] = True
+        crow_seg[d, c, :k] = row_cseg
+        for local, (d2, j, s) in enumerate(segs_dc[(d, c)]):
+            cxseg[d, c, d2, j] = local
+            cxval[d, c, d2, j] = True
+            crblk[d2, c, d, j] = plans[d].seg_blk[s] - d2 * bpd
+            crval[d2, c, d, j] = True
+    a.update(crow=crow, crow_ok=crow_ok, crow_seg=crow_seg,
+             cxseg=cxseg, cxval=cxval, crblk=crblk, crval=crval)
+    return {"n_chunks": C, "ccap": ccap, "cr": CR, "cs": CS}
 
 
 # ---------------------------------------------------------------------------
@@ -404,12 +498,21 @@ def _cap_hint(pg, D: int) -> Optional[int]:
     return int(blocks.max())
 
 
-def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
+def _shard_graph(pg, D: int, plan_kinds: Sequence[str],
+                 pipeline: bool = False,
+                 pipeline_chunks: Optional[int] = None):
     """Build the device-stacked array pytree + matching PartitionSpecs."""
     M, n_loc = pg.M, pg.n_loc
     m = M // D
     loc_n = m * n_loc
     split = _is_split(pg)
+    # chunking exists to overlap the collective with the local combine;
+    # on a 1-device mesh the all_to_all is a local transpose, so the
+    # extra kernel dispatches would be pure overhead — default the chunk
+    # count to 1 there (an explicit pipeline_chunks still forces it)
+    chunks = ((pipeline_chunks
+               or (DEFAULT_PIPELINE_CHUNKS if D > 1 else 1))
+              if pipeline else None)
     arrays: Dict = {"vmask": pg.vmask, "deg": pg.deg,
                     "mir_ids": pg.mir_ids, "mir_nworkers": pg.mir_nworkers}
     specs: Dict = {"vmask": P(AXIS), "deg": P(AXIS),
@@ -417,7 +520,8 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
     meta = {"M": M, "n_loc": n_loc, "D": D, "m_loc": m, "n": pg.n,
             "tau": pg.tau, "layout": pg.layout, "split": split,
             "cap_hint": _cap_hint(pg, D), "plan_meta": {},
-            "fetch_meta": {}}
+            "fetch_meta": {}, "pipeline": pipeline,
+            "pipeline_chunks": chunks or 1}
 
     def add_fetch(name, need_lists):
         fmeta, farr = _build_fetch_plan(need_lists, D, loc_n)
@@ -515,7 +619,8 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str]):
 
     for kind in plan_kinds:
         pmeta, parrs = _stack_plans(
-            _device_plans(pg, D, kind, planlib.default_nb()), m)
+            _device_plans(pg, D, kind, planlib.default_nb()), m,
+            chunks=chunks)
         meta["plan_meta"][kind] = pmeta
         for k, v in parrs.items():
             arrays[f"plan_{kind}_{k}"] = v
@@ -565,6 +670,11 @@ class ShardedGraph:
     plans: Dict[str, TracedPlan] = dataclasses.field(default_factory=dict)
     fetch: Dict[str, TracedFetch] = dataclasses.field(default_factory=dict)
     cap_hint: Optional[int] = None
+    # double-buffered pipeline: chunk each routed exchange so chunk k's
+    # all_to_all overlaps chunk k-1's local combine (results stay exact;
+    # see _routed_scatter_combine / _combine_with_plan_sharded)
+    pipeline: bool = False
+    pipeline_chunks: int = 1
     # split partitions (physical shards as the device placement unit):
     split: bool = False
     M_phys: int = 0
@@ -643,6 +753,18 @@ def _make_sg(meta, a) -> ShardedGraph:
 
     plans = {}
     for kind, pm in meta["plan_meta"].items():
+        chunked = {}
+        if "n_chunks" in pm:
+            chunked = dict(
+                n_chunks=pm["n_chunks"], ccap=pm["ccap"],
+                cr=pm["cr"], cs=pm["cs"],
+                crow=a[f"plan_{kind}_crow"][0],
+                crow_ok=a[f"plan_{kind}_crow_ok"][0],
+                crow_seg=a[f"plan_{kind}_crow_seg"][0],
+                cxseg=a[f"plan_{kind}_cxseg"][0],
+                cxval=a[f"plan_{kind}_cxval"][0],
+                crblk=a[f"plan_{kind}_crblk"][0],
+                crval=a[f"plan_{kind}_crval"][0])
         plans[kind] = TracedPlan(
             nb=pm["nb"], eb=pm["eb"], B_per_w=pm["B_per_w"],
             n_blocks=pm["n_blocks"], n_rows=pm["n_rows"],
@@ -656,7 +778,7 @@ def _make_sg(meta, a) -> ShardedGraph:
             xseg=a[f"plan_{kind}_xseg"][0],
             xval=a[f"plan_{kind}_xval"][0],
             rblk=a[f"plan_{kind}_rblk"][0],
-            rval=a[f"plan_{kind}_rval"][0])
+            rval=a[f"plan_{kind}_rval"][0], **chunked)
     fetch = {}
     for name, fm in meta["fetch_meta"].items():
         fetch[name] = TracedFetch(
@@ -684,7 +806,9 @@ def _make_sg(meta, a) -> ShardedGraph:
         mir_esrc=loc("mir_esrc"), mir_edst=loc("mir_edst"),
         mir_emask=loc("mir_emask"), mir_ew=loc("mir_ew"),
         mir_cesrc=a["mir_cesrc"][0],
-        plans=plans, fetch=fetch, cap_hint=meta.get("cap_hint"), **extra)
+        plans=plans, fetch=fetch, cap_hint=meta.get("cap_hint"),
+        pipeline=meta.get("pipeline", False),
+        pipeline_chunks=meta.get("pipeline_chunks", 1), **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -735,16 +859,30 @@ def _round_lanes(off: jnp.ndarray, r, cap: int, L: int):
     return jnp.clip(idx, 0, L - 1), ok
 
 
+def _pipeline_cap(sg: ShardedGraph, cap: int) -> int:
+    """Shrink a routed-exchange round cap so one join spans roughly
+    ``sg.pipeline_chunks`` rounds — the chunks the double buffer overlaps.
+    Only ever shrinks (an explicit small test cap passes through)."""
+    if not (sg.pipeline and sg.pipeline_chunks > 1):
+        return cap
+    return min(cap, max(8, _pad8(-(-cap // sg.pipeline_chunks))))
+
+
 def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
                             op: str, cap: Optional[int] = None
                             ) -> jnp.ndarray:
     """Destination-routed combine: (L,) lanes of (global target, value)
     pairs are bucketed by owner device, exchanged in cap-sized
     ``all_to_all`` rounds, and combined into MY local (m_loc*n_loc,)
-    buffer — the per-device footprint is O(L + D*cap), never (n_pad,)."""
+    buffer — the per-device footprint is O(L + D*cap), never (n_pad,).
+
+    ``sg.pipeline`` double-buffers the rounds: round r's all_to_all is
+    issued before round r-1's received lanes scatter, so the collective
+    flies while the combine runs.  Rounds still combine in the sequential
+    order (r=0,1,...), so the result is bitwise identical."""
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
-    cap = cap or _cap_for(L, D)
+    cap = _pipeline_cap(sg, cap or _cap_for(L, D))
     ident = identity_of(op, values.dtype)
     order, off = _bucket_by_device(sg, targets, valid)
     st_ = jnp.where(valid, targets, sg.n_pad)[order]
@@ -752,19 +890,36 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
     rounds = _rounds_for(sg, off, cap)
     base = sg.w0 * sg.n_loc
 
-    def body(r, buf):
+    def _xchg(r):
         idxc, ok = _round_lanes(off, r, cap, L)
         t_send = jnp.where(ok, st_[idxc], sg.n_pad)
         v_send = jnp.where(ok, sv_[idxc], ident)
-        t_recv = jax.lax.all_to_all(t_send, sg.axis, 0, 0)
-        v_recv = jax.lax.all_to_all(v_send, sg.axis, 0, 0)
+        return (jax.lax.all_to_all(t_send, sg.axis, 0, 0),
+                jax.lax.all_to_all(v_send, sg.axis, 0, 0))
+
+    def _combine(buf, recv):
+        t_recv, v_recv = recv
         slot = t_recv - base
         okr = (slot >= 0) & (slot < loc_n)
         return scatter_op(op, buf, jnp.where(okr, slot, 0),
                           jnp.where(okr, v_recv, ident))
 
     buf0 = jnp.full((loc_n,), ident, values.dtype)
-    return jax.lax.fori_loop(0, rounds, body, buf0)
+    if not sg.pipeline:
+        return jax.lax.fori_loop(
+            0, rounds, lambda r, buf: _combine(buf, _xchg(r)), buf0)
+
+    def body(r, carry):
+        buf, prev = carry
+        cur = _xchg(r)                       # round r in flight...
+        return _combine(buf, prev), cur      # ...while r-1 combines
+
+    # prologue round 0; epilogue combines the last in-flight round.
+    # rounds is replicated (pmax'd) so every device runs the same
+    # collectives; rounds==0 leaves every lane masked -> buf0 unchanged.
+    first = _xchg(jnp.zeros((), jnp.int32))
+    buf, last = jax.lax.fori_loop(1, rounds, body, (buf0, first))
+    return _combine(buf, last)
 
 
 def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
@@ -774,10 +929,15 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
     cap-sized ``all_to_all`` rounds, owners answer from their local
     (m_loc, n_loc) shard, responses travel back on the mirrored lanes.
     Returns (L,) gathered values, 0 where ``~valid`` (the reference
-    convention for masked request lanes)."""
+    convention for masked request lanes).
+
+    ``sg.pipeline`` double-buffers the request rounds: request-chunk r is
+    in flight (out and back) while request-chunk r-1's responses write
+    into the output.  Rounds write disjoint lanes, so the result is
+    bitwise identical to the sequential loop."""
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
-    cap = cap or _cap_for(L, D)
+    cap = _pipeline_cap(sg, cap or _cap_for(L, D))
     flat = vals.reshape(-1)
     ok_t = valid & (targets >= 0) & (targets < sg.n_pad)
     order, off = _bucket_by_device(sg, targets, ok_t)
@@ -785,7 +945,7 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
     rounds = _rounds_for(sg, off, cap)
     base = sg.w0 * sg.n_loc
 
-    def body(r, out):
+    def _trip(r):
         idxc, ok = _round_lanes(off, r, cap, L)
         req = jnp.where(ok, st_[idxc], sg.n_pad)
         req_r = jax.lax.all_to_all(req, sg.axis, 0, 0)
@@ -793,12 +953,26 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
         okr = (slot >= 0) & (slot < loc_n)
         resp = jnp.where(okr, flat[jnp.clip(slot, 0, loc_n - 1)],
                          jnp.zeros((), vals.dtype))
-        resp_b = jax.lax.all_to_all(resp, sg.axis, 0, 0)
+        return idxc, ok, jax.lax.all_to_all(resp, sg.axis, 0, 0)
+
+    def _write(out, trip):
+        idxc, ok, resp_b = trip
         return out.at[jnp.where(ok, idxc, L)].set(
             jnp.where(ok, resp_b, jnp.zeros((), vals.dtype)))
 
     out0 = jnp.zeros((L + 1,), vals.dtype)
-    got_sorted = jax.lax.fori_loop(0, rounds, body, out0)[:L]
+    if not sg.pipeline:
+        got_sorted = jax.lax.fori_loop(
+            0, rounds, lambda r, out: _write(out, _trip(r)), out0)[:L]
+    else:
+        def body(r, carry):
+            out, prev = carry
+            cur = _trip(r)
+            return _write(out, prev), cur
+
+        first = _trip(jnp.zeros((), jnp.int32))
+        out, last = jax.lax.fori_loop(1, rounds, body, (out0, first))
+        got_sorted = _write(out, last)[:L]
     got = jnp.zeros((L,), vals.dtype).at[order].set(got_sorted)
     return jnp.where(ok_t, got, jnp.zeros((), vals.dtype))
 
@@ -806,6 +980,40 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
 # ---------------------------------------------------------------------------
 # sharded channel implementations
 # ---------------------------------------------------------------------------
+
+def _plan_exchange_pipelined(sg: ShardedGraph, plan: TracedPlan,
+                             flat_vals: jnp.ndarray, op: str,
+                             loc: jnp.ndarray, ident) -> jnp.ndarray:
+    """The chunked plan exchange (see _combine_with_plan_sharded): a
+    Python-unrolled double buffer over the static ``plan.n_chunks``
+    chunks.  Chunk c's row subset runs the block-combine kernel and its
+    segment partials are put on the wire before chunk c-1's received
+    partials scatter locally."""
+
+    def send(c):
+        rows_ok = plan.crow_ok[c]
+        row_out = planlib.combine_rows_subset(
+            plan, flat_vals, plan.crow[c], rows_ok, op)
+        sbuf = jnp.full((plan.cs, plan.nb), ident, flat_vals.dtype)
+        seg_out = scatter_op(op, sbuf,
+                             jnp.where(rows_ok, plan.crow_seg[c], 0),
+                             jnp.where(rows_ok[:, None], row_out, ident))
+        snd = jnp.where(plan.cxval[c][:, :, None],
+                        seg_out[plan.cxseg[c]], ident)
+        return jax.lax.all_to_all(snd, sg.axis, 0, 0)
+
+    def combine(buf, c, recv):
+        return scatter_op(op, buf,
+                          jnp.where(plan.crval[c], plan.crblk[c], 0),
+                          jnp.where(plan.crval[c][:, :, None], recv, ident))
+
+    recv = send(0)
+    for c in range(1, plan.n_chunks):
+        nxt = send(c)                        # chunk c in flight...
+        loc = combine(loc, c - 1, recv)      # ...while c-1 scatters
+        recv = nxt
+    return combine(loc, plan.n_chunks - 1, recv)
+
 
 def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
                                flat_vals: jnp.ndarray, op: str,
@@ -822,25 +1030,39 @@ def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
     ``exchange=False`` skips the collective when the caller knows every
     segment is destination-local (the non-split mirror fan-out: mirror
     edges are destination-sharded, so self-routing them through the
-    all_to_all would be a pointless per-superstep collective)."""
-    ident = identity_of(op, flat_vals.dtype)
-    packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
-    row_out = planlib._combine_rows(packed, plan.row_local, op, plan.nb)
-    seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
-    seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
+    all_to_all would be a pointless per-superstep collective).
 
+    When ``sg.pipeline`` and the plan carries chunk tables, the exchange
+    is blocked into ``plan.n_chunks`` position-chunks of the xcap axis:
+    chunk c's rows combine and its all_to_all is issued while chunk c-1's
+    received segments scatter into ``loc`` — the double-buffered overlap.
+    Rows are independent in the block-combine kernel and every real
+    segment lands in exactly one chunk, so min/max/int results stay
+    bitwise identical (float-sum scatter order changes within the
+    tolerance the parity harness already grants sum combines)."""
+    ident = identity_of(op, flat_vals.dtype)
     nbl = sg.m_loc * plan.B_per_w
     loc = jnp.full((nbl, plan.nb), ident, flat_vals.dtype)
-    if exchange:
-        send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg], ident)
-        recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
-        loc = scatter_op(op, loc, jnp.where(plan.rval, plan.rblk, 0),
-                         jnp.where(plan.rval[:, :, None], recv, ident))
+    if exchange and sg.pipeline and plan.crow is not None \
+            and plan.n_chunks > 1:
+        loc = _plan_exchange_pipelined(sg, plan, flat_vals, op, loc, ident)
     else:
-        # all segments are mine: scatter by local block id directly
-        # (padded dummy segments carry all-identity rows — harmless)
-        lblk = jnp.clip(plan.seg_blk - sg.w0 * plan.B_per_w, 0, nbl - 1)
-        loc = scatter_op(op, loc, lblk, seg_out)
+        packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather],
+                           ident)
+        row_out = planlib._combine_rows(packed, plan.row_local, op, plan.nb)
+        seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
+        seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
+        if exchange:
+            send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg],
+                             ident)
+            recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
+            loc = scatter_op(op, loc, jnp.where(plan.rval, plan.rblk, 0),
+                             jnp.where(plan.rval[:, :, None], recv, ident))
+        else:
+            # all segments are mine: scatter by local block id directly
+            # (padded dummy segments carry all-identity rows — harmless)
+            lblk = jnp.clip(plan.seg_blk - sg.w0 * plan.B_per_w, 0, nbl - 1)
+            loc = scatter_op(op, loc, lblk, seg_out)
     inbox = loc.reshape(sg.m_loc, plan.B_per_w * plan.nb)[:, :sg.n_loc]
 
     stats = None
@@ -1208,7 +1430,8 @@ def _acc_specs(stats_shape):
 
 def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
                   record_history: bool = False, devices: int = 1,
-                  plan_kinds: Sequence[str] = ()):
+                  plan_kinds: Sequence[str] = (), pipeline: bool = False,
+                  pipeline_chunks: Optional[int] = None):
     """Build the jitted sharded BSP program.  Returns (fn, args) with
     ``fn(*args) == (final_state, raw_acc, n_supersteps, history)`` —
     fold ``raw_acc`` with ``finalize_stats`` (run_sharded does) to get
@@ -1216,12 +1439,23 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
 
     ``make_step(g)`` must build the superstep function against either a
     PartitionedGraph (used here only to trace the stats structure) or the
-    device-local ShardedGraph."""
+    device-local ShardedGraph.
+
+    ``pipeline=True`` turns on the double-buffered superstep: every
+    routed exchange is chunked (~``pipeline_chunks`` chunks, default
+    ``DEFAULT_PIPELINE_CHUNKS`` on a multi-device mesh, 1 on a single
+    device where the all_to_all is a local transpose and chunk overhead
+    buys nothing) so chunk k's all_to_all overlaps chunk k-1's local
+    combine, and the (hi, lo) stats fold is deferred one superstep
+    (``bsp.run(pipeline=True)``).  Results keep the parity contract:
+    min/max/int bitwise, stats integer-exact, float sums within the
+    usual exchange-order tolerance."""
     if pg.M % devices:
         raise ValueError(f"M={pg.M} workers must divide over "
                          f"devices={devices}")
     mesh = graph_mesh(devices)
-    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds)
+    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds,
+                                           pipeline, pipeline_chunks)
 
     _, _, stats_shape = jax.eval_shape(make_step(pg), state0,
                                        jnp.zeros((), jnp.int32))
@@ -1232,7 +1466,7 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     def inner(arrs, st0):
         sg = _make_sg(meta, arrs)
         return bsp.run(make_step(sg), st0, max_supersteps, record_history,
-                       raw_totals=True)
+                       raw_totals=True, pipeline=pipeline)
 
     fn = shard_map(inner, mesh=mesh,
                    in_specs=(arr_specs, st_specs),
@@ -1251,18 +1485,21 @@ def finalize_stats(raw_acc, stats_shape):
 
 def run_sharded(pg, make_step: Callable, state0, max_supersteps: int,
                 record_history: bool = False, devices: int = 1,
-                plan_kinds: Sequence[str] = ()):
+                plan_kinds: Sequence[str] = (), pipeline: bool = False,
+                pipeline_chunks: Optional[int] = None):
     """Run a BSP program sharded over ``devices`` devices; same return
     contract as ``bsp.run`` (stats totals folded into exact host int64)."""
     fn, args, stats_shape = build_sharded(pg, make_step, state0,
                                           max_supersteps, record_history,
-                                          devices, plan_kinds)
+                                          devices, plan_kinds, pipeline,
+                                          pipeline_chunks)
     st, raw_acc, n, hist = fn(*args)
     return st, finalize_stats(raw_acc, stats_shape), n, hist
 
 
 def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
-                  plan_kinds: Sequence[str] = ()):
+                  plan_kinds: Sequence[str] = (), pipeline: bool = False,
+                  pipeline_chunks: Optional[int] = None):
     """One-shot sharded channel application (no BSP loop): ``make_fn(sg)``
     returns ``fn(*local_args) -> (out, stats)`` where every ``out`` leaf is
     worker/edge-sharded on its leading axis and ``stats`` is replicated.
@@ -1272,7 +1509,8 @@ def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
         raise ValueError(f"M={pg.M} workers must divide over "
                          f"devices={devices}")
     mesh = graph_mesh(devices)
-    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds)
+    meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds,
+                                           pipeline, pipeline_chunks)
     in_specs = jax.tree.map(
         lambda x: P(AXIS) if (getattr(x, "ndim", 0) >= 1
                               and x.shape[0] == pg.M) else P(), args)

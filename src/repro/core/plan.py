@@ -267,6 +267,27 @@ def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
     return out
 
 
+def combine_rows_subset(plan, flat_vals: jnp.ndarray, rows: jnp.ndarray,
+                        rows_ok: jnp.ndarray, op: str) -> jnp.ndarray:
+    """Combine one static subset of plan rows (a pipeline chunk): gather
+    the rows' packed lanes and run the same kernel-dispatched block
+    combine as the whole-plan path.  Rows are independent inside
+    ``segment_combine_blocks``, so a chunk's blocks combine
+    bitwise-identically to their slice of the full-plan combine.
+
+    ``rows_ok`` masks padded chunk slots (their lanes combine to the op
+    identity, so scattering them anywhere is harmless for min/max/sum).
+    Works on both EdgePlan (host numpy fields) and the executor's
+    TracedPlan (device arrays) — only ``row_gather``/``row_valid``/
+    ``row_local``/``nb`` are read."""
+    ident = identity_of(op, flat_vals.dtype)
+    valid = rows_ok[:, None] & jnp.asarray(plan.row_valid)[rows]
+    packed = jnp.where(valid, flat_vals[jnp.asarray(plan.row_gather)[rows]],
+                       ident)
+    rloc = jnp.where(valid, jnp.asarray(plan.row_local)[rows], -1)
+    return _combine_rows(packed, rloc, op, plan.nb)
+
+
 def plan_seg_hits(plan: EdgePlan, flat_hits: jnp.ndarray) -> jnp.ndarray:
     """(n_segs, nb) bool: did >= 1 real (masked-in) message land in each
     per-(source, block) destination slot?  The mask-driven twin of the

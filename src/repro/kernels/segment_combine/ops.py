@@ -63,3 +63,22 @@ def segment_combine(packed_vals: jax.Array, packed_idx: jax.Array, op: str,
     out = fn(packed_vals, packed_idx, op, nb,
              **({"interpret": interpret} if use_kernel else {}))
     return out.reshape(-1)[:n_out]
+
+
+def segment_combine_rows(packed_vals: jax.Array, packed_idx: jax.Array,
+                         rows: jax.Array, op: str, nb: int,
+                         use_kernel: bool = True,
+                         interpret: bool = True) -> jax.Array:
+    """Block-subset entry point: combine only the ``rows`` subset of a
+    packed layout, returning their (len(rows), nb) combined blocks.
+
+    Rows are independent in ``segment_combine_blocks`` (each row reduces
+    its own eb lanes into its own nb destination slots), so a subset's
+    blocks combine bitwise-identically to their slice of the whole-array
+    combine — the property the pipelined executor relies on to overlap
+    one exchange chunk's ``all_to_all`` with the next chunk's local
+    combine.  ``rows`` may be any (R_sub,) int index array (static or
+    traced); out-of-range / repeated rows are the caller's business."""
+    fn = segment_combine_blocks if use_kernel else segment_combine_blocks_ref
+    return fn(packed_vals[rows], packed_idx[rows], op, nb,
+              **({"interpret": interpret} if use_kernel else {}))

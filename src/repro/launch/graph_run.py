@@ -79,6 +79,11 @@ def main():
                          "(0 = single-device batched simulation); on CPU "
                          "the required host devices are forced via "
                          "XLA_FLAGS")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="double-buffer the supersteps: chunk every "
+                         "routed exchange so chunk k's all_to_all "
+                         "overlaps chunk k-1's local combine (results "
+                         "keep the parity contract)")
     args = ap.parse_args()
 
     if args.devices > 1:
@@ -100,10 +105,12 @@ def main():
                        layout=args.layout, balance=args.balance,
                        split_factor=args.split_factor)
     dev = args.devices if args.devices else None
+    pipe = args.pipeline
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
           f"tau={tau} max_deg={int(g.out_degrees().max())} "
           f"backend={args.backend} layout={args.layout} "
-          f"balance={args.balance} devices={dev or 1}")
+          f"balance={args.balance} devices={dev or 1} "
+          f"pipeline={'on' if pipe else 'off'}")
 
     def report_balance(pg_run):
         # printed for the partition the algorithm actually ran (sssp/msf
@@ -123,12 +130,12 @@ def main():
     be = args.backend
     if args.algo == "hashmin":
         _, stats, n_ss = hashmin(pg, use_mirroring=mirror, backend=be,
-                                 devices=dev)
+                                 devices=dev, pipeline=pipe)
     elif args.algo == "pagerank":
         _, stats, n_ss = pagerank(pg, n_iters=30, use_mirroring=mirror,
-                                  backend=be, devices=dev)
+                                  backend=be, devices=dev, pipeline=pipe)
     elif args.algo == "sv":
-        _, stats, n_ss = sv(pg, backend=be, devices=dev)
+        _, stats, n_ss = sv(pg, backend=be, devices=dev, pipeline=pipe)
     elif args.algo == "sssp":
         gw = make_graph(args.graph, args.n, args.seed)
         if gw.weight is None:
@@ -138,7 +145,7 @@ def main():
                         layout=args.layout, balance=args.balance,
                         split_factor=args.split_factor)
         _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
-                              backend=be, devices=dev)
+                              backend=be, devices=dev, pipeline=pipe)
         pg = pgw
     elif args.algo == "msf":
         gw = make_graph(args.graph, args.n, args.seed)
@@ -149,14 +156,16 @@ def main():
         pgw = partition(gw, args.workers, tau=None, seed=args.seed,
                         layout=args.layout, balance=args.balance,
                         split_factor=args.split_factor)
-        (res, stats, n_ss) = msf(pgw, backend=be, devices=dev)
+        (res, stats, n_ss) = msf(pgw, backend=be, devices=dev,
+                                 pipeline=pipe)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")
         pg = pgw
     else:
         import jax.numpy as jnp
         attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc)
-        _, stats = attribute_broadcast(pg, attr, backend=be, devices=dev)
+        _, stats = attribute_broadcast(pg, attr, backend=be, devices=dev,
+                                       pipeline=pipe)
         n_ss = 2
     dt = time.time() - t0
 

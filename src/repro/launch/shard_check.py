@@ -27,7 +27,9 @@ it works on a plain CPU machine and in CI):
 ``--suite tier1`` is the consolidated fast profile driven by the tier-1
 test suite in ONE subprocess; ``--suite full`` is the nightly
 6 algos x 2 layouts x 2 backends x 3 balance modes x devices {1,2,8}
-matrix.  Explicit ``--devices/--algos/--balance/--layouts`` compose a
+matrix, run sequential AND through the double-buffered pipeline (the
+reference is always the sequential single-device run).  Explicit
+``--devices/--algos/--balance/--layouts`` (+ ``--pipeline``) compose a
 custom matrix instead.  Exits non-zero on the first violated cell.
 """
 from __future__ import annotations
@@ -46,11 +48,15 @@ ALGOS = ("hashmin", "pagerank", "sssp", "sv", "msf", "attr_bcast")
 def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                backends=("dense", "pallas"), device_counts=(1, 2, 8),
                n=180, M=8, tau=8, seed=0, balance="hash",
-               split_factor=1.1):
+               split_factor=1.1, pipeline=False):
     """Returns (report dict, ok flag).  Call only after jax sees enough
     devices (``xla_flags.force_host_devices`` before the first import).
     ``balance`` selects the partitioner mode; ``"split"`` requires the csr
-    layout, so padded cells are skipped there."""
+    layout, so padded cells are skipped there.  ``pipeline=True`` runs the
+    SHARDED side through the double-buffered executor while the reference
+    stays sequential — proving the pipeline keeps the same parity
+    contract (bitwise for min/max/int, tolerance for float sums, stats
+    integer-exact)."""
     import numpy as np
     import jax.numpy as jnp
     from repro.algorithms.attr_bcast import attribute_broadcast
@@ -69,42 +75,51 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                           balance=balance, split_factor=split_factor)
            for lay in layouts}
 
-    def run_algo(algo, pg, backend, devices):
+    def run_algo(algo, pg, backend, devices, pipe=False):
         if algo == "hashmin":
-            l, s, nss = hashmin(pg, backend=backend, devices=devices)
+            l, s, nss = hashmin(pg, backend=backend, devices=devices,
+                                pipeline=pipe)
             return {"exact": np.asarray(l)}, {}, s, int(nss)
         if algo == "pagerank":
             pr, s, nss = pagerank(pg, n_iters=8, tol=1e-12,
-                                  backend=backend, devices=devices)
+                                  backend=backend, devices=devices,
+                                  pipeline=pipe)
             return {}, {"pr": np.asarray(pr)}, s, int(nss)
         if algo == "sssp":
             d, s, nss = sssp(pg, int(pg.perm[0]), backend=backend,
-                             devices=devices)
+                             devices=devices, pipeline=pipe)
             return {"exact": np.asarray(d)}, {}, s, int(nss)
         if algo == "sv":
-            l, s, nss = sv(pg, backend=backend, devices=devices)
+            l, s, nss = sv(pg, backend=backend, devices=devices,
+                           pipeline=pipe)
             return {"exact": np.asarray(l)}, {}, s, int(nss)
         if algo == "msf":
             (lab, tw, ne), s, nss = msf(pg, backend=backend,
-                                        devices=devices)
+                                        devices=devices, pipeline=pipe)
             return ({"exact": np.asarray(lab), "ne": int(ne)},
                     {"tw": float(tw)}, s, int(nss))
         attr = jnp.arange(pg.n_pad, dtype=jnp.float32
                           ).reshape(pg.M, pg.n_loc) * 3
-        ea, s = attribute_broadcast(pg, attr, devices=devices)
+        ea, s = attribute_broadcast(pg, attr, devices=devices,
+                                    pipeline=pipe)
         return {"exact": np.asarray(ea)}, {}, s, 2
 
-    report = {"n": n, "M": M, "tau": tau, "balance": balance, "cells": {}}
+    report = {"n": n, "M": M, "tau": tau, "balance": balance,
+              "pipeline": bool(pipeline), "cells": {}}
     ok = True
+    pipe_tag = "/pipeline" if pipeline else ""
     for algo in algos:
         for lay in layouts:
             for be in backends:
                 pg = pgs[lay]
+                # the reference is ALWAYS the sequential single-device run
                 ref_e, ref_a, ref_s, ref_n = run_algo(algo, pg, be, None)
                 for D in device_counts:
-                    name = f"{algo}/{lay}/{be}/{balance}/devices={D}"
+                    name = (f"{algo}/{lay}/{be}/{balance}/devices={D}"
+                            f"{pipe_tag}")
                     errs = []
-                    e, a, s, nss = run_algo(algo, pg, be, D)
+                    e, a, s, nss = run_algo(algo, pg, be, D,
+                                            pipe=pipeline)
                     if nss != ref_n:
                         errs.append(f"supersteps {nss} != {ref_n}")
                     for k in ref_e:
@@ -384,24 +399,35 @@ def check_masked_lanes(n=160, M=8, devices=(8,)) -> bool:
 
 def _suite_cells(suite: str):
     """Matrix slices per suite: (algos, layouts, backends, devices,
-    balance) tuples."""
+    balance, pipeline) tuples."""
     if suite == "tier1":
         # one cell per join-family x regime: the pallas row covers every
         # algorithm at one-worker-per-device, the devices=2 cells pin the
         # general m_loc>1 collectives, split covers shard-crossing routes,
-        # padded the non-csr edge slicing.  Nightly runs the full matrix.
+        # padded the non-csr edge slicing.  The pipeline=True rows prove
+        # the double-buffered executor keeps the identical parity
+        # contract (every algorithm + a dense m_loc>1 cell + split).
+        # Nightly runs the full matrix, pipelined and sequential.
         return [
-            (ALGOS, ("csr",), ("pallas",), (8,), "hash"),
-            (("sv",), ("csr",), ("dense",), (2,), "hash"),
-            (("hashmin",), ("csr",), ("pallas",), (8,), "split"),
+            (ALGOS, ("csr",), ("pallas",), (8,), "hash", False),
+            (ALGOS, ("csr",), ("pallas",), (8,), "hash", True),
+            (("sv",), ("csr",), ("dense",), (2,), "hash", False),
+            (("sv",), ("csr",), ("dense",), (2,), "hash", True),
+            (("hashmin",), ("csr",), ("pallas",), (8,), "split", False),
+            (("hashmin",), ("csr",), ("pallas",), (8,), "split", True),
         ]
     if suite == "full":
-        return [
-            (ALGOS, ("padded", "csr"), ("dense", "pallas"), (1, 2, 8),
-             "hash"),
-            (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "edges"),
-            (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "split"),
-        ]
+        cells = []
+        for pipe in (False, True):
+            cells += [
+                (ALGOS, ("padded", "csr"), ("dense", "pallas"), (1, 2, 8),
+                 "hash", pipe),
+                (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "edges",
+                 pipe),
+                (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "split",
+                 pipe),
+            ]
+        return cells
     raise ValueError(f"unknown suite {suite!r}")
 
 
@@ -421,6 +447,10 @@ def main() -> None:
                     help="partition balance modes to sweep (hash / edges "
                          "/ split; split runs csr cells only)")
     ap.add_argument("--layouts", nargs="+", default=["padded", "csr"])
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the sharded side through the "
+                         "double-buffered pipeline (explicit-matrix mode; "
+                         "the suites sweep both on their own)")
     ap.add_argument("--skip-hlo-check", action="store_true",
                     help="skip the dense all-to-all HLO assertion (it "
                          "only applies to worker-aligned meshes)")
@@ -432,10 +462,12 @@ def main() -> None:
     report = {"cells": {}}
     ok = True
     if args.suite:
-        for algos, layouts, backends, devs, bal in _suite_cells(args.suite):
+        for (algos, layouts, backends, devs, bal,
+             pipe) in _suite_cells(args.suite):
             rep, bok = run_matrix(algos=algos, layouts=layouts,
                                   backends=backends, device_counts=devs,
-                                  n=args.n, M=args.workers, balance=bal)
+                                  n=args.n, M=args.workers, balance=bal,
+                                  pipeline=pipe)
             ok &= bok
             report["cells"].update(rep["cells"])
         report["all_to_all_in_hlo"] = check_all_to_all(
@@ -452,7 +484,8 @@ def main() -> None:
             rep, bok = run_matrix(algos=tuple(args.algos),
                                   layouts=tuple(args.layouts),
                                   device_counts=tuple(args.devices),
-                                  n=args.n, M=args.workers, balance=bal)
+                                  n=args.n, M=args.workers, balance=bal,
+                                  pipeline=args.pipeline)
             ok &= bok
             report["cells"].update(rep["cells"])
         if not args.skip_hlo_check:

@@ -168,9 +168,14 @@ def test_sharded_conformance_suite():
     checks.  The FULL 6 x 2 x 2 x 3 x {1,2,8} matrix runs nightly
     (``-m slow``); the tier-1 slice keeps every algorithm at D=8, the
     m_loc>1 regime through S-V (every join family: broadcast, gather,
-    runtime scatter), and a split cell."""
+    runtime scatter), and a split cell — each both sequential and
+    pipelined (the double-buffered exchange must keep the identical
+    parity contract)."""
     report = _run_shard_suite("tier1")
-    assert len(report["cells"]) == 8
+    assert len(report["cells"]) == 16
+    # the pipelined rows mirror the sequential slice cell for cell
+    seq = {c for c in report["cells"] if not c.endswith("/pipeline")}
+    assert {f"{c}/pipeline" for c in seq} == set(report["cells"]) - seq
 
 
 @pytest.mark.slow
@@ -178,10 +183,11 @@ def test_sharded_conformance_matrix_full():
     """Nightly: the full conformance matrix — 6 algos x 2 layouts x 2
     backends x devices {1,2,8} under balance=hash plus the csr cells of
     balance edges/split at every device count — bitwise / integer-exact
-    vs the unsharded reference."""
+    vs the unsharded reference, the whole matrix run both sequential
+    and through the double-buffered pipeline."""
     report = _run_shard_suite("full")
-    # hash: 6*2*2*3; edges: 6*1*2*3; split: 6*1*2*3
-    assert len(report["cells"]) == 72 + 36 + 36
+    # (hash: 6*2*2*3; edges: 6*1*2*3; split: 6*1*2*3) x {seq, pipelined}
+    assert len(report["cells"]) == (72 + 36 + 36) * 2
 
 
 BAL_N, BAL_M = 240, 4

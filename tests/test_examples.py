@@ -1,0 +1,33 @@
+"""Smoke-execute the repo examples: they are the first thing a reader
+runs, so a drifted API (e.g. the bsp.run arity change of PR 3) must fail
+CI, not the reader.  Each example runs in a subprocess at a small scale
+so the suite stays tier-1 fast."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXAMPLES = os.path.join(ROOT, "examples")
+
+
+def _run_example(name, args=()):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, name), *args],
+        capture_output=True, text=True, timeout=600, env=env)
+
+
+@pytest.mark.parametrize("name,args,needle", [
+    ("quickstart.py", ("2000",), "agree on all component labels"),
+    ("graph_analytics.py", ("2000",), "PageRank"),
+])
+def test_example_runs(name, args, needle):
+    r = _run_example(name, args)
+    assert r.returncode == 0, (
+        f"{name} exited {r.returncode}\nstdout:\n{r.stdout}\n"
+        f"stderr:\n{r.stderr}")
+    assert needle in r.stdout, (
+        f"{name} ran but its report lost the {needle!r} line:\n{r.stdout}")
