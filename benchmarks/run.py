@@ -108,18 +108,25 @@ def smoke(out_path: str, scale: int = 4000, M: int = 8) -> None:
 
 
 def graph_bench(out_path: str, n: int = 200_000, M: int = 8,
-                device_counts=(1, 8)) -> None:
+                device_counts=(1, 8, (2, 4))) -> None:
     """Perf-trajectory artifact: wall time + message counts for every
-    algo x backend x layout x device-count cell, plus the per-device
-    compiled-buffer stats of every sharded channel family at D=8 — and
-    the HARD memory gate: no sharded channel may all-reduce/all-gather
-    an operand of >= n_pad elements (a replicated global buffer would
-    void the paper's per-worker communication bounds).  Wall times
-    include the per-call jit compile (each cell builds a fresh step
-    closure) — they are trend numbers, not steady-state throughput."""
+    algo x backend x layout x device-count cell — D=8 both as the flat
+    1-D mesh and as the hierarchical 2x4 (host, device) mesh — plus the
+    per-device compiled-buffer stats of every sharded channel family at
+    D=8, and two HARD gates: (a) no sharded channel may
+    all-reduce/all-gather an operand of >= n_pad elements (a replicated
+    global buffer would void the paper's per-worker communication
+    bounds); (b) the cross-host wire volume of the hierarchical static
+    exchanges must stay strictly below the flat 1-D all-pairs volume —
+    the per-level combine must actually remove traffic from the
+    expensive axis.  Wall times include the per-call jit compile (each
+    cell builds a fresh step closure) — they are trend numbers, not
+    steady-state throughput."""
     from repro.algorithms.hashmin import hashmin
     from repro.algorithms.pagerank import pagerank
     from repro.core.cost_model import choose_tau
+    from repro.core.exec import broadcast_plan_kinds
+    from repro.core.exec import exchange_volume_report
     from repro.graph import generators as gen
     from repro.graph.structs import partition
     from repro.launch.shard_check import routed_memory_report
@@ -127,12 +134,13 @@ def graph_bench(out_path: str, n: int = 200_000, M: int = 8,
     g = gen.powerlaw(n, avg_deg=8, seed=5, alpha=1.8).symmetrized()
     tau = choose_tau(g.out_degrees(), M)
     report = {"n": g.n, "m": g.m, "workers": M, "tau": int(tau),
-              "cells": [], "memory": {}}
+              "cells": [], "memory": {}, "exchange_volume": {}}
     for layout in ("padded", "csr"):
         pg = partition(g, M, tau=tau, seed=0, layout=layout)
         # per-device peak live-buffer bytes + collective operand sizes of
         # the compiled sharded channels (the routed-exchange artifact)
-        mem = routed_memory_report(pg, devices=max(device_counts))
+        flat_counts = [d for d in device_counts if not isinstance(d, tuple)]
+        mem = routed_memory_report(pg, devices=max(flat_counts))
         report["memory"][layout] = mem
         n_pad = pg.n_pad
         for prog, entry in mem["programs"].items():
@@ -145,24 +153,47 @@ def graph_bench(out_path: str, n: int = 200_000, M: int = 8,
                 f"{layout}/{prog}: replicated collective operand of "
                 f"{bad} elems >= n_pad {n_pad} — a sharded channel is "
                 f"replicating global state again")
+        if layout == "csr":
+            # static wire-lane accounting of the per-superstep exchanges
+            # (plan legs + fetch plans, pallas kinds): the flat D=8 mesh
+            # treats every device pair alike; on the 2-D meshes only the
+            # post-combine residue crosses the host axis
+            kinds = broadcast_plan_kinds("pallas")
+            vols = {"8": exchange_volume_report(pg, 8, kinds),
+                    "2x4": exchange_volume_report(pg, (2, 4), kinds),
+                    "4x2": exchange_volume_report(pg, (4, 2), kinds)}
+            report["exchange_volume"] = vols
+            flat_total = vols["8"]["total"]
+            for tag in ("2x4", "4x2"):
+                cross = vols[tag]["cross_host"]
+                print(f"[graph-bench] exchange-volume {tag}: "
+                      f"cross_host={cross:,d} intra_host="
+                      f"{vols[tag]['intra_host']:,d} vs flat all-pairs "
+                      f"{flat_total:,d} lanes")
+                assert cross < flat_total, (
+                    f"{tag}: cross-host volume {cross} >= flat all-pairs "
+                    f"volume {flat_total} — the per-level combine is not "
+                    f"removing traffic from the host axis")
         for backend in ("dense", "pallas"):
             for algo, fn in (("hashmin", hashmin),
                              ("pagerank", lambda p, **kw: pagerank(
                                  p, n_iters=10, tol=0.0, **kw))):
                 for D in device_counts:
                     dev = None if D == 1 else D
+                    tag = ("x".join(str(d) for d in D)
+                           if isinstance(D, tuple) else D)
                     t0 = time.perf_counter()
                     _, stats, n_ss = fn(pg, backend=backend, devices=dev)
                     wall = time.perf_counter() - t0
                     cell = {"algo": algo, "backend": backend,
-                            "layout": layout, "devices": D,
+                            "layout": layout, "devices": tag,
                             "wall_s": round(wall, 3),
                             "supersteps": int(n_ss),
                             "msgs_total": int(stats["msgs_total"]),
                             "msgs_basic": int(stats["msgs_basic"])}
                     report["cells"].append(cell)
                     print(f"[graph-bench] {algo}/{layout}/{backend}/"
-                          f"devices={D}: {wall:.2f}s "
+                          f"devices={tag}: {wall:.2f}s "
                           f"msgs={cell['msgs_total']:,d}")
     # the mesh is a representation choice: message counts must agree
     # across every cell of one algo

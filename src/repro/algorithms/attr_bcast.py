@@ -41,10 +41,11 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
         # sharded csr outputs come back device-concatenated with per-device
         # padding: strip back to the flat (E,) edge order (split partitions
         # place the device boundaries between physical shards)
+        D, _ = exec_mod._normalize_devices(devices)
         bounds = exec_mod.device_edge_bounds(pg, devices)["all"]
         counts = np.diff(bounds)
-        cap = out.shape[0] // devices
+        cap = out.shape[0] // D
         out = jax.numpy.concatenate(
             [out[d * cap:d * cap + int(counts[d])]
-             for d in range(devices)])
+             for d in range(D)])
     return out, stats

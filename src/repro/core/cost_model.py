@@ -121,6 +121,62 @@ def choose_split(edge_load: np.ndarray, split_factor: float = 1.2
     return k
 
 
+def worker_affinity(pair_counts: np.ndarray) -> np.ndarray:
+    """Symmetric (M, M) worker communication affinity from the partition's
+    distinct (source worker, destination vertex) pair matrix: traffic in
+    either direction counts (the exchange is bidirectional wire either
+    way) and self-traffic is zeroed (it never crosses a link).  Mirror
+    broadcasts ride the same matrix — ``pair_counts`` is built over the
+    full adjacency, so a heavy mirror pair shows up as a heavy entry."""
+    pc = np.asarray(pair_counts, np.int64)
+    aff = pc + pc.T
+    np.fill_diagonal(aff, 0)
+    return aff
+
+
+def affinity_groups(aff: np.ndarray, H: int) -> np.ndarray:
+    """Group M workers into H equal host blocks with high intra-block
+    affinity — the placement knob of the hierarchical (host, device)
+    mesh, which maps worker block ``[h*T, (h+1)*T)`` onto host h, so
+    intra-block traffic rides the cheap intra-host level.
+
+    Greedy: each block is seeded with the heaviest-affinity unassigned
+    pair, then absorbs the unassigned worker with the largest affinity
+    to the block until full.  Falls back to the identity (contiguous)
+    grouping when greedy does not strictly beat it, so host-aware
+    placement never scores below host-oblivious placement in the
+    affinity proxy.  Returns the (M,) worker order, host by host: the
+    worker at position i gets new id i."""
+    aff = np.asarray(aff, np.float64)
+    M = len(aff)
+    if H <= 0 or M % H:
+        raise ValueError(f"M={M} workers must divide over hosts={H}")
+    T = M // H
+    left = list(range(M))
+    order = []
+    for _ in range(H):
+        rem = np.asarray(left)
+        sub = aff[np.ix_(rem, rem)].copy()
+        np.fill_diagonal(sub, -1.0)
+        i, j = np.unravel_index(int(sub.argmax()), sub.shape)
+        grp = [int(rem[i])] if T == 1 else [int(rem[i]), int(rem[j])]
+        while len(grp) < T:
+            cand = np.asarray([w for w in left if w not in grp])
+            scores = aff[np.ix_(cand, np.asarray(grp))].sum(axis=1)
+            grp.append(int(cand[int(scores.argmax())]))
+        order += sorted(grp)  # stable ids within a host
+        left = [w for w in left if w not in grp]
+    greedy = np.asarray(order, np.int64)
+    ident = np.arange(M, dtype=np.int64)
+
+    def intra(o):
+        return sum(aff[np.ix_(o[h * T:(h + 1) * T],
+                              o[h * T:(h + 1) * T])].sum()
+                   for h in range(H))
+
+    return greedy if intra(greedy) > intra(ident) else ident
+
+
 def contiguous_bounds(loads: np.ndarray, D: int) -> np.ndarray:
     """Partition a run of shard ``loads`` into D contiguous non-empty
     groups minimizing the max group load (binary search on the bottleneck

@@ -6,6 +6,23 @@ over a 1-D device mesh (axis ``"w"``, built via ``launch/mesh.make_mesh``)
 shards the worker axis across D devices (M % D == 0, m = M/D workers per
 device).
 
+``devices=(hosts, per_host)`` instead builds the 2-D ``("h", "w")`` mesh
+(``launch/mesh.graph_mesh``) and every routed join above becomes
+*hierarchical*: lanes first route to the device of their destination
+column WITHIN the sender's host (one intra-host ``all_to_all`` over
+``"w"``), that device op-combines everything it received by destination
+(requests: deduplicates — the paper's Theorem-1/Theorem-3 reductions
+applied per routing level), and only the combined residue crosses the
+host axis (a second ``all_to_all`` over ``"h"``).  Cross-host volume is
+therefore bounded by the post-combine residue, never the raw fan-out —
+the property ``exchange_volume_report`` measures and the bench gates
+pin.  Each leg carries its own cap derived per level from
+``pair_counts`` (``_cap_hints_2d``), and the double-buffered pipeline
+overlaps the *inter-host* leg, where collective latency actually
+hurts.  The flat device id d = h*T + t is the row-major mesh order, so
+owner arithmetic, stats, and parity against the 1-D path are unchanged
+(min/max/int bitwise, stats integer-exact).
+
 Every channel join is **destination-routed**: messages (and requests)
 travel straight to the device that owns their destination via
 ``jax.lax.all_to_all`` with fixed per-destination-device lane caps, and
@@ -86,6 +103,7 @@ from repro.core.plan import identity_of, scatter_op
 from repro.launch import mesh as meshlib
 
 AXIS = "w"
+HAXIS = "h"
 
 _MERGE = {"min": jnp.minimum, "max": jnp.maximum, "sum": jnp.add}
 
@@ -108,15 +126,34 @@ def broadcast_plan_kinds(backend: str, use_mirroring: bool = True) -> tuple:
     return ("eg", "mir") if use_mirroring else ("all",)
 
 
-def graph_mesh(devices: int):
-    """1-D worker mesh over the first ``devices`` devices."""
-    if devices > len(jax.devices()):
+def _normalize_devices(devices):
+    """``devices`` is an int (1-D worker mesh, today's executor) or an
+    ``(hosts, per_host)`` pair (2-D hierarchical mesh).  Returns
+    ``(D, hier)`` with ``hier`` either None or the ``(H, T)`` tuple —
+    note (1, 8) and (8, 1) still select the hierarchical code paths
+    (one axis is just size 1), which is exactly what the parity matrix
+    exploits."""
+    if isinstance(devices, (tuple, list)):
+        H, T = int(devices[0]), int(devices[1])
+        if H < 1 or T < 1:
+            raise ValueError(f"bad (hosts, devices) mesh {devices!r}")
+        return H * T, (H, T)
+    return int(devices), None
+
+
+def graph_mesh(devices):
+    """Worker mesh: 1-D over ``devices`` devices, or the 2-D
+    ``(hosts, per_host)`` mesh when a pair is given."""
+    D, hier = _normalize_devices(devices)
+    if D > len(jax.devices()):
         raise RuntimeError(
-            f"requested {devices} devices but only {len(jax.devices())} "
+            f"requested {D} devices but only {len(jax.devices())} "
             f"are visible; on CPU set XLA_FLAGS="
-            f"--xla_force_host_platform_device_count={devices} before "
+            f"--xla_force_host_platform_device_count={D} before "
             f"importing jax (graph_run --devices does this for you)")
-    return meshlib.make_mesh((devices,), (AXIS,))
+    if hier is not None:
+        return meshlib.graph_mesh(*hier)
+    return meshlib.make_mesh((D,), (AXIS,))
 
 
 def _pad8(x: int) -> int:
@@ -161,7 +198,19 @@ class TracedPlan:
     ``crow_seg`` remap) and the chunk-local exchange indices
     (``cxseg``/``cxval`` send, ``crblk``/``crval`` receive), so one
     chunk's rows can run ``segment_combine_blocks`` independently while
-    another chunk's all_to_all is in flight."""
+    another chunk's all_to_all is in flight.
+
+    On a 2-D (host, device) mesh the exchange instead runs in two legs
+    with an intermediate combine (the hierarchical tables below): leg 1
+    routes my segments to the *column* of their destination device
+    within my host (``x1seg``/``x1val``, all_to_all over the intra-host
+    axis); the column device combines everything it received by global
+    destination block (``iscat``/``ival`` -> ``n_iseg`` intermediate
+    segments — the per-level Theorem-1 combine); leg 2 routes only the
+    combined residue across the host axis (``x2seg``/``x2val`` send,
+    ``r2blk``/``r2val`` receive at the owner).  With the pipeline on,
+    the inter-host leg is position-chunked into ``hchunks`` static
+    slices of the x2cap axis (where the overlap win actually lives)."""
     nb: int
     eb: int
     B_per_w: int
@@ -191,6 +240,19 @@ class TracedPlan:
     cxval: Optional[jnp.ndarray] = None    # (C, D, ccap)
     crblk: Optional[jnp.ndarray] = None    # (C, D, ccap) local dst block
     crval: Optional[jnp.ndarray] = None    # (C, D, ccap)
+    # hierarchical 2-D exchange tables (None on a 1-D mesh):
+    x1cap: int = 0
+    n_iseg: int = 0            # intermediate combined segments per device
+    x2cap: int = 0
+    hchunks: int = 1           # inter-host pipeline chunks
+    x1seg: Optional[jnp.ndarray] = None    # (T, x1cap) my seg per dst col
+    x1val: Optional[jnp.ndarray] = None    # (T, x1cap)
+    iscat: Optional[jnp.ndarray] = None    # (T, x1cap) recv -> inter seg
+    ival: Optional[jnp.ndarray] = None     # (T, x1cap)
+    x2seg: Optional[jnp.ndarray] = None    # (H, x2cap) inter seg per host
+    x2val: Optional[jnp.ndarray] = None    # (H, x2cap)
+    r2blk: Optional[jnp.ndarray] = None    # (H, x2cap) local dst block
+    r2val: Optional[jnp.ndarray] = None    # (H, x2cap)
 
 
 def _device_plans(pg, D: int, kind: str, nb: int):
@@ -257,7 +319,8 @@ def _device_plans(pg, D: int, kind: str, nb: int):
     return plans
 
 
-def _stack_plans(plans, m: int, chunks: Optional[int] = None):
+def _stack_plans(plans, m: int, chunks: Optional[int] = None,
+                 hier: Optional[Tuple[int, int]] = None):
     """Pad per-device plans to common row/segment counts, build the
     per-destination-device exchange index lists, and stack everything with
     a leading device axis.  Returns (static_meta, arrays_dict).
@@ -266,7 +329,13 @@ def _stack_plans(plans, m: int, chunks: Optional[int] = None):
     position-chunks and emits, per (device, chunk), the static row subset
     feeding that chunk's segments plus chunk-local segment/exchange
     remaps — the tables :func:`_combine_with_plan_sharded` walks to
-    overlap chunk k's all_to_all with chunk k±1's local combines."""
+    overlap chunk k's all_to_all with chunk k±1's local combines.
+
+    ``hier=(H, T)`` (2-D mesh) additionally builds the two-leg exchange
+    tables (see :class:`TracedPlan`): per destination *column* send lists,
+    the intermediate combine-by-destination-block remap, and per
+    destination *host* residue lists.  The pipeline then chunks the
+    inter-host leg instead of the flat xcap axis."""
     D = len(plans)
     nb, eb = plans[0].nb, plans[0].eb
     bpd = m * plans[0].B_per_w               # destination blocks per device
@@ -314,9 +383,94 @@ def _stack_plans(plans, m: int, chunks: Optional[int] = None):
     meta = {"nb": nb, "eb": eb, "B_per_w": plans[0].B_per_w,
             "n_blocks": plans[0].n_blocks, "n_rows": R, "n_segs": S,
             "xcap": xcap}
-    if chunks:
+    if hier is not None:
+        meta.update(_hier_plan_tables(plans, a, D, bpd, *hier,
+                                      chunks=chunks))
+    elif chunks:
         meta.update(_chunk_plans(plans, pair, a, D, bpd, xcap, chunks))
     return meta, a
+
+
+def _hier_plan_tables(plans, a, D: int, bpd: int, H: int, T: int,
+                      chunks: Optional[int] = None):
+    """Two-leg static exchange tables for a 2-D (H, T) mesh.
+
+    Leg 1 (intra-host, axis ``"w"``): device (h, t1) sends each real
+    segment to the device of its destination *column* t2 within its own
+    host.  The intermediate device (h, t2) combines everything it
+    received by global destination block — two segments from different
+    senders aimed at the same block merge *before* crossing the host
+    axis (the Theorem-1 combine applied per level).  Leg 2 (inter-host,
+    axis ``"h"``): only the combined residue travels to the owner host.
+    All index lists are position-aligned across the all_to_all (lane
+    (t1, j) at the receiver is lane j of sender (h, t1)), so the caps
+    are exact by construction and the runtime never overflows."""
+    # leg-1 send lists: my segments by destination column (ascending
+    # segment order — the canonical lane order both sides agree on)
+    x1list = {}
+    x1cap = 1
+    for d, p in enumerate(plans):
+        dd = (p.seg_blk // bpd if p.n_segs else np.zeros(0, np.int64))
+        for t2 in range(T):
+            sel = np.flatnonzero(dd % T == t2)
+            x1list[(d, t2)] = sel
+            x1cap = max(x1cap, len(sel))
+
+    # intermediate combine: per device (h, t2), the distinct destination
+    # blocks among its received lanes, and each lane's remap into them
+    iblocks = {}
+    n_iseg = 1
+    for h in range(H):
+        for t2 in range(T):
+            i = h * T + t2
+            gbs = [plans[h * T + t1].seg_blk[x1list[(h * T + t1, t2)]]
+                   for t1 in range(T)]
+            allg = (np.concatenate(gbs) if gbs else np.zeros(0, np.int64))
+            iblocks[i] = np.unique(allg)
+            n_iseg = max(n_iseg, len(iblocks[i]))
+
+    # leg-2 residue lists: intermediate segments by destination host
+    x2list = {}
+    x2cap = 1
+    for i in range(D):
+        dh = (iblocks[i] // bpd) // T
+        for h2 in range(H):
+            sel = np.flatnonzero(dh == h2)
+            x2list[(i, h2)] = sel
+            x2cap = max(x2cap, len(sel))
+
+    x1seg = np.zeros((D, T, x1cap), np.int32)
+    x1val = np.zeros((D, T, x1cap), bool)
+    iscat = np.zeros((D, T, x1cap), np.int32)
+    ival = np.zeros((D, T, x1cap), bool)
+    x2seg = np.zeros((D, H, x2cap), np.int32)
+    x2val = np.zeros((D, H, x2cap), bool)
+    r2blk = np.zeros((D, H, x2cap), np.int32)
+    r2val = np.zeros((D, H, x2cap), bool)
+    for h in range(H):
+        for t2 in range(T):
+            i = h * T + t2
+            for t1 in range(T):
+                s = h * T + t1
+                sel = x1list[(s, t2)]
+                c = len(sel)
+                x1seg[s, t2, :c] = sel
+                x1val[s, t2, :c] = True
+                iscat[i, t1, :c] = np.searchsorted(
+                    iblocks[i], plans[s].seg_blk[sel])
+                ival[i, t1, :c] = True
+            for h2 in range(H):
+                sel = x2list[(i, h2)]
+                c = len(sel)
+                o = h2 * T + t2
+                x2seg[i, h2, :c] = sel
+                x2val[i, h2, :c] = True
+                r2blk[o, h, :c] = iblocks[i][sel] - o * bpd
+                r2val[o, h, :c] = True
+    a.update(x1seg=x1seg, x1val=x1val, iscat=iscat, ival=ival,
+             x2seg=x2seg, x2val=x2val, r2blk=r2blk, r2val=r2val)
+    return {"x1cap": x1cap, "n_iseg": n_iseg, "x2cap": x2cap,
+            "hchunks": max(1, min(int(chunks or 1), x2cap))}
 
 
 def _chunk_plans(plans, pair, a, D: int, bpd: int, xcap: int, chunks: int):
@@ -384,17 +538,39 @@ class TracedFetch:
     """Device-local view of a static fetch plan: this device's needed
     remote/local values arrive as a compact (n_need,) array through ONE
     exchange (consumers' needed-slot lists are static, so the per-pair
-    caps are exact)."""
+    caps are exact).
+
+    On a 2-D (host, device) mesh the plan instead runs in two legs
+    through a per-host *gateway*: the owner (h_o, t) sends each value
+    ONCE per consuming host — to device (h_c, t), the consuming host's
+    gateway for column t (leg A, inter-host axis) — and the gateway
+    fans it out to the consumers within its host (leg B, intra-host
+    axis).  That is the paper's Theorem-1 mirror bound applied per
+    routing level: the cross-host cost of a value is min(H, #consuming
+    hosts), never #consuming devices."""
     n_need: int                # padded compact-array length
-    cap: int                   # max slots between one device pair
-    send_slot: jnp.ndarray     # (D, cap) LOCAL state slot to serve, -1 pad
-    recv_pos: jnp.ndarray      # (D, cap) position in my compact array, -1
+    cap: int = 0               # flat: max slots between one device pair
+    send_slot: Optional[jnp.ndarray] = None  # (D, cap) LOCAL slot, -1 pad
+    recv_pos: Optional[jnp.ndarray] = None   # (D, cap) compact pos, -1
+    # hierarchical (2-D) tables:
+    n_gw: int = 0              # gateway buffer length
+    cap_a: int = 0             # max slots owner -> gateway (inter-host)
+    cap_b: int = 0             # max slots gateway -> consumer (intra-host)
+    a_send: Optional[jnp.ndarray] = None   # (H, cap_a) LOCAL slot, -1
+    a_recv: Optional[jnp.ndarray] = None   # (H, cap_a) gateway pos, -1
+    b_send: Optional[jnp.ndarray] = None   # (T, cap_b) gateway pos, -1
+    b_recv: Optional[jnp.ndarray] = None   # (T, cap_b) compact pos, -1
 
 
-def _build_fetch_plan(need_lists, D: int, loc_n: int):
+def _build_fetch_plan(need_lists, D: int, loc_n: int,
+                      hier: Optional[Tuple[int, int]] = None):
     """``need_lists``: per-device sorted unique GLOBAL slot ids (host
     numpy).  Owner of slot g is ``g // loc_n``.  Returns (meta, stacked
-    host arrays) for :class:`TracedFetch`."""
+    host arrays) for :class:`TracedFetch` (two-leg gateway tables when
+    ``hier=(H, T)``)."""
+    n_need = max(1, max((len(x) for x in need_lists), default=1))
+    if hier is not None:
+        return _build_fetch_plan_hier(need_lists, loc_n, *hier, n_need)
     cap = 1
     pair = {}
     for d, need in enumerate(need_lists):
@@ -410,20 +586,95 @@ def _build_fetch_plan(need_lists, D: int, loc_n: int):
         c = len(slots)
         send_slot[s, d, :c] = slots - s * loc_n
         recv_pos[d, s, :c] = pos
-    n_need = max(1, max((len(x) for x in need_lists), default=1))
     meta = {"cap": cap, "n_need": n_need}
     return meta, {"send_slot": send_slot, "recv_pos": recv_pos}
+
+
+def _build_fetch_plan_hier(need_lists, loc_n: int, H: int, T: int,
+                           n_need: int):
+    """Two-leg fetch tables (see :class:`TracedFetch`).  The gateway of
+    column t in host h_c is device (h_c, t): it receives, over the host
+    axis, every slot owned by column-t devices that ANY device of host
+    h_c needs (deduplicated per host — the per-level combine), then
+    distributes within the host."""
+    D = H * T
+    # gateway slot sets: gw_set[(h_c, t)] = sorted unique slots needed by
+    # host h_c whose owner device sits in column t
+    gw_set = {}
+    n_gw = 1
+    for hc in range(H):
+        lists = [np.asarray(need_lists[hc * T + t], np.int64)
+                 for t in range(T)]
+        host_need = (np.unique(np.concatenate(lists)) if lists
+                     else np.zeros(0, np.int64))
+        own_col = (host_need // loc_n) % T
+        for to in range(T):
+            gw_set[(hc, to)] = host_need[own_col == to]
+            n_gw = max(n_gw, len(gw_set[(hc, to)]))
+
+    cap_a = 1
+    a_pairs = {}
+    for (hc, to), s in gw_set.items():
+        owner_host = s // (loc_n * T)
+        bounds = np.searchsorted(owner_host, np.arange(H + 1))
+        for ho in range(H):
+            lo, hi = int(bounds[ho]), int(bounds[ho + 1])
+            a_pairs[(ho, hc, to)] = (s[lo:hi], np.arange(lo, hi))
+            cap_a = max(cap_a, hi - lo)
+    cap_b = 1
+    b_pairs = {}
+    for hc in range(H):
+        for tc in range(T):
+            need = np.asarray(need_lists[hc * T + tc], np.int64)
+            own_col = (need // loc_n) % T
+            for to in range(T):
+                sel = np.flatnonzero(own_col == to)
+                gpos = np.searchsorted(gw_set[(hc, to)], need[sel])
+                b_pairs[(to, tc, hc)] = (gpos, sel)
+                cap_b = max(cap_b, len(sel))
+
+    a_send = np.full((D, H, cap_a), -1, np.int32)
+    a_recv = np.full((D, H, cap_a), -1, np.int32)
+    for (ho, hc, to), (slots, pos) in a_pairs.items():
+        c = len(slots)
+        a_send[ho * T + to, hc, :c] = slots - (ho * T + to) * loc_n
+        a_recv[hc * T + to, ho, :c] = pos
+    b_send = np.full((D, T, cap_b), -1, np.int32)
+    b_recv = np.full((D, T, cap_b), -1, np.int32)
+    for (to, tc, hc), (gpos, pos) in b_pairs.items():
+        c = len(gpos)
+        b_send[hc * T + to, tc, :c] = gpos
+        b_recv[hc * T + tc, to, :c] = pos
+    meta = {"n_need": n_need, "n_gw": n_gw, "cap_a": cap_a,
+            "cap_b": cap_b}
+    return meta, {"a_send": a_send, "a_recv": a_recv,
+                  "b_send": b_send, "b_recv": b_recv}
 
 
 def _fetch_planned(sg, fp: TracedFetch, flat_vals: jnp.ndarray, fill
                    ) -> jnp.ndarray:
     """Run one static fetch plan: returns my compact (n_need,) value
-    array.  ``flat_vals`` is my local (m_loc*n_loc,) owner-side array."""
+    array.  ``flat_vals`` is my local (m_loc*n_loc,) owner-side array.
+    On a 2-D mesh the value rides the two-leg gateway route — one
+    inter-host lane per (slot, consuming host), then intra-host
+    fan-out."""
     n = flat_vals.shape[0]
-    send = jnp.where(fp.send_slot >= 0,
-                     flat_vals[jnp.clip(fp.send_slot, 0, n - 1)], fill)
-    recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
-    idx = jnp.where(fp.recv_pos >= 0, fp.recv_pos, fp.n_need)
+    if fp.a_send is not None:
+        send_a = jnp.where(fp.a_send >= 0,
+                           flat_vals[jnp.clip(fp.a_send, 0, n - 1)], fill)
+        recv_a = jax.lax.all_to_all(send_a, HAXIS, 0, 0)
+        gidx = jnp.where(fp.a_recv >= 0, fp.a_recv, fp.n_gw)
+        gw = jnp.full((fp.n_gw + 1,), fill, flat_vals.dtype
+                      ).at[gidx].set(recv_a)[:-1]
+        send_b = jnp.where(fp.b_send >= 0,
+                           gw[jnp.clip(fp.b_send, 0, fp.n_gw - 1)], fill)
+        recv = jax.lax.all_to_all(send_b, AXIS, 0, 0)
+        idx = jnp.where(fp.b_recv >= 0, fp.b_recv, fp.n_need)
+    else:
+        send = jnp.where(fp.send_slot >= 0,
+                         flat_vals[jnp.clip(fp.send_slot, 0, n - 1)], fill)
+        recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
+        idx = jnp.where(fp.recv_pos >= 0, fp.recv_pos, fp.n_need)
     buf = jnp.full((fp.n_need + 1,), fill, flat_vals.dtype)
     return buf.at[idx].set(recv)[:-1]
 
@@ -442,13 +693,15 @@ def _is_split(pg) -> bool:
     return getattr(pg, "phys_log", None) is not None
 
 
-def device_edge_bounds(pg, D: int) -> Dict[str, np.ndarray]:
-    """Per-device (D+1,) edge bounds for each csr edge set.
+def device_edge_bounds(pg, devices) -> Dict[str, np.ndarray]:
+    """Per-device (D+1,) edge bounds for each csr edge set (``devices``
+    an int or an ``(H, T)`` pair — bounds follow the flat device order).
 
     Default partitions place boundaries at worker multiples (m = M/D
     workers per device).  Split partitions place them between *physical
     shards*, packed contiguously to minimize the bottleneck per-device
     eg+mir edge load (``"phys"`` holds the shard-index bounds)."""
+    D, _ = _normalize_devices(devices)
     if _is_split(pg):
         loads = np.diff(pg.phys_eg_off) + np.diff(pg.phys_mir_off)
         pb = cost_model.contiguous_bounds(loads, D)
@@ -462,10 +715,10 @@ def device_edge_bounds(pg, D: int) -> Dict[str, np.ndarray]:
             "mir": csr_device_bounds(pg.mir_eoff, pg.M, D)}
 
 
-def device_edge_loads(pg, D: int) -> np.ndarray:
+def device_edge_loads(pg, devices) -> np.ndarray:
     """(D,) per-device superstep edge load (Ch_msg + mirror fan-out) the
     mesh placement yields — the number the bench-balance gate watches."""
-    b = device_edge_bounds(pg, D)
+    b = device_edge_bounds(pg, devices)
     return np.diff(b["eg"]) + np.diff(b["mir"])
 
 
@@ -498,10 +751,38 @@ def _cap_hint(pg, D: int) -> Optional[int]:
     return int(blocks.max())
 
 
-def _shard_graph(pg, D: int, plan_kinds: Sequence[str],
+def _cap_hints_2d(pg, D: int, H: int, T: int
+                  ) -> Tuple[Optional[int], Optional[int]]:
+    """Level-aware cap hints for the 2-D mesh — the flat per-device-pair
+    bound silently under-caps a hierarchical exchange (a column device
+    funnels a whole host's traffic to T columns, and an intermediate
+    device funnels T senders' residue to H hosts), so each leg gets its
+    own bound from ``pair_counts``:
+
+    * intra-host leg: worst (source device, destination column) traffic
+      — destination hosts folded together;
+    * inter-host leg: worst (source host, destination host, column)
+      traffic — the pre-combine bound on the residue an intermediate
+      device can route to one host (the combine only shrinks it).
+    """
+    pc = getattr(pg, "pair_counts", None)
+    if pc is None or _is_split(pg):
+        return None, None
+    m = pg.M // D
+    blocks = pc.reshape(D, m, D, m).sum(axis=(1, 3))
+    hint_w = int(blocks.reshape(D, H, T).sum(axis=1).max())
+    hint_h = int(blocks.reshape(H, T, H, T).sum(axis=1).max())
+    return hint_w, hint_h
+
+
+def _shard_graph(pg, devices, plan_kinds: Sequence[str],
                  pipeline: bool = False,
                  pipeline_chunks: Optional[int] = None):
-    """Build the device-stacked array pytree + matching PartitionSpecs."""
+    """Build the device-stacked array pytree + matching PartitionSpecs.
+    ``devices`` is an int (1-D mesh) or an ``(H, T)`` pair (2-D
+    hierarchical mesh; the flat device order d = h*T + t matches the
+    row-major mesh flattening, so every flat table below stays valid)."""
+    D, hier = _normalize_devices(devices)
     M, n_loc = pg.M, pg.n_loc
     m = M // D
     loc_n = m * n_loc
@@ -517,14 +798,16 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str],
                     "mir_ids": pg.mir_ids, "mir_nworkers": pg.mir_nworkers}
     specs: Dict = {"vmask": P(AXIS), "deg": P(AXIS),
                    "mir_ids": P(), "mir_nworkers": P()}
+    hint_w, hint_h = _cap_hints_2d(pg, D, *hier) if hier else (None, None)
     meta = {"M": M, "n_loc": n_loc, "D": D, "m_loc": m, "n": pg.n,
             "tau": pg.tau, "layout": pg.layout, "split": split,
-            "cap_hint": _cap_hint(pg, D), "plan_meta": {},
+            "hier": hier, "cap_hint": _cap_hint(pg, D),
+            "cap_hint_w": hint_w, "cap_hint_h": hint_h, "plan_meta": {},
             "fetch_meta": {}, "pipeline": pipeline,
             "pipeline_chunks": chunks or 1}
 
     def add_fetch(name, need_lists):
-        fmeta, farr = _build_fetch_plan(need_lists, D, loc_n)
+        fmeta, farr = _build_fetch_plan(need_lists, D, loc_n, hier=hier)
         meta["fetch_meta"][name] = fmeta
         for k, v in farr.items():
             arrays[f"fetch_{name}_{k}"] = v
@@ -620,11 +903,17 @@ def _shard_graph(pg, D: int, plan_kinds: Sequence[str],
     for kind in plan_kinds:
         pmeta, parrs = _stack_plans(
             _device_plans(pg, D, kind, planlib.default_nb()), m,
-            chunks=chunks)
+            chunks=chunks, hier=hier)
         meta["plan_meta"][kind] = pmeta
         for k, v in parrs.items():
             arrays[f"plan_{kind}_{k}"] = v
             specs[f"plan_{kind}_{k}"] = P(AXIS)
+    if hier:
+        # device-stacked leading axes shard over BOTH mesh axes (the
+        # flat device order d = h*T + t IS the row-major (h, w) order)
+        both = P((HAXIS, AXIS))
+        specs = {k: (both if v == P(AXIS) else v)
+                 for k, v in specs.items()}
     return meta, arrays, specs
 
 
@@ -648,7 +937,7 @@ class ShardedGraph:
     n: int
     tau: int
     layout: str
-    axis: str
+    axis: object               # "w", or ("h", "w") on a 2-D mesh
     w0: jnp.ndarray            # global index of this device's first worker
     vmask: jnp.ndarray
     deg: jnp.ndarray
@@ -670,6 +959,13 @@ class ShardedGraph:
     plans: Dict[str, TracedPlan] = dataclasses.field(default_factory=dict)
     fetch: Dict[str, TracedFetch] = dataclasses.field(default_factory=dict)
     cap_hint: Optional[int] = None
+    # 2-D (host, device) mesh: T > 0 selects the hierarchical exchanges
+    # (flat device d = h*T + t; intra-host axis "w" size T, host axis "h"
+    # size H) with per-level cap hints replacing the flat one
+    H: int = 1
+    T: int = 0
+    cap_hint_w: Optional[int] = None
+    cap_hint_h: Optional[int] = None
     # double-buffered pipeline: chunk each routed exchange so chunk k's
     # all_to_all overlaps chunk k-1's local combine (results stay exact;
     # see _routed_scatter_combine / _combine_with_plan_sharded)
@@ -690,6 +986,10 @@ class ShardedGraph:
     @property
     def n_pad(self) -> int:
         return self.M * self.n_loc
+
+    @property
+    def hier(self) -> bool:
+        return self.T > 0
 
     def log_of(self, worker: jnp.ndarray) -> jnp.ndarray:
         """Physical shard ids -> logical worker ids (identity when the
@@ -739,7 +1039,16 @@ class ShardedGraph:
 def _make_sg(meta, a) -> ShardedGraph:
     layout = meta["layout"]
     m = meta["m_loc"]
-    d = jax.lax.axis_index(AXIS).astype(jnp.int32)
+    hier = meta.get("hier")
+    if hier:
+        H, T = hier
+        axis = (HAXIS, AXIS)
+    else:
+        H, T = 1, 0
+        axis = AXIS
+    # on the 2-D mesh the tuple index IS the flat row-major device id
+    # d = h*T + t, so all flat-id arithmetic (w0, owner checks) holds
+    d = jax.lax.axis_index(axis).astype(jnp.int32)
     w0 = d * m
 
     def loc(name):
@@ -765,6 +1074,18 @@ def _make_sg(meta, a) -> ShardedGraph:
                 cxval=a[f"plan_{kind}_cxval"][0],
                 crblk=a[f"plan_{kind}_crblk"][0],
                 crval=a[f"plan_{kind}_crval"][0])
+        if "x1cap" in pm:
+            chunked.update(
+                x1cap=pm["x1cap"], n_iseg=pm["n_iseg"],
+                x2cap=pm["x2cap"], hchunks=pm["hchunks"],
+                x1seg=a[f"plan_{kind}_x1seg"][0],
+                x1val=a[f"plan_{kind}_x1val"][0],
+                iscat=a[f"plan_{kind}_iscat"][0],
+                ival=a[f"plan_{kind}_ival"][0],
+                x2seg=a[f"plan_{kind}_x2seg"][0],
+                x2val=a[f"plan_{kind}_x2val"][0],
+                r2blk=a[f"plan_{kind}_r2blk"][0],
+                r2val=a[f"plan_{kind}_r2val"][0])
         plans[kind] = TracedPlan(
             nb=pm["nb"], eb=pm["eb"], B_per_w=pm["B_per_w"],
             n_blocks=pm["n_blocks"], n_rows=pm["n_rows"],
@@ -781,10 +1102,19 @@ def _make_sg(meta, a) -> ShardedGraph:
             rval=a[f"plan_{kind}_rval"][0], **chunked)
     fetch = {}
     for name, fm in meta["fetch_meta"].items():
-        fetch[name] = TracedFetch(
-            n_need=fm["n_need"], cap=fm["cap"],
-            send_slot=a[f"fetch_{name}_send_slot"][0],
-            recv_pos=a[f"fetch_{name}_recv_pos"][0])
+        if "n_gw" in fm:
+            fetch[name] = TracedFetch(
+                n_need=fm["n_need"], n_gw=fm["n_gw"],
+                cap_a=fm["cap_a"], cap_b=fm["cap_b"],
+                a_send=a[f"fetch_{name}_a_send"][0],
+                a_recv=a[f"fetch_{name}_a_recv"][0],
+                b_send=a[f"fetch_{name}_b_send"][0],
+                b_recv=a[f"fetch_{name}_b_recv"][0])
+        else:
+            fetch[name] = TracedFetch(
+                n_need=fm["n_need"], cap=fm["cap"],
+                send_slot=a[f"fetch_{name}_send_slot"][0],
+                recv_pos=a[f"fetch_{name}_recv_pos"][0])
     split = meta.get("split", False)
     extra = {}
     if split:
@@ -796,7 +1126,9 @@ def _make_sg(meta, a) -> ShardedGraph:
             eg_csrc=a["eg_csrc"][0], all_csrc=a["all_csrc"][0])
     return ShardedGraph(
         M=meta["M"], n_loc=meta["n_loc"], m_loc=m, D=meta["D"],
-        n=meta["n"], tau=meta["tau"], layout=layout, axis=AXIS, w0=w0,
+        n=meta["n"], tau=meta["tau"], layout=layout, axis=axis, w0=w0,
+        H=H, T=T, cap_hint_w=meta.get("cap_hint_w"),
+        cap_hint_h=meta.get("cap_hint_h"),
         vmask=a["vmask"], deg=a["deg"],
         eg_src=loc("eg_src"), eg_dst=loc("eg_dst"),
         eg_mask=loc("eg_mask"), eg_w=loc("eg_w"),
@@ -880,6 +1212,9 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
     issued before round r-1's received lanes scatter, so the collective
     flies while the combine runs.  Rounds still combine in the sequential
     order (r=0,1,...), so the result is bitwise identical."""
+    if sg.hier:
+        return _hier_scatter_combine(sg, targets, values, valid, op,
+                                     cap=cap)
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
     cap = _pipeline_cap(sg, cap or _cap_for(L, D))
@@ -922,6 +1257,110 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
     return _combine(buf, last)
 
 
+def _hier_caps(sg: ShardedGraph, L: int, cap) -> Tuple[int, int]:
+    """Per-level lane caps of one hierarchical routed exchange.  A flat
+    int cap is a 1-D-mesh quantity (per-destination-*device*) and would
+    silently under-cap the funnel legs here — the intra-host leg routes
+    to T columns and the inter-host leg routes a whole column's residue
+    to H hosts — so unless an explicit ``(cap1, cap2)`` pair is given,
+    both caps are re-derived per level from the level-aware hints."""
+    if isinstance(cap, tuple):
+        cap1, cap2 = int(cap[0]), int(cap[1])
+    else:
+        cap1 = _cap_for(L, sg.T, sg.cap_hint_w)
+        cap2 = _cap_for(sg.T * cap1, sg.H, sg.cap_hint_h)
+    # the pipeline chunks the INTER-host leg (where the overlap pays)
+    return cap1, _pipeline_cap(sg, cap2)
+
+
+def _bucket_level(sg: ShardedGraph, targets, valid, level: str):
+    """Sort lanes by the ``level`` coordinate of the destination device
+    (column within host for ``"w"``, host for ``"h"``; invalid last).
+    Returns (order, (K+1,) bucket offsets) with K the axis size."""
+    loc_n = sg.m_loc * sg.n_loc
+    dd = jnp.clip(targets, 0, sg.n_pad - 1) // loc_n
+    K = sg.T if level == "w" else sg.H
+    coord = dd % sg.T if level == "w" else dd // sg.T
+    key = jnp.where(valid, coord, K).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    off = jnp.searchsorted(key[order], jnp.arange(K + 1, dtype=jnp.int32))
+    return order, off
+
+
+def _hier_scatter_combine(sg: ShardedGraph, targets, values, valid,
+                          op: str, cap=None) -> jnp.ndarray:
+    """2-D twin of :func:`_routed_scatter_combine`: lanes first route to
+    the destination *column* within my host (axis ``"w"`` rounds), the
+    column device segment-combines everything it received by target —
+    the per-level Theorem-1 combine — and only the combined residue
+    crosses the host axis (``"h"`` rounds) to the owner, which combines
+    into its local buffer.  Round counts are pmax'd over the whole mesh
+    so every device runs the same collectives; with ``sg.pipeline`` the
+    inter-host rounds are double-buffered (round r's all_to_all flies
+    while round r-1 scatters — the leg where the overlap win lives)."""
+    H, T = sg.H, sg.T
+    loc_n = sg.m_loc * sg.n_loc
+    n_pad = sg.n_pad
+    L = targets.shape[0]
+    cap1, cap2 = _hier_caps(sg, L, cap)
+    ident = identity_of(op, values.dtype)
+    order, off = _bucket_level(sg, targets, valid, "w")
+    st_ = jnp.where(valid, targets, n_pad)[order]
+    sv_ = jnp.where(valid, values, ident)[order]
+    rounds1 = _rounds_for(sg, off, cap1)
+    base = sg.w0 * sg.n_loc
+    L2 = T * cap1
+    zerow = jnp.zeros((L2,), jnp.int32)
+
+    def inner(buf, tf, vf):
+        # intermediate combine: duplicates aimed at the same target merge
+        # BEFORE crossing the host axis (worker key 0 -> key by target)
+        realf, seg_t, seg_val, _, _ = planlib.sorted_segments_flat(
+            tf, vf, tf < n_pad, zerow, op, n_pad)
+        ord2, off2 = _bucket_level(sg, seg_t, realf, "h")
+        t2_ = jnp.where(realf, seg_t, n_pad)[ord2]
+        v2_ = jnp.where(realf, seg_val, ident)[ord2]
+        rounds2 = _rounds_for(sg, off2, cap2)
+
+        def _xchg(r):
+            idxc, ok = _round_lanes(off2, r, cap2, L2)
+            t_send = jnp.where(ok, t2_[idxc], n_pad)
+            v_send = jnp.where(ok, v2_[idxc], ident)
+            return (jax.lax.all_to_all(t_send, HAXIS, 0, 0),
+                    jax.lax.all_to_all(v_send, HAXIS, 0, 0))
+
+        def _combine(b, recv):
+            t_recv, v_recv = recv
+            slot = t_recv - base
+            okr = (slot >= 0) & (slot < loc_n)
+            return scatter_op(op, b, jnp.where(okr, slot, 0),
+                              jnp.where(okr, v_recv, ident))
+
+        if not sg.pipeline:
+            return jax.lax.fori_loop(
+                0, rounds2, lambda r, b: _combine(b, _xchg(r)), buf)
+
+        def body(r, carry):
+            b, prev = carry
+            cur = _xchg(r)                   # round r in flight...
+            return _combine(b, prev), cur    # ...while r-1 combines
+
+        first = _xchg(jnp.zeros((), jnp.int32))
+        buf, last = jax.lax.fori_loop(1, rounds2, body, (buf, first))
+        return _combine(buf, last)
+
+    def outer(r, buf):
+        idxc, ok = _round_lanes(off, r, cap1, L)
+        t_send = jnp.where(ok, st_[idxc], n_pad)       # (T, cap1)
+        v_send = jnp.where(ok, sv_[idxc], ident)
+        t_r = jax.lax.all_to_all(t_send, AXIS, 0, 0)
+        v_r = jax.lax.all_to_all(v_send, AXIS, 0, 0)
+        return inner(buf, t_r.reshape(-1), v_r.reshape(-1))
+
+    buf0 = jnp.full((loc_n,), ident, values.dtype)
+    return jax.lax.fori_loop(0, rounds1, outer, buf0)
+
+
 def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
                   cap: Optional[int] = None) -> jnp.ndarray:
     """The request-respond transport: a real two-round trip.  (L,) global
@@ -935,6 +1374,8 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
     in flight (out and back) while request-chunk r-1's responses write
     into the output.  Rounds write disjoint lanes, so the result is
     bitwise identical to the sequential loop."""
+    if sg.hier:
+        return _hier_routed_fetch(sg, vals, targets, valid, cap=cap)
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
     cap = _pipeline_cap(sg, cap or _cap_for(L, D))
@@ -977,6 +1418,90 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
     return jnp.where(ok_t, got, jnp.zeros((), vals.dtype))
 
 
+def _hier_routed_fetch(sg: ShardedGraph, vals, targets, valid,
+                       cap=None) -> jnp.ndarray:
+    """2-D twin of :func:`_routed_fetch`: requests first route to the
+    owner's *column* within my host (axis ``"w"`` rounds); the column
+    device sorts the host's requests and deduplicates them — only one
+    head request per distinct target crosses the host axis (Theorem 3
+    applied per level) — the owner answers over the ``"h"`` trip, the
+    response is propagated back down the duplicate segments, unsorted,
+    and returned over the mirrored ``"w"`` lanes.  With ``sg.pipeline``
+    the inter-host trips are double-buffered."""
+    H, T = sg.H, sg.T
+    loc_n = sg.m_loc * sg.n_loc
+    n_pad = sg.n_pad
+    L = targets.shape[0]
+    cap1, cap2 = _hier_caps(sg, L, cap)
+    flat = vals.reshape(-1)
+    zero = jnp.zeros((), vals.dtype)
+    ok_t = valid & (targets >= 0) & (targets < n_pad)
+    order, off = _bucket_level(sg, targets, ok_t, "w")
+    st_ = jnp.where(ok_t, targets, n_pad)[order]
+    rounds1 = _rounds_for(sg, off, cap1)
+    base = sg.w0 * sg.n_loc
+    Lr = T * cap1
+
+    def gateway(reqs):
+        # host-level dedup: sort the host's requests, fetch one head per
+        # distinct target over the host axis, fan the response back down
+        ord2 = jnp.argsort(reqs, stable=True)
+        rs = reqs[ord2]
+        first = (rs < n_pad) & jnp.concatenate(
+            [jnp.ones((1,), bool), rs[1:] != rs[:-1]])
+        ord3, off2 = _bucket_level(sg, rs, first, "h")
+        rh_ = jnp.where(first, rs, n_pad)[ord3]
+        rounds2 = _rounds_for(sg, off2, cap2)
+
+        def _trip(r):
+            idxc, ok = _round_lanes(off2, r, cap2, Lr)
+            req = jnp.where(ok, rh_[idxc], n_pad)
+            req_r = jax.lax.all_to_all(req, HAXIS, 0, 0)
+            slot = req_r - base
+            okr = (slot >= 0) & (slot < loc_n)
+            resp = jnp.where(okr, flat[jnp.clip(slot, 0, loc_n - 1)],
+                             zero)
+            return idxc, ok, jax.lax.all_to_all(resp, HAXIS, 0, 0)
+
+        def _write(out, trip):
+            idxc, ok, resp_b = trip
+            return out.at[jnp.where(ok, idxc, Lr)].set(
+                jnp.where(ok, resp_b, zero))
+
+        out0 = jnp.zeros((Lr + 1,), vals.dtype)
+        if not sg.pipeline:
+            head3 = jax.lax.fori_loop(
+                0, rounds2, lambda r, o: _write(o, _trip(r)), out0)[:Lr]
+        else:
+            def body(r, carry):
+                o, prev = carry
+                cur = _trip(r)
+                return _write(o, prev), cur
+
+            ft = _trip(jnp.zeros((), jnp.int32))
+            out, last = jax.lax.fori_loop(1, rounds2, body, (out0, ft))
+            head3 = _write(out, last)[:Lr]
+        heads = jnp.zeros((Lr,), vals.dtype).at[ord3].set(head3)
+        hidx = jax.lax.cummax(
+            jnp.where(first, jnp.arange(Lr, dtype=jnp.int32), 0))
+        got = jnp.zeros((Lr,), vals.dtype).at[ord2].set(heads[hidx])
+        return jnp.where(reqs < n_pad, got, zero)
+
+    def outer(r, out):
+        idxc, ok = _round_lanes(off, r, cap1, L)
+        req = jnp.where(ok, st_[idxc], n_pad)          # (T, cap1)
+        req_r = jax.lax.all_to_all(req, AXIS, 0, 0)
+        got_r = gateway(req_r.reshape(-1)).reshape(T, cap1)
+        resp_b = jax.lax.all_to_all(got_r, AXIS, 0, 0)
+        return out.at[jnp.where(ok, idxc, L)].set(
+            jnp.where(ok, resp_b, zero))
+
+    out0 = jnp.zeros((L + 1,), vals.dtype)
+    got_sorted = jax.lax.fori_loop(0, rounds1, outer, out0)[:L]
+    got = jnp.zeros((L,), vals.dtype).at[order].set(got_sorted)
+    return jnp.where(ok_t, got, zero)
+
+
 # ---------------------------------------------------------------------------
 # sharded channel implementations
 # ---------------------------------------------------------------------------
@@ -1013,6 +1538,47 @@ def _plan_exchange_pipelined(sg: ShardedGraph, plan: TracedPlan,
         loc = combine(loc, c - 1, recv)      # ...while c-1 scatters
         recv = nxt
     return combine(loc, plan.n_chunks - 1, recv)
+
+
+def _plan_exchange_hier(sg: ShardedGraph, plan: TracedPlan,
+                        seg_out: jnp.ndarray, op: str,
+                        loc: jnp.ndarray, ident) -> jnp.ndarray:
+    """The two-leg static plan exchange (see :func:`_hier_plan_tables`):
+    my segment partials ride ONE intra-host all_to_all to the device of
+    their destination column, the column device op-combines everything
+    it received by global destination block (``n_iseg`` compact
+    intermediate segments — never an O(n) buffer), and only the combined
+    residue crosses the host axis.  With the pipeline on, the inter-host
+    leg is blocked into ``plan.hchunks`` static position-chunks so chunk
+    c's all_to_all flies while chunk c-1's received residue scatters."""
+    # leg 1 (intra-host): my segments to their destination column
+    send1 = jnp.where(plan.x1val[:, :, None], seg_out[plan.x1seg], ident)
+    recv1 = jax.lax.all_to_all(send1, AXIS, 0, 0)      # (T, x1cap, nb)
+    # intermediate combine by destination block (per-level Theorem 1)
+    ibuf = jnp.full((plan.n_iseg, plan.nb), ident, seg_out.dtype)
+    ibuf = scatter_op(op, ibuf, jnp.where(plan.ival, plan.iscat, 0),
+                      jnp.where(plan.ival[:, :, None], recv1, ident))
+
+    # leg 2 (inter-host): only the combined residue crosses hosts
+    def send2(sl):
+        snd = jnp.where(plan.x2val[:, sl, None], ibuf[plan.x2seg[:, sl]],
+                        ident)
+        return jax.lax.all_to_all(snd, HAXIS, 0, 0)
+
+    def combine2(buf, sl, recv):
+        return scatter_op(
+            op, buf, jnp.where(plan.r2val[:, sl], plan.r2blk[:, sl], 0),
+            jnp.where(plan.r2val[:, sl, None], recv, ident))
+
+    C = plan.hchunks if sg.pipeline else 1
+    ck = -(-plan.x2cap // C)
+    sls = [slice(c * ck, min((c + 1) * ck, plan.x2cap)) for c in range(C)]
+    recv = send2(sls[0])
+    for c in range(1, C):
+        nxt = send2(sls[c])                  # chunk c in flight...
+        loc = combine2(loc, sls[c - 1], recv)   # ...while c-1 scatters
+        recv = nxt
+    return combine2(loc, sls[-1], recv)
 
 
 def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
@@ -1053,11 +1619,16 @@ def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
         seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
         seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
         if exchange:
-            send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg],
-                             ident)
-            recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
-            loc = scatter_op(op, loc, jnp.where(plan.rval, plan.rblk, 0),
-                             jnp.where(plan.rval[:, :, None], recv, ident))
+            if plan.x1seg is not None:
+                loc = _plan_exchange_hier(sg, plan, seg_out, op, loc,
+                                          ident)
+            else:
+                send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg],
+                                 ident)
+                recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
+                loc = scatter_op(
+                    op, loc, jnp.where(plan.rval, plan.rblk, 0),
+                    jnp.where(plan.rval[:, :, None], recv, ident))
         else:
             # all segments are mine: scatter by local block id directly
             # (padded dummy segments carry all-identity rows — harmless)
@@ -1414,10 +1985,11 @@ def scatter_edges_sharded(sg: ShardedGraph, base, targets, upd, mask,
 # the executor
 # ---------------------------------------------------------------------------
 
-def _state_specs(tree, M: int):
+def _state_specs(tree, M: int, hier=None):
+    row = P((HAXIS, AXIS)) if hier else P(AXIS)
     return jax.tree.map(
-        lambda x: P(AXIS) if (getattr(x, "ndim", 0) >= 1
-                              and x.shape[0] == M) else P(), tree)
+        lambda x: row if (getattr(x, "ndim", 0) >= 1
+                          and x.shape[0] == M) else P(), tree)
 
 
 def _acc_specs(stats_shape):
@@ -1449,8 +2021,14 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     combine, and the (hi, lo) stats fold is deferred one superstep
     (``bsp.run(pipeline=True)``).  Results keep the parity contract:
     min/max/int bitwise, stats integer-exact, float sums within the
-    usual exchange-order tolerance."""
-    if pg.M % devices:
+    usual exchange-order tolerance.
+
+    ``devices`` may also be an ``(hosts, per_host)`` pair: the program
+    then runs on the 2-D mesh with the hierarchical two-leg exchanges
+    (combine within the host, route the residue across hosts), same
+    parity contract against the 1-D path."""
+    D, hier = _normalize_devices(devices)
+    if pg.M % D:
         raise ValueError(f"M={pg.M} workers must divide over "
                          f"devices={devices}")
     mesh = graph_mesh(devices)
@@ -1459,7 +2037,7 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
 
     _, _, stats_shape = jax.eval_shape(make_step(pg), state0,
                                        jnp.zeros((), jnp.int32))
-    st_specs = _state_specs(state0, pg.M)
+    st_specs = _state_specs(state0, pg.M, hier)
     stats_specs = jax.tree.map(lambda _: P(), stats_shape)
     hist_specs = stats_specs if record_history else None
 
@@ -1505,17 +2083,19 @@ def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
     worker/edge-sharded on its leading axis and ``stats`` is replicated.
     csr edge-shaped outputs come back device-concatenated with per-device
     padding — strip with ``csr_device_bounds``."""
-    if pg.M % devices:
+    D, hier = _normalize_devices(devices)
+    if pg.M % D:
         raise ValueError(f"M={pg.M} workers must divide over "
                          f"devices={devices}")
     mesh = graph_mesh(devices)
     meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds,
                                            pipeline, pipeline_chunks)
+    row_spec = P((HAXIS, AXIS)) if hier else P(AXIS)
     in_specs = jax.tree.map(
-        lambda x: P(AXIS) if (getattr(x, "ndim", 0) >= 1
-                              and x.shape[0] == pg.M) else P(), args)
+        lambda x: row_spec if (getattr(x, "ndim", 0) >= 1
+                               and x.shape[0] == pg.M) else P(), args)
     out_shape, stats_shape = jax.eval_shape(make_fn(pg), *args)
-    out_specs = (jax.tree.map(lambda _: P(AXIS), out_shape),
+    out_specs = (jax.tree.map(lambda _: row_spec, out_shape),
                  jax.tree.map(lambda _: P(), stats_shape))
 
     def inner(arrs, a):
@@ -1525,3 +2105,60 @@ def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
     fn = shard_map(inner, mesh=mesh, in_specs=(arr_specs, in_specs),
                    out_specs=out_specs, check_rep=False)
     return jax.jit(fn)(arrays, args)
+
+
+def exchange_volume_report(pg, devices, plan_kinds: Sequence[str] = ()):
+    """Static per-superstep exchange-volume accounting from the shard
+    tables (host-side; no compilation).  Counts the wire lanes of every
+    static exchange the executor runs per superstep — the plan exchanges
+    (Ch_msg/Ch_mir on the pallas backend) and the fetch plans (mirror
+    values, split source reads):
+
+    * 1-D mesh: every lane between two distinct devices is ``intra_host``
+      (one host) and ``cross_host`` is 0 — ``total`` is the flat
+      all-pairs volume the hierarchical gate compares against.
+    * 2-D mesh: leg-1 lanes leaving their column (intra-host wire) count
+      as ``intra_host``; leg-2 / leg-A lanes leaving their host count as
+      ``cross_host``.  The intermediate combine means ``cross_host`` is
+      the *post-combine residue* — the per-level Theorem-1 bound in
+      action, and the number the bench gate requires to be strictly
+      below the flat all-pairs volume."""
+    D, hier = _normalize_devices(devices)
+    meta, arrays, _ = _shard_graph(pg, devices, plan_kinds)
+    dev = np.arange(D)
+    rep = {"devices": D, "hier": hier, "per_exchange": {}}
+    intra = cross = 0
+
+    def add(name, i, c):
+        rep["per_exchange"][name] = {"intra_host": int(i),
+                                     "cross_host": int(c)}
+
+    for kind in meta["plan_meta"]:
+        if hier:
+            H, T = hier
+            snd1 = np.asarray(arrays[f"plan_{kind}_x1val"]).sum(axis=2)
+            i_k = int(snd1[(dev % T)[:, None] != np.arange(T)[None]].sum())
+            snd2 = np.asarray(arrays[f"plan_{kind}_x2val"]).sum(axis=2)
+            c_k = int(snd2[(dev // T)[:, None] != np.arange(H)[None]].sum())
+        else:
+            snd = np.asarray(arrays[f"plan_{kind}_xval"]).sum(axis=2)
+            i_k, c_k = int(snd.sum() - np.trace(snd)), 0
+        add(f"plan_{kind}", i_k, c_k)
+        intra, cross = intra + i_k, cross + c_k
+    for name in meta["fetch_meta"]:
+        if hier:
+            H, T = hier
+            a_snd = (np.asarray(arrays[f"fetch_{name}_a_send"]) >= 0
+                     ).sum(axis=2)
+            c_k = int(a_snd[(dev // T)[:, None] != np.arange(H)[None]].sum())
+            b_snd = (np.asarray(arrays[f"fetch_{name}_b_send"]) >= 0
+                     ).sum(axis=2)
+            i_k = int(b_snd[(dev % T)[:, None] != np.arange(T)[None]].sum())
+        else:
+            snd = (np.asarray(arrays[f"fetch_{name}_send_slot"]) >= 0
+                   ).sum(axis=2)
+            i_k, c_k = int(snd.sum() - np.trace(snd)), 0
+        add(f"fetch_{name}", i_k, c_k)
+        intra, cross = intra + i_k, cross + c_k
+    rep.update(intra_host=intra, cross_host=cross, total=intra + cross)
+    return rep

@@ -169,6 +169,12 @@ class PartitionedGraph:
     # routed all_to_all exchanges are sized from the graph, not guessed.
     pair_counts: Optional[np.ndarray] = None
 
+    # host-topology-aware placement (partition(..., hosts=H)): workers
+    # were relabeled so block [h*M/H, (h+1)*M/H) is host h's — heavy-
+    # communicating pairs (incl. mirror broadcasts) land intra-host on a
+    # hierarchical (H, T) device mesh.  None = host-oblivious order.
+    hosts: Optional[int] = None
+
     # lazily-built message plans (core/plan.py), keyed (kind, nb, eb);
     # per-instance scratch, never part of equality or the pytree.
     plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -281,7 +287,8 @@ def _refine_offsets(off: np.ndarray, k: np.ndarray) -> np.ndarray:
 def partition(g: Graph, M: int, tau: Optional[int] = None,
               seed: int = 0, layout: str = "padded",
               balance: str = "hash",
-              split_factor: float = 1.2) -> PartitionedGraph:
+              split_factor: float = 1.2,
+              hosts: Optional[int] = None) -> PartitionedGraph:
     """Partition ``g`` over M workers with mirroring threshold ``tau``
     (None => mirroring disabled, i.e. tau = inf).
 
@@ -295,6 +302,17 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     ``"hash"`` random, ``"edges"`` greedy edge-balanced, ``"split"``
     edge-balanced plus physical splitting of workers whose edge load
     exceeds ``split_factor x`` the mean (csr only).
+
+    ``hosts=H`` makes the placement host-topology-aware for the
+    hierarchical (H, T) device mesh: after the balance assignment the M
+    workers are regrouped (``cost_model.affinity_groups`` over the
+    worker-pair traffic matrix) so heavy-communicating pairs — combined
+    residue and mirror broadcasts alike; a split worker's physical
+    shards stay contiguous inside its logical block — land in the same
+    host block of M/H workers, i.e. on the same host once the executor
+    maps worker blocks onto the mesh.  Placement only: results are
+    bitwise identical to the host-oblivious partition after
+    ``canonical_labels``.
     """
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; use one of {LAYOUTS}")
@@ -311,6 +329,23 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     else:
         perm = _balanced_perm(g, M, n_loc, tau)
     n_ids = M * n_loc
+    if hosts is not None and hosts > 1:
+        if M % hosts:
+            raise ValueError(f"M={M} workers must divide over "
+                             f"hosts={hosts}")
+        # worker-pair traffic of the tentative assignment -> regroup
+        # workers host by host, then relabel blocks (slot within the
+        # block is preserved, so only worker *placement* changes)
+        s0 = perm[g.src] // n_loc
+        pkey0 = np.unique(s0 * np.int64(n_ids) + perm[g.dst])
+        pc0 = np.zeros((M, M), np.int64)
+        np.add.at(pc0, ((pkey0 // n_ids).astype(np.int64),
+                        ((pkey0 % n_ids) // n_loc).astype(np.int64)), 1)
+        worker_order = cost_model.affinity_groups(
+            cost_model.worker_affinity(pc0), hosts)
+        rank = np.empty(M, np.int64)
+        rank[worker_order] = np.arange(M)
+        perm = rank[perm // n_loc] * n_loc + perm % n_loc
     inv = np.full(n_ids, -1, np.int64)
     inv[perm] = np.arange(g.n)
     src = perm[g.src]
@@ -464,5 +499,5 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         balance=balance, split_factor=split_factor, M_phys=M_phys,
         phys_log=phys_log, phys_eg_off=phys_eg, phys_all_off=phys_all,
         phys_mir_off=phys_mir, eg_pw=eg_pw, all_pw=all_pw, mir_pw=mir_pw,
-        pair_counts=pair_counts,
+        pair_counts=pair_counts, hosts=hosts,
     )

@@ -33,7 +33,7 @@ def make_graph(graph: str, n: int, seed: int):
 
 def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
           layout: str = "padded", balance: str = "hash",
-          split_factor: float = 1.2):
+          split_factor: float = 1.2, hosts: int = 0):
     from repro.core.cost_model import choose_tau
     from repro.graph.structs import partition
     g = make_graph(graph, n, seed)
@@ -46,7 +46,8 @@ def build(graph: str, n: int, seed: int, M: int, tau_arg: str,
     else:
         tau = int(tau_arg)
     pg = partition(g, M, tau=tau, seed=seed, layout=layout,
-                   balance=balance, split_factor=split_factor)
+                   balance=balance, split_factor=split_factor,
+                   hosts=hosts if hosts > 1 else None)
     return g, pg, tau
 
 
@@ -79,6 +80,14 @@ def main():
                          "(0 = single-device batched simulation); on CPU "
                          "the required host devices are forced via "
                          "XLA_FLAGS")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="arrange --devices D as a hierarchical "
+                         "(hosts, D/hosts) mesh: the partition becomes "
+                         "host-topology-aware, every routed exchange "
+                         "combines/dedups per level, and only the "
+                         "combined residue crosses the host axis; the "
+                         "driver prints intra- vs cross-host "
+                         "exchange-volume stats")
     ap.add_argument("--pipeline", action="store_true",
                     help="double-buffer the supersteps: chunk every "
                          "routed exchange so chunk k's all_to_all "
@@ -86,6 +95,8 @@ def main():
                          "keep the parity contract)")
     args = ap.parse_args()
 
+    if args.hosts > 1 and (not args.devices or args.devices % args.hosts):
+        ap.error(f"--hosts {args.hosts} needs --devices divisible by it")
     if args.devices > 1:
         from repro.launch.xla_flags import force_host_devices
         force_host_devices(args.devices)
@@ -103,13 +114,18 @@ def main():
 
     g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau,
                        layout=args.layout, balance=args.balance,
-                       split_factor=args.split_factor)
-    dev = args.devices if args.devices else None
+                       split_factor=args.split_factor, hosts=args.hosts)
+    if args.hosts > 1 and args.devices:
+        dev = (args.hosts, args.devices // args.hosts)
+        dev_tag = f"{dev[0]}x{dev[1]}"
+    else:
+        dev = args.devices if args.devices else None
+        dev_tag = str(dev or 1)
     pipe = args.pipeline
     print(f"[graph] {args.graph}: n={g.n} m={g.m} M={args.workers} "
           f"tau={tau} max_deg={int(g.out_degrees().max())} "
           f"backend={args.backend} layout={args.layout} "
-          f"balance={args.balance} devices={dev or 1} "
+          f"balance={args.balance} devices={dev_tag} "
           f"pipeline={'on' if pipe else 'off'}")
 
     def report_balance(pg_run):
@@ -123,7 +139,7 @@ def main():
             from repro.core.exec import device_edge_loads
             dl = straggler_report(device_edge_loads(pg_run, dev))
             print(f"[balance] device edge-load max/mean="
-                  f"{dl['max_over_mean']:.2f} over {dev} devices")
+                  f"{dl['max_over_mean']:.2f} over {dev_tag} devices")
 
     t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
@@ -143,7 +159,8 @@ def main():
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
                         layout=args.layout, balance=args.balance,
-                        split_factor=args.split_factor)
+                        split_factor=args.split_factor,
+                        hosts=args.hosts if args.hosts > 1 else None)
         _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
                               backend=be, devices=dev, pipeline=pipe)
         pg = pgw
@@ -155,7 +172,8 @@ def main():
         gw = gw.symmetrized()
         pgw = partition(gw, args.workers, tau=None, seed=args.seed,
                         layout=args.layout, balance=args.balance,
-                        split_factor=args.split_factor)
+                        split_factor=args.split_factor,
+                        hosts=args.hosts if args.hosts > 1 else None)
         (res, stats, n_ss) = msf(pgw, backend=be, devices=dev,
                                  pipeline=pipe)
         print(f"[msf] total weight {float(res[1]):.2f}, "
@@ -180,6 +198,21 @@ def main():
             rep = straggler_report(np.asarray(stats[k]))
             print(f"  balance[{k}]: max/mean={rep['max_over_mean']:.2f} "
                   f"cv={rep['cv']:.2f} gini={rep['gini']:.3f}")
+
+    if dev:
+        # static wire-lane accounting of the per-superstep exchanges;
+        # on a hierarchical mesh cross_host counts only the post-combine
+        # residue that actually crosses the host axis
+        from repro.core.exec import broadcast_plan_kinds
+        from repro.core.exec import exchange_volume_report
+        vol = exchange_volume_report(
+            pg, dev, plan_kinds=broadcast_plan_kinds(be, mirror))
+        print(f"[exchange] devices={dev_tag}: wire lanes/superstep "
+              f"total={vol['total']:,d} intra_host={vol['intra_host']:,d} "
+              f"cross_host={vol['cross_host']:,d}")
+        for name, e in sorted(vol["per_exchange"].items()):
+            print(f"  {name:16s} intra={e['intra_host']:>12,d} "
+                  f"cross={e['cross_host']:>12,d}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,32 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def graph_mesh(hosts: int, per_host: int):
+    """The 2-D (host, device) worker mesh of the hierarchical graph
+    executor: axis ``"h"`` spans hosts, axis ``"w"`` the devices within
+    one host, and the flat row-major device order (d = h * per_host + t)
+    is the worker-block order, so ``jax.lax.all_to_all`` over ``"w"``
+    exchanges within replica groups {h*T..h*T+T-1} (intra-host) and over
+    ``"h"`` within column groups {t, T+t, 2T+t, ...} (inter-host) — the
+    two collective levels the hierarchical exchanges ride.
+
+    Single-process: force enough host devices before importing jax
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=H*T``; the CLIs
+    do this) — the mesh then *simulates* the hierarchy, which is what
+    the parity/bench suites run.  Multi-process: call
+    ``jax.distributed.initialize`` first (one process per host, T local
+    devices each) and the same mesh maps ``"h"`` onto real process
+    boundaries, because ``jax.make_mesh`` orders global devices
+    process-major."""
+    hosts, per_host = int(hosts), int(per_host)
+    need = hosts * per_host
+    if need > len(jax.devices()):
+        raise RuntimeError(
+            f"graph_mesh({hosts}, {per_host}) needs {need} devices but "
+            f"only {len(jax.devices())} are visible")
+    return jax.make_mesh((hosts, per_host), ("h", "w"))
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

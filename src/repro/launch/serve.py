@@ -56,14 +56,22 @@ def run(arch: str, reduced: bool, batch: int, prompt_len: int, gen: int,
     return toks
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced exists: the old
+    # action="store_true" + default=True made the flag impossible to
+    # turn off from the command line
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     run(args.arch, args.reduced, args.batch, args.prompt_len, args.gen)
 
 

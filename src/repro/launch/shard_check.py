@@ -16,7 +16,18 @@ the single-device batched simulation:
   (``check_routed_memory`` — the destination-routed exchange exists
   precisely to kill the per-device O(n) replicated buffers);
 * masked request lanes must never leak into gathered values
-  (``check_masked_lanes`` — sharded == unsharded bitwise, masked = 0).
+  (``check_masked_lanes`` — sharded == unsharded bitwise, masked = 0);
+* on a 2-D ``(hosts, devices)`` mesh every routed join must compile to
+  TWO distinct all-to-all levels — replica groups of size T (intra-host)
+  AND size H (cross-host) — with the no-replicated-buffer contract
+  holding at both levels (``check_hier_levels``), and explicit
+  per-level caps far below the traffic must still produce bitwise
+  results via overflow rounds, including a hot destination on the host
+  axis (``check_hier_caps``).
+
+Device counts are ints (1-D worker mesh) or ``(hosts, per_host)``
+tuples (hierarchical mesh; ``HxT`` on the command line, e.g.
+``--devices 8 2x4``).
 
 Run as a module (it forces the host device count BEFORE importing jax, so
 it works on a plain CPU machine and in CI):
@@ -43,6 +54,23 @@ from repro.launch.xla_flags import force_host_devices
 
 
 ALGOS = ("hashmin", "pagerank", "sssp", "sv", "msf", "attr_bcast")
+
+
+def _dev_tag(devices) -> str:
+    """Cell-label spelling of a device count: ``8`` or ``2x4``."""
+    if isinstance(devices, tuple):
+        return "x".join(str(d) for d in devices)
+    return str(devices)
+
+
+def _flat_devices(devices) -> int:
+    """Host device count a mesh spec needs: H*T for tuples."""
+    if isinstance(devices, tuple):
+        out = 1
+        for d in devices:
+            out *= int(d)
+        return out
+    return int(devices)
 
 
 def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
@@ -115,8 +143,8 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                 # the reference is ALWAYS the sequential single-device run
                 ref_e, ref_a, ref_s, ref_n = run_algo(algo, pg, be, None)
                 for D in device_counts:
-                    name = (f"{algo}/{lay}/{be}/{balance}/devices={D}"
-                            f"{pipe_tag}")
+                    name = (f"{algo}/{lay}/{be}/{balance}/"
+                            f"devices={_dev_tag(D)}{pipe_tag}")
                     errs = []
                     e, a, s, nss = run_algo(algo, pg, be, D,
                                             pipe=pipeline)
@@ -315,6 +343,146 @@ def check_routed_memory(n=180, M=8, tau=8, devices=8,
     return rep
 
 
+# ---------------------------------------------------------------------------
+# hierarchical (host, device) mesh contracts
+# ---------------------------------------------------------------------------
+
+_GROUP_RE = re.compile(r"\{([0-9]+(?:,[0-9]+)*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[([0-9]+),([0-9]+)\]<=")
+
+
+def all_to_all_group_sizes(hlo_text: str) -> set:
+    """Replica-group sizes of every ``all-to-all`` in a compiled module.
+    On a 2-D mesh the intra-host level shows groups of size T
+    (``{{0,1,2,3},{4,5,6,7}}`` at (2,4)) and the cross-host level groups
+    of size H (``{{0,4},{1,5},...}``); the iota spelling
+    (``[groups,size]<=[...]``) is folded in for newer jaxlibs."""
+    sizes = set()
+    for line in hlo_text.splitlines():
+        if "all-to-all" not in line or "replica_groups=" not in line:
+            continue
+        groups = line.split("replica_groups=", 1)[1]
+        m = _IOTA_GROUPS_RE.search(line)
+        if m:
+            sizes.add(int(m.group(2)))
+            continue
+        if groups.startswith("{{"):
+            body = groups[1:groups.index("}}") + 1]
+            for g in _GROUP_RE.finditer(body):
+                sizes.add(g.group(1).count(",") + 1)
+    return sizes
+
+
+def check_hier_levels(n=180, M=8, tau=8, hier=(2, 4)) -> dict:
+    """The 2-D acceptance gate: every compiled sharded channel program on
+    a ``(H, T)`` mesh must run TWO distinct all-to-all levels — replica
+    groups of size T (the intra-host leg, where the per-level combine /
+    dedup happens) AND of size H (the cross-host leg carrying only the
+    combined residue) — and at neither level may any all-reduce /
+    all-gather touch an operand of >= n_pad elements (the same
+    replicated-buffer wall as the 1-D gate, now per level)."""
+    H, T = hier
+    pg = _test_graph(n, M, tau)
+    rep = {"hier": [H, T], "n_pad": int(pg.n_pad), "programs": {}}
+    ok = True
+    for name, compiled in _compiled_channel_programs(pg, hier).items():
+        txt = compiled.as_text()
+        sizes = all_to_all_group_sizes(txt)
+        two = {H, T} <= sizes
+        worst = collective_operand_elems(txt)
+        bad = max(worst["all-reduce"], worst["all-gather"])
+        small = bad < pg.n_pad
+        rep["programs"][name] = {
+            "all_to_all_group_sizes": sorted(sizes),
+            "collective_max_elems": worst,
+            "two_levels": bool(two),
+            "no_replicated_buffer": bool(small)}
+        ok &= two and small
+        print(f"[shard_check] hier-levels {name} @ {H}x{T}: all-to-all "
+              f"group sizes {sorted(sizes)}, worst all-reduce/all-gather "
+              f"operand {bad} vs n_pad {pg.n_pad}: "
+              + ("OK" if two and small else
+                 ("MISSING LEVEL" if not two else "REPLICATED BUFFER")))
+    rep["ok"] = bool(ok)
+    return rep
+
+
+def check_hier_caps(n=160, M=8, hier=(2, 4)) -> bool:
+    """Per-level cap overflow regression: drive the raw routed joins on a
+    2-D mesh with explicit ``(cap1, cap2)`` caps far below the traffic —
+    every worker funnels most lanes at vertices owned by ONE worker, so
+    the destination is hot on the host axis too and the inter-host leg
+    must take multiple overflow rounds — and require bitwise parity with
+    the dense reference (masked lanes exactly 0), sequential and
+    pipelined.  This is the 2-D twin of the 1-D cap contract: a cap is a
+    round size, never a truncation."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import exec as exec_mod
+
+    H, T = hier
+    pg = _test_graph(n, M, tau=8)
+    rng = np.random.RandomState(7)
+    R = 33  # lanes per worker: column buckets far exceed an 8-lane cap
+    t_np = np.where(
+        rng.rand(pg.M, R) < 0.8,
+        rng.randint(0, pg.n_loc, (pg.M, R)),          # hot: worker 0
+        rng.randint(0, pg.n_pad, (pg.M, R))).astype(np.int32)
+    m_np = rng.rand(pg.M, R) > 0.25
+    t_np[:, ::5] = 0  # masked lanes alias a real hot vertex
+    m_np[:, ::5] = False
+    v_np = (rng.randint(1, 1 << 20, (pg.M, R))).astype(np.int32)
+    targets, mask = jnp.asarray(t_np), jnp.asarray(m_np)
+    vals = jnp.asarray(v_np)
+    attr = jnp.asarray(
+        rng.randint(1, 1 << 20, (pg.M, pg.n_loc)).astype(np.int32))
+
+    ident = np.iinfo(np.int32).max
+    ref_sc = np.full(pg.n_pad + 1, ident, np.int32)
+    np.minimum.at(ref_sc, np.where(m_np, t_np, pg.n_pad).reshape(-1),
+                  v_np.reshape(-1))
+    ref_sc = ref_sc[:pg.n_pad].reshape(pg.M, pg.n_loc)
+    ref_ft = np.where(m_np, np.asarray(attr).reshape(-1)[t_np], 0)
+
+    def mk_scatter(g):
+        if not isinstance(g, exec_mod.ShardedGraph):
+            return lambda t, v, m: (jnp.asarray(ref_sc), {})
+
+        def fn(t, v, m):
+            out = exec_mod._routed_scatter_combine(
+                g, t.reshape(-1), v.reshape(-1), m.reshape(-1), "min",
+                cap=(8, 8))
+            return out.reshape(g.m_loc, g.n_loc), {}
+        return fn
+
+    def mk_fetch(g):
+        if not isinstance(g, exec_mod.ShardedGraph):
+            return lambda a, t, m: (jnp.asarray(ref_ft), {})
+
+        def fn(a, t, m):
+            got = exec_mod._routed_fetch(g, a, t.reshape(-1),
+                                         m.reshape(-1), cap=(8, 8))
+            return got.reshape(-1, t.shape[1]), {}
+        return fn
+
+    ok = True
+    for pipe in (False, True):
+        out_sc, _ = exec_mod.apply_sharded(
+            pg, mk_scatter, (targets, vals, mask), devices=hier,
+            pipeline=pipe)
+        sc_ok = bool(np.array_equal(np.asarray(out_sc), ref_sc))
+        out_ft, _ = exec_mod.apply_sharded(
+            pg, mk_fetch, (attr, targets, mask), devices=hier,
+            pipeline=pipe)
+        ft_ok = bool(np.array_equal(np.asarray(out_ft), ref_ft))
+        ok &= sc_ok and ft_ok
+        tag = "pipeline" if pipe else "sequential"
+        print(f"[shard_check] hier-caps @ {H}x{T} cap=(8,8) {tag}: "
+              f"scatter {'OK' if sc_ok else 'MISMATCH'}, "
+              f"fetch {'OK' if ft_ok else 'MISMATCH'}")
+    return ok
+
+
 def check_masked_lanes(n=160, M=8, devices=(8,)) -> bool:
     """Masked request lanes must never leak into gathered values: the
     sharded Ch_req output is bitwise identical to the unsharded channel
@@ -404,17 +572,36 @@ def _suite_cells(suite: str):
         # one cell per join-family x regime: the pallas row covers every
         # algorithm at one-worker-per-device, the devices=2 cells pin the
         # general m_loc>1 collectives, split covers shard-crossing routes,
-        # padded the non-csr edge slicing.  The pipeline=True rows prove
-        # the double-buffered executor keeps the identical parity
-        # contract (every algorithm + a dense m_loc>1 cell + split).
-        # Nightly runs the full matrix, pipelined and sequential.
+        # padded the non-csr edge slicing.  Every row also runs the same
+        # traffic through the hierarchical (2,4) mesh — the 2-D cells
+        # must match the SAME sequential single-device reference the 1-D
+        # cells match, which pins 2-D == 1-D bitwise / integer-exact.
+        # The pipeline=True rows prove the double-buffered executor keeps
+        # the identical parity contract (every algorithm + a dense
+        # m_loc>1 cell + split).  Nightly runs the full matrix, pipelined
+        # and sequential, plus the (1,8)/(2,4)/(4,2) hier sweep.
         return [
-            (ALGOS, ("csr",), ("pallas",), (8,), "hash", False),
-            (ALGOS, ("csr",), ("pallas",), (8,), "hash", True),
-            (("sv",), ("csr",), ("dense",), (2,), "hash", False),
-            (("sv",), ("csr",), ("dense",), (2,), "hash", True),
-            (("hashmin",), ("csr",), ("pallas",), (8,), "split", False),
-            (("hashmin",), ("csr",), ("pallas",), (8,), "split", True),
+            (ALGOS, ("csr",), ("pallas",), (8, (2, 4)), "hash", False),
+            (ALGOS, ("csr",), ("pallas",), (8, (2, 4)), "hash", True),
+            (("sv",), ("csr",), ("dense",), (2, (2, 4)), "hash", False),
+            (("sv",), ("csr",), ("dense",), (2, (2, 4)), "hash", True),
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)), "split",
+             False),
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)), "split",
+             True),
+        ]
+    if suite == "hier":
+        # the hierarchical conformance axis: every algorithm on every
+        # (hosts, per_host) factorization of 8 devices — (1,8) pins the
+        # degenerate one-host mesh to the 1-D semantics, (2,4)/(4,2) the
+        # two proper hierarchies — sequential and pipelined, all against
+        # the sequential single-device reference (so all factorizations
+        # agree bitwise with each other and with 1-D D=8)
+        return [
+            (ALGOS, ("csr",), ("pallas",), ((1, 8), (2, 4), (4, 2)),
+             "hash", False),
+            (ALGOS, ("csr",), ("pallas",), ((1, 8), (2, 4), (4, 2)),
+             "hash", True),
         ]
     if suite == "full":
         cells = []
@@ -431,15 +618,26 @@ def _suite_cells(suite: str):
     raise ValueError(f"unknown suite {suite!r}")
 
 
+def _parse_devices(spec: str):
+    """``8`` -> 8 (1-D mesh); ``2x4`` -> (2, 4) (hierarchical mesh)."""
+    if "x" in spec:
+        h, t = spec.split("x", 1)
+        return (int(h), int(t))
+    return int(spec)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--suite", choices=("tier1", "full"), default=None,
+    ap.add_argument("--suite", choices=("tier1", "hier", "full"),
+                    default=None,
                     help="consolidated profiles (matrix + HLO + memory + "
                          "masked-lane checks in ONE process); overrides "
                          "the explicit matrix flags")
     # 1 = degenerate one-device mesh, 2 = several workers per device
-    # (m_loc > 1 with real collectives), 8 = one worker per device
-    ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 8])
+    # (m_loc > 1 with real collectives), 8 = one worker per device,
+    # HxT (e.g. 2x4) = hierarchical (host, device) mesh
+    ap.add_argument("--devices", type=_parse_devices, nargs="+",
+                    default=[1, 2, 8])
     ap.add_argument("--algos", nargs="+", default=list(ALGOS))
     ap.add_argument("--n", type=int, default=180)
     ap.add_argument("--workers", type=int, default=8)
@@ -456,8 +654,9 @@ def main() -> None:
                          "only applies to worker-aligned meshes)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
-    force_host_devices(8 if args.suite else max(args.devices),
-                       default_platform="cpu")
+    force_host_devices(
+        8 if args.suite else max(_flat_devices(d) for d in args.devices),
+        default_platform="cpu")
 
     report = {"cells": {}}
     ok = True
@@ -479,6 +678,12 @@ def main() -> None:
         report["masked_lanes_ok"] = check_masked_lanes(
             devices=(1, 8) if args.suite == "full" else (8,))
         ok &= report["masked_lanes_ok"]
+        report["hier_levels"] = check_hier_levels(
+            n=args.n, M=args.workers, hier=(2, 4))
+        ok &= report["hier_levels"]["ok"]
+        report["hier_caps_ok"] = check_hier_caps(M=args.workers,
+                                                 hier=(2, 4))
+        ok &= report["hier_caps_ok"]
     else:
         for bal in args.balance:
             rep, bok = run_matrix(algos=tuple(args.algos),
@@ -490,7 +695,8 @@ def main() -> None:
             report["cells"].update(rep["cells"])
         if not args.skip_hlo_check:
             report["all_to_all_in_hlo"] = check_all_to_all(
-                n=args.n, M=args.workers, devices=max(args.devices))
+                n=args.n, M=args.workers,
+                devices=max(args.devices, key=_flat_devices))
             ok &= report["all_to_all_in_hlo"]
     report["ok"] = bool(ok)
     if args.out:

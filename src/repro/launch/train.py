@@ -64,10 +64,13 @@ def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
     return losses
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction adds --no-reduced (the old store_true +
+    # default=True could never be disabled); --full stays as an alias
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
@@ -77,7 +80,11 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--embed-method", default="rr",
                     choices=["gather", "onehot", "rr"])
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     run(args.arch, args.reduced, args.steps, args.batch, args.seq,
         args.ckpt_dir, args.ckpt_every, args.lr,
         embed_method=args.embed_method)

@@ -1,0 +1,34 @@
+"""Argparse round-trips for the serve/train CLIs.
+
+Pins the ``--reduced`` fix: the old ``action="store_true"`` with
+``default=True`` parsed ``--reduced`` and *no flag at all* to the same
+value and offered no way to turn it off — ``BooleanOptionalAction`` adds
+``--no-reduced`` (train keeps ``--full`` as a back-compat alias).
+"""
+import pytest
+
+from repro.launch import serve, train
+
+
+@pytest.mark.parametrize("build", [serve.build_parser, train.build_parser],
+                         ids=["serve", "train"])
+def test_reduced_round_trip(build):
+    ap = build()
+    assert ap.parse_args([]).reduced is True
+    assert ap.parse_args(["--reduced"]).reduced is True
+    assert ap.parse_args(["--no-reduced"]).reduced is False
+
+
+def test_train_full_alias_still_disables():
+    ap = train.build_parser()
+    assert ap.parse_args(["--full"]).reduced is False
+    # later flag wins, both orders parse
+    assert ap.parse_args(["--full", "--reduced"]).reduced is True
+
+
+@pytest.mark.parametrize("build", [serve.build_parser, train.build_parser],
+                         ids=["serve", "train"])
+def test_other_flags_survive_the_switch(build):
+    ap = build()
+    args = ap.parse_args(["--no-reduced", "--batch", "3"])
+    assert args.reduced is False and args.batch == 3

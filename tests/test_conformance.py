@@ -133,7 +133,10 @@ def _run_shard_suite(suite):
     sets XLA_FLAGS for 8 host CPU devices before importing jax).  The
     suite covers the parity matrix PLUS the all-to-all HLO assertion, the
     routed-memory gate (no >= n_pad all-reduce/all-gather operand at
-    D=8), and the masked-request-lane parity check."""
+    D=8), the masked-request-lane parity check, and the hierarchical
+    (2,4)-mesh gates (two distinct all-to-all levels per compiled
+    channel, no replicated buffer at either level, per-level cap
+    overflow rounds bitwise)."""
     import json
     import os
     import subprocess
@@ -157,6 +160,8 @@ def _run_shard_suite(suite):
     assert report["all_to_all_in_hlo"], "join did not lower to all-to-all"
     assert report["routed_memory"]["ok"], report["routed_memory"]
     assert report["masked_lanes_ok"]
+    assert report["hier_levels"]["ok"], report["hier_levels"]
+    assert report["hier_caps_ok"]
     return report
 
 
@@ -164,18 +169,44 @@ def test_sharded_conformance_suite():
     """Tier-1 sharded axis, consolidated in ONE subprocess: a curated
     join-family x regime slice of the matrix (every algorithm at
     one-worker-per-device, m_loc>1 collectives, split shard-crossing
-    routes, padded slicing) plus the HLO / routed-memory / masked-lane
-    checks.  The FULL 6 x 2 x 2 x 3 x {1,2,8} matrix runs nightly
-    (``-m slow``); the tier-1 slice keeps every algorithm at D=8, the
-    m_loc>1 regime through S-V (every join family: broadcast, gather,
-    runtime scatter), and a split cell — each both sequential and
-    pipelined (the double-buffered exchange must keep the identical
-    parity contract)."""
+    routes, padded slicing) plus the HLO / routed-memory / masked-lane /
+    hierarchical-mesh checks.  The FULL 6 x 2 x 2 x 3 x {1,2,8} matrix
+    runs nightly (``-m slow``); the tier-1 slice keeps every algorithm
+    at D=8 AND on the hierarchical (2,4) mesh, the m_loc>1 regime
+    through S-V (every join family: broadcast, gather, runtime scatter),
+    and a split cell — each both sequential and pipelined (the
+    double-buffered exchange must keep the identical parity contract).
+    The 2-D cells match the same single-device reference as the 1-D
+    cells, pinning 2-D == 1-D bitwise / integer-exact."""
     report = _run_shard_suite("tier1")
-    assert len(report["cells"]) == 16
+    assert len(report["cells"]) == 32
     # the pipelined rows mirror the sequential slice cell for cell
     seq = {c for c in report["cells"] if not c.endswith("/pipeline")}
     assert {f"{c}/pipeline" for c in seq} == set(report["cells"]) - seq
+    # every 1-D row has its hierarchical twin in the same slice
+    hier = {c for c in report["cells"] if "devices=2x4" in c}
+    assert len(hier) == len(report["cells"]) // 2
+    # the acceptance gates of the 2-D mesh: two all-to-all levels per
+    # compiled channel program, no replicated buffer at either level
+    for name, prog in report["hier_levels"]["programs"].items():
+        assert prog["two_levels"], (name, prog)
+        assert prog["no_replicated_buffer"], (name, prog)
+        assert set(prog["all_to_all_group_sizes"]) == {2, 4}, (name, prog)
+
+
+def test_sharded_conformance_hier_axis():
+    """The (hosts, devices) conformance axis: all six algorithms on
+    every factorization of 8 devices — (1,8) (degenerate one-host mesh,
+    must keep the exact 1-D semantics), (2,4) and (4,2) (the two proper
+    hierarchies, different host/column funnel shapes) — sequential and
+    pipelined.  Every cell matches the sequential single-device
+    reference bitwise (min/max/int results), to tolerance (pagerank),
+    and integer-exact on every statistic, so all factorizations also
+    agree with the 1-D D=8 cells of the tier-1 slice."""
+    report = _run_shard_suite("hier")
+    assert len(report["cells"]) == 36
+    tags = {c.split("devices=")[1].split("/")[0] for c in report["cells"]}
+    assert tags == {"1x8", "2x4", "4x2"}
 
 
 @pytest.mark.slow

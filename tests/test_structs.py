@@ -121,3 +121,65 @@ def test_pair_counts_bound_routed_traffic():
         np.testing.assert_array_equal(pc, ref)
         # total distinct pairs can never exceed the edge count
         assert pc.sum() == len(pairs) <= g.m
+
+
+def test_affinity_groups_recover_planted_host_blocks():
+    """Host-topology-aware placement: ``affinity_groups`` must put
+    heavy-communicating worker pairs in one host block.  A planted
+    two-community affinity matrix (heavy within the communities,
+    noise elsewhere) is recovered exactly."""
+    from repro.core import cost_model
+
+    rng = np.random.RandomState(0)
+    M, H = 8, 2
+    groups = [(0, 3, 5, 6), (1, 2, 4, 7)]
+    aff = rng.randint(0, 3, (M, M)).astype(np.int64)
+    for grp in groups:
+        for i in grp:
+            for j in grp:
+                if i != j:
+                    aff[i, j] += 100
+    aff = aff + aff.T
+    np.fill_diagonal(aff, 0)
+    order = cost_model.affinity_groups(aff, H)
+    blocks = {frozenset(order[:4].tolist()), frozenset(order[4:].tolist())}
+    assert blocks == {frozenset(g) for g in groups}
+
+
+def test_partition_hosts_is_placement_only_and_never_worse():
+    """``partition(hosts=H)`` relabels workers only: the vertex->worker
+    *content* is a permutation of the host-oblivious partition (same
+    sorted per-worker loads, same edges), and the intra-host share of
+    the worker-pair traffic matrix is >= the oblivious contiguous
+    grouping's (affinity_groups falls back to identity, so host-aware
+    placement can never lose in its own proxy)."""
+    from repro.core import cost_model
+
+    g = gen.powerlaw(300, avg_deg=6, seed=3, weighted=True).symmetrized()
+    M, H = 8, 2
+    T = M // H
+
+    def intra(pc):
+        aff = cost_model.worker_affinity(pc)
+        return sum(aff[h * T:(h + 1) * T, h * T:(h + 1) * T].sum()
+                   for h in range(H))
+
+    for balance in ("hash", "edges"):
+        base = partition(g, M, tau=10, seed=1, layout="csr",
+                         balance=balance)
+        host = partition(g, M, tau=10, seed=1, layout="csr",
+                         balance=balance, hosts=H)
+        assert base.hosts is None and host.hosts == H
+        # placement only: same multiset of per-worker edge loads, every
+        # edge conserved
+        assert sorted(base.edge_load().tolist()) == \
+            sorted(host.edge_load().tolist())
+        assert np.asarray(host.all_src).shape == \
+            np.asarray(base.all_src).shape
+        assert len(set(host.perm.tolist())) == g.n
+        assert 0 <= host.perm.min() and host.perm.max() < M * host.n_loc
+        # host-aware grouping never scores below the oblivious order
+        assert intra(host.pair_counts) >= intra(base.pair_counts)
+
+    with pytest.raises(ValueError):
+        partition(g, M, hosts=3)
