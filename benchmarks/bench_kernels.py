@@ -61,6 +61,41 @@ def _bench_channel_backends():
         f"speed_ratio={results['dense'] / max(results['pallas'], 1e-9):.2f}")
 
 
+def _bench_vector_feature_sweep():
+    """(lanes, F) feature-blocked combine: pallas (interpret) vs jnp ref
+    across payload widths.  Timings are INTERLEAVED best-of — variant A
+    and B alternate within each round (single-core container: never run
+    the contenders concurrently, and let clock drift hit both alike)."""
+    import time
+
+    from repro.kernels.segment_combine.kernel import segment_combine_blocks
+    from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
+
+    rng = np.random.RandomState(1)
+    nb, eb, n_blocks = 256, 512, 8
+    idx = jnp.asarray(rng.randint(-1, nb, (n_blocks, eb)).astype(np.int32))
+    for F in (1, 8, 32, 128):
+        vals = jnp.asarray(rng.randn(n_blocks, eb, F).astype(np.float32))
+        fk = jax.jit(lambda v, i: segment_combine_blocks(v, i, "sum", nb))
+        fr = jax.jit(
+            lambda v, i: segment_combine_blocks_ref(v, i, "sum", nb))
+        fk(vals, idx).block_until_ready()
+        fr(vals, idx).block_until_ready()
+        best_k = best_r = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fk(vals, idx).block_until_ready()
+            best_k = min(best_k, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fr(vals, idx).block_until_ready()
+            best_r = min(best_r, time.perf_counter() - t0)
+        lanes = n_blocks * eb
+        row(f"kern.segment_combine.vec.F{F}.pallas", best_k,
+            f"lanes={lanes};nb={nb}")
+        row(f"kern.segment_combine.vec.F{F}.ref_jnp", best_r,
+            f"pallas_over_ref={best_k / max(best_r, 1e-9):.2f}")
+
+
 def run():
     _vmem_report()
     rng = np.random.RandomState(0)
@@ -78,6 +113,9 @@ def run():
     f_ref(pv, idxl).block_until_ready()
     _, secs = timed(lambda: f_ref(pv, idxl).block_until_ready(), repeat=3)
     row("kern.segment_combine.ref_jnp.E200k", secs, f"E={E};N={N}")
+
+    # feature-blocked (lanes, F) payload sweep
+    _bench_vector_feature_sweep()
 
     # channel-layer backend comparison (dense scatters vs message plans)
     _bench_channel_backends()

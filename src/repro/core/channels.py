@@ -23,10 +23,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import plan as planlib
-from repro.core.plan import identity_of, scatter_op
+from repro.core.plan import feat_mask, feat_shape, identity_of, scatter_op
 from repro.graph.structs import PartitionedGraph
 
 BACKENDS = ("dense", "pallas")
+RELAYS = ("none", "add_w", "mul_w")
+
+
+def relay_values(src_val: jnp.ndarray, ew, relay: str, lane_ndim: int
+                 ) -> jnp.ndarray:
+    """Fold the per-edge field into the transported value: the paper's
+    relay() hook.  ``add_w`` adds the edge weight (SSSP); ``mul_w``
+    multiplies by it (weighted gSpMM: ``u_mul_e``).  The edge weight
+    broadcasts over an optional trailing feature axis."""
+    if relay == "none":
+        return src_val
+    if relay not in RELAYS:
+        raise ValueError(f"unknown relay {relay!r}; use one of {RELAYS}")
+    w = ew if src_val.ndim == lane_ndim else ew[..., None]
+    return src_val + w if relay == "add_w" else src_val * w
 
 
 def _sharded(pg) -> bool:
@@ -80,15 +95,16 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
     base = {"msgs_basic": raw_cross.sum(),
             "per_worker_basic": raw_cross.sum(axis=1)}
 
+    feat = feat_shape(values, 2)
     if backend == "pallas":
         if plan is not None:
             # the plan encodes the static edge mask; the runtime mask
             # (e.g. inactive sources) is folded in as identity values
             # for the combine and passed as-is for the accounting
-            masked = jnp.where(mask, values,
+            masked = jnp.where(feat_mask(mask, values, 2), values,
                                identity_of(op, values.dtype))
             inbox, (msgs, per_worker) = planlib.combine_with_plan(
-                plan, masked.reshape(-1), op, count_cross=True,
+                plan, masked.reshape((-1,) + feat), op, count_cross=True,
                 flat_hits=mask.reshape(-1))
         else:
             inbox, (msgs, per_worker) = planlib.combine_sorted(
@@ -104,13 +120,13 @@ def push_combined(targets: jnp.ndarray, values: jnp.ndarray,
     n_pad = M * n_loc
 
     def one(tgt, val, msk):
-        v = jnp.where(msk, val, ident)
+        v = jnp.where(feat_mask(msk, val, 1), val, ident)
         t = jnp.where(msk, tgt, 0)
-        buf = jnp.full((n_pad,), ident, values.dtype)
+        buf = jnp.full((n_pad,) + feat, ident, values.dtype)
         return scatter_op(op, buf, t, v)
 
-    partial = jax.vmap(one)(targets, values, mask)      # (M_src, n_pad)
-    partial3 = partial.reshape(M, M, n_loc)             # (src, dst, slot)
+    partial = jax.vmap(one)(targets, values, mask)      # (M_src, n_pad, *F)
+    partial3 = partial.reshape((M, M, n_loc) + feat)    # (src, dst, slot)
 
     # mask-driven accounting: a (source, destination) pair counts when a
     # real message was sent, independent of the combined payload
@@ -155,9 +171,10 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
             "per_worker_basic": jnp.zeros((M,), jnp.int32).at[
                 wlog].add(cross.astype(jnp.int32))}
 
+    feat = feat_shape(values, 1)
     if backend == "pallas":
         if plan is not None:
-            masked = jnp.where(mask, values,
+            masked = jnp.where(feat_mask(mask, values, 1), values,
                                identity_of(op, values.dtype))
             inbox, (msgs, per_worker) = planlib.combine_with_plan(
                 plan, masked, op, count_cross=True, log_of=log_of,
@@ -179,9 +196,10 @@ def push_combined_flat(targets: jnp.ndarray, values: jnp.ndarray,
     row_log = (jnp.arange(M, dtype=jnp.int32) if log_of is None
                else jnp.asarray(log_of, jnp.int32))
     idx = src_worker * n_pad + jnp.where(mask, targets, 0)
-    v = jnp.where(mask, values, ident)
-    partial = jnp.full((M_src * n_pad,), ident, values.dtype)
-    partial3 = scatter_op(op, partial, idx, v).reshape(M_src, M, n_loc)
+    v = jnp.where(feat_mask(mask, values, 1), values, ident)
+    partial = jnp.full((M_src * n_pad,) + feat, ident, values.dtype)
+    partial3 = scatter_op(op, partial, idx, v).reshape(
+        (M_src, M, n_loc) + feat)
 
     sent = planlib.scatter_hits(M_src * n_pad, idx, mask
                                 ).reshape(M_src, M, n_loc)
@@ -205,32 +223,44 @@ def push_mirror(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
                 op: str, relay: str = "none", backend: str = "dense"
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Broadcast each active mirrored vertex's value to its mirrors, fan out
-    locally.  vals/active: (M, n_loc).  relay='add_w' adds the edge weight at
-    the mirror (the paper's relay() for SSSP)."""
+    locally.  vals: (M, n_loc) or feature-blocked (M, n_loc, F);
+    active: (M, n_loc).  relay='add_w' adds the edge weight at the mirror
+    (the paper's relay() for SSSP); relay='mul_w' multiplies by it
+    (weighted gSpMM aggregation)."""
     ident = identity_of(op, vals.dtype)
     n_pad = pg.n_pad
-    flat_vals = vals.reshape(-1)
+    feat = feat_shape(vals, 2)
+    flat_vals = vals.reshape((-1,) + feat)
     flat_act = active.reshape(-1)
     safe = jnp.clip(pg.mir_ids, 0, n_pad - 1)
     valid = pg.mir_ids < n_pad
-    mir_vals = jnp.where(valid & flat_act[safe], flat_vals[safe], ident)
+    mir_act = valid & flat_act[safe]
+    mir_vals = jnp.where(feat_mask(mir_act, flat_vals, 1),
+                         flat_vals[safe], ident)
     # ^ one value per mirrored vertex: the all-gather payload (Ch_mir send)
 
     raw = mir_vals[pg.mir_esrc]
-    ev = raw + pg.mir_ew if relay == "add_w" else raw
-    ev = jnp.where(pg.mir_emask & (raw != ident), ev, ident)
+    ev = relay_values(raw, pg.mir_ew, relay, pg.mir_esrc.ndim)
+    if feat:
+        # vector payloads carry the per-lane activity flag explicitly (a
+        # feature-wise value==identity test would mask real features)
+        ev = jnp.where((pg.mir_emask & mir_act[pg.mir_esrc])[..., None],
+                       ev, ident)
+    else:
+        ev = jnp.where(pg.mir_emask & (raw != ident), ev, ident)
     if backend == "pallas":
         inbox, _ = planlib.combine_with_plan(
-            planlib.get_plan(pg, "mir"), ev.reshape(-1), op,
+            planlib.get_plan(pg, "mir"), ev.reshape((-1,) + feat), op,
             count_cross=False)
     elif pg.layout == "csr":
         # mir_edst is global in csr: per-worker fan-out buffers are
         # disjoint slices of one flat (n_pad,) scatter
-        buf = jnp.full((n_pad,), ident, vals.dtype)
-        inbox = scatter_op(op, buf, pg.mir_edst, ev).reshape(pg.M, pg.n_loc)
+        buf = jnp.full((n_pad,) + feat, ident, vals.dtype)
+        inbox = scatter_op(op, buf, pg.mir_edst, ev).reshape(
+            (pg.M, pg.n_loc) + feat)
     else:
         def fan_out(edst, emask, ev_row):
-            buf = jnp.full((pg.n_loc,), ident, vals.dtype)
+            buf = jnp.full((pg.n_loc,) + feat, ident, vals.dtype)
             return scatter_op(op, buf, jnp.where(emask, edst, 0), ev_row)
 
         inbox = jax.vmap(fan_out)(pg.mir_edst, pg.mir_emask, ev)
@@ -267,12 +297,13 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     edst = pg.eg_dst if use_mirroring else pg.all_dst
     emask = pg.eg_mask if use_mirroring else pg.all_mask
     ew = pg.eg_w if use_mirroring else pg.all_w
+    feat = feat_shape(vals, 2)
     plan = (planlib.get_plan(pg, "eg" if use_mirroring else "all")
             if backend == "pallas" else None)
     if pg.layout == "csr":
-        src_val = vals.reshape(-1)[esrc]        # esrc is global in csr
+        src_val = vals.reshape((-1,) + feat)[esrc]  # esrc is global in csr
         src_act = active.reshape(-1)[esrc]
-        v = src_val + ew if relay == "add_w" else src_val
+        v = relay_values(src_val, ew, relay, 1)
         worker, log_of = _flat_worker(pg, "eg" if use_mirroring else "all")
         inbox, stats = push_combined_flat(edst, v, emask & src_act,
                                           worker, op,
@@ -281,7 +312,7 @@ def broadcast(pg: PartitionedGraph, vals: jnp.ndarray, active: jnp.ndarray,
     else:
         src_val = vals[jnp.arange(pg.M)[:, None], esrc]
         src_act = active[jnp.arange(pg.M)[:, None], esrc]
-        v = src_val + ew if relay == "add_w" else src_val
+        v = relay_values(src_val, ew, relay, 2)
         inbox, stats = push_combined(edst, v, emask & src_act, op,
                                      pg.M, pg.n_loc, backend=backend,
                                      plan=plan)
@@ -333,6 +364,7 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
     """
     n_pad = M * n_loc
     R = targets.shape[1]
+    feat = feat_shape(vals, 2)
     t = jnp.where(tmask, targets, n_pad)
 
     if dedup:
@@ -361,19 +393,21 @@ def rr_gather(vals: jnp.ndarray, targets: jnp.ndarray, tmask: jnp.ndarray,
     def respond(vals_row, rec_row, w):
         slot = rec_row - w * n_loc
         ok = (slot >= 0) & (slot < n_loc)
-        return jnp.where(ok, vals_row[jnp.clip(slot, 0, n_loc - 1)],
+        got = vals_row[jnp.clip(slot, 0, n_loc - 1)]   # (src, cap, *F)
+        return jnp.where(feat_mask(ok, got, 2), got,
                          jnp.zeros((), vals.dtype))
 
     resp = jax.vmap(respond)(vals, recv, jnp.arange(M))  # (owner, src, cap)
     back = jnp.swapaxes(resp, 0, 1)                      # (src, owner, cap)
 
     def collect(back_row, ow_row, pos_row, inv_row, uvalid_row):
-        uniq_vals = back_row.reshape(-1)[ow_row * cap + pos_row]
-        uniq_vals = jnp.where(uvalid_row, uniq_vals, 0)
+        uniq_vals = back_row.reshape((-1,) + feat)[ow_row * cap + pos_row]
+        uniq_vals = jnp.where(feat_mask(uvalid_row, uniq_vals, 1),
+                              uniq_vals, 0)
         return uniq_vals[inv_row]
 
     out = jax.vmap(collect)(back, owner, pos_of, inv, uvalid)
-    out = jnp.where(tmask, out, 0)
+    out = jnp.where(feat_mask(tmask, out, 2), out, 0)
 
     self_w = jnp.arange(M)[:, None]
     remote_u = uvalid & (owner != self_w)
@@ -413,9 +447,10 @@ def rr_gather_flat(vals: jnp.ndarray, targets: jnp.ndarray,
     """
     n_pad = M * n_loc
     E = targets.shape[0]
+    feat = feat_shape(vals, 2)
     t = jnp.where(tmask, targets, n_pad)
-    out = jnp.where(tmask,
-                    vals.reshape(-1)[jnp.clip(t, 0, n_pad - 1)],
+    got = vals.reshape((-1,) + feat)[jnp.clip(t, 0, n_pad - 1)]
+    out = jnp.where(feat_mask(tmask, got, 1), got,
                     jnp.zeros((), vals.dtype))
     zero_m = jnp.zeros((M,), jnp.int32)
     if E == 0:

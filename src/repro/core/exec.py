@@ -98,7 +98,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import bsp
 from repro.core import cost_model
 from repro.core import plan as planlib
-from repro.core.channels import _dedup_row
+from repro.core.channels import _dedup_row, relay_values
 from repro.core.plan import identity_of, scatter_op
 from repro.launch import mesh as meshlib
 
@@ -657,25 +657,32 @@ def _fetch_planned(sg, fp: TracedFetch, flat_vals: jnp.ndarray, fill
     array.  ``flat_vals`` is my local (m_loc*n_loc,) owner-side array.
     On a 2-D mesh the value rides the two-leg gateway route — one
     inter-host lane per (slot, consuming host), then intra-host
-    fan-out."""
+    fan-out.  ``flat_vals`` may carry a trailing feature axis — the
+    (lanes, F) block rides the same route (``all_to_all`` splits axis 0,
+    the scatter indices address axis 0)."""
     n = flat_vals.shape[0]
+    feat = planlib.feat_shape(flat_vals, 1)
     if fp.a_send is not None:
-        send_a = jnp.where(fp.a_send >= 0,
-                           flat_vals[jnp.clip(fp.a_send, 0, n - 1)], fill)
+        ga = flat_vals[jnp.clip(fp.a_send, 0, n - 1)]
+        send_a = jnp.where(
+            planlib.feat_mask(fp.a_send >= 0, ga, fp.a_send.ndim), ga, fill)
         recv_a = jax.lax.all_to_all(send_a, HAXIS, 0, 0)
         gidx = jnp.where(fp.a_recv >= 0, fp.a_recv, fp.n_gw)
-        gw = jnp.full((fp.n_gw + 1,), fill, flat_vals.dtype
+        gw = jnp.full((fp.n_gw + 1,) + feat, fill, flat_vals.dtype
                       ).at[gidx].set(recv_a)[:-1]
-        send_b = jnp.where(fp.b_send >= 0,
-                           gw[jnp.clip(fp.b_send, 0, fp.n_gw - 1)], fill)
+        gb = gw[jnp.clip(fp.b_send, 0, fp.n_gw - 1)]
+        send_b = jnp.where(
+            planlib.feat_mask(fp.b_send >= 0, gb, fp.b_send.ndim), gb, fill)
         recv = jax.lax.all_to_all(send_b, AXIS, 0, 0)
         idx = jnp.where(fp.b_recv >= 0, fp.b_recv, fp.n_need)
     else:
-        send = jnp.where(fp.send_slot >= 0,
-                         flat_vals[jnp.clip(fp.send_slot, 0, n - 1)], fill)
+        gs = flat_vals[jnp.clip(fp.send_slot, 0, n - 1)]
+        send = jnp.where(
+            planlib.feat_mask(fp.send_slot >= 0, gs, fp.send_slot.ndim),
+            gs, fill)
         recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
         idx = jnp.where(fp.recv_pos >= 0, fp.recv_pos, fp.n_need)
-    buf = jnp.full((fp.n_need + 1,), fill, flat_vals.dtype)
+    buf = jnp.full((fp.n_need + 1,) + feat, fill, flat_vals.dtype)
     return buf.at[idx].set(recv)[:-1]
 
 
@@ -1191,13 +1198,28 @@ def _round_lanes(off: jnp.ndarray, r, cap: int, L: int):
     return jnp.clip(idx, 0, L - 1), ok
 
 
-def _pipeline_cap(sg: ShardedGraph, cap: int) -> int:
+def _feat_elems(feat: tuple) -> int:
+    e = 1
+    for s in feat:
+        e *= int(s)
+    return e
+
+
+def _pipeline_cap(sg: ShardedGraph, cap: int, feat_elems: int = 1) -> int:
     """Shrink a routed-exchange round cap so one join spans roughly
     ``sg.pipeline_chunks`` rounds — the chunks the double buffer overlaps.
-    Only ever shrinks (an explicit small test cap passes through)."""
+    Only ever shrinks (an explicit small test cap passes through).
+
+    For feature-blocked payloads the cap additionally shrinks by the
+    payload width: the two in-flight slots hold ``cap x F`` elements, so
+    sizing the chunk in *bytes* (lanes x F) keeps the pipeline's resident
+    buffer flat as F grows.  Scalar payloads (``feat_elems == 1``) take
+    the original expression unchanged — the F=1 chunking, and therefore
+    the pipelined parity contract, is untouched."""
     if not (sg.pipeline and sg.pipeline_chunks > 1):
         return cap
-    return min(cap, max(8, _pad8(-(-cap // sg.pipeline_chunks))))
+    chunks = sg.pipeline_chunks * max(1, int(feat_elems))
+    return min(cap, max(8, _pad8(-(-cap // chunks))))
 
 
 def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
@@ -1217,18 +1239,21 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
                                      cap=cap)
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
-    cap = _pipeline_cap(sg, cap or _cap_for(L, D))
+    feat = planlib.feat_shape(values, 1)
+    cap = _pipeline_cap(sg, cap or _cap_for(L, D), _feat_elems(feat))
     ident = identity_of(op, values.dtype)
     order, off = _bucket_by_device(sg, targets, valid)
     st_ = jnp.where(valid, targets, sg.n_pad)[order]
-    sv_ = jnp.where(valid, values, ident)[order]
+    sv_ = jnp.where(planlib.feat_mask(valid, values, 1), values,
+                    ident)[order]
     rounds = _rounds_for(sg, off, cap)
     base = sg.w0 * sg.n_loc
 
     def _xchg(r):
         idxc, ok = _round_lanes(off, r, cap, L)
         t_send = jnp.where(ok, st_[idxc], sg.n_pad)
-        v_send = jnp.where(ok, sv_[idxc], ident)
+        sv_c = sv_[idxc]
+        v_send = jnp.where(planlib.feat_mask(ok, sv_c, 2), sv_c, ident)
         return (jax.lax.all_to_all(t_send, sg.axis, 0, 0),
                 jax.lax.all_to_all(v_send, sg.axis, 0, 0))
 
@@ -1237,9 +1262,10 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
         slot = t_recv - base
         okr = (slot >= 0) & (slot < loc_n)
         return scatter_op(op, buf, jnp.where(okr, slot, 0),
-                          jnp.where(okr, v_recv, ident))
+                          jnp.where(planlib.feat_mask(okr, v_recv, 2),
+                                    v_recv, ident))
 
-    buf0 = jnp.full((loc_n,), ident, values.dtype)
+    buf0 = jnp.full((loc_n,) + feat, ident, values.dtype)
     if not sg.pipeline:
         return jax.lax.fori_loop(
             0, rounds, lambda r, buf: _combine(buf, _xchg(r)), buf0)
@@ -1257,7 +1283,8 @@ def _routed_scatter_combine(sg: ShardedGraph, targets, values, valid,
     return _combine(buf, last)
 
 
-def _hier_caps(sg: ShardedGraph, L: int, cap) -> Tuple[int, int]:
+def _hier_caps(sg: ShardedGraph, L: int, cap,
+               feat_elems: int = 1) -> Tuple[int, int]:
     """Per-level lane caps of one hierarchical routed exchange.  A flat
     int cap is a 1-D-mesh quantity (per-destination-*device*) and would
     silently under-cap the funnel legs here — the intra-host leg routes
@@ -1270,7 +1297,7 @@ def _hier_caps(sg: ShardedGraph, L: int, cap) -> Tuple[int, int]:
         cap1 = _cap_for(L, sg.T, sg.cap_hint_w)
         cap2 = _cap_for(sg.T * cap1, sg.H, sg.cap_hint_h)
     # the pipeline chunks the INTER-host leg (where the overlap pays)
-    return cap1, _pipeline_cap(sg, cap2)
+    return cap1, _pipeline_cap(sg, cap2, feat_elems)
 
 
 def _bucket_level(sg: ShardedGraph, targets, valid, level: str):
@@ -1302,11 +1329,13 @@ def _hier_scatter_combine(sg: ShardedGraph, targets, values, valid,
     loc_n = sg.m_loc * sg.n_loc
     n_pad = sg.n_pad
     L = targets.shape[0]
-    cap1, cap2 = _hier_caps(sg, L, cap)
+    feat = planlib.feat_shape(values, 1)
+    cap1, cap2 = _hier_caps(sg, L, cap, _feat_elems(feat))
     ident = identity_of(op, values.dtype)
     order, off = _bucket_level(sg, targets, valid, "w")
     st_ = jnp.where(valid, targets, n_pad)[order]
-    sv_ = jnp.where(valid, values, ident)[order]
+    sv_ = jnp.where(planlib.feat_mask(valid, values, 1), values,
+                    ident)[order]
     rounds1 = _rounds_for(sg, off, cap1)
     base = sg.w0 * sg.n_loc
     L2 = T * cap1
@@ -1319,13 +1348,16 @@ def _hier_scatter_combine(sg: ShardedGraph, targets, values, valid,
             tf, vf, tf < n_pad, zerow, op, n_pad)
         ord2, off2 = _bucket_level(sg, seg_t, realf, "h")
         t2_ = jnp.where(realf, seg_t, n_pad)[ord2]
-        v2_ = jnp.where(realf, seg_val, ident)[ord2]
+        v2_ = jnp.where(planlib.feat_mask(realf, seg_val, 1), seg_val,
+                        ident)[ord2]
         rounds2 = _rounds_for(sg, off2, cap2)
 
         def _xchg(r):
             idxc, ok = _round_lanes(off2, r, cap2, L2)
             t_send = jnp.where(ok, t2_[idxc], n_pad)
-            v_send = jnp.where(ok, v2_[idxc], ident)
+            v2_c = v2_[idxc]
+            v_send = jnp.where(planlib.feat_mask(ok, v2_c, 2), v2_c,
+                               ident)
             return (jax.lax.all_to_all(t_send, HAXIS, 0, 0),
                     jax.lax.all_to_all(v_send, HAXIS, 0, 0))
 
@@ -1334,7 +1366,8 @@ def _hier_scatter_combine(sg: ShardedGraph, targets, values, valid,
             slot = t_recv - base
             okr = (slot >= 0) & (slot < loc_n)
             return scatter_op(op, b, jnp.where(okr, slot, 0),
-                              jnp.where(okr, v_recv, ident))
+                              jnp.where(planlib.feat_mask(okr, v_recv, 2),
+                                        v_recv, ident))
 
         if not sg.pipeline:
             return jax.lax.fori_loop(
@@ -1352,12 +1385,13 @@ def _hier_scatter_combine(sg: ShardedGraph, targets, values, valid,
     def outer(r, buf):
         idxc, ok = _round_lanes(off, r, cap1, L)
         t_send = jnp.where(ok, st_[idxc], n_pad)       # (T, cap1)
-        v_send = jnp.where(ok, sv_[idxc], ident)
+        sv_c = sv_[idxc]
+        v_send = jnp.where(planlib.feat_mask(ok, sv_c, 2), sv_c, ident)
         t_r = jax.lax.all_to_all(t_send, AXIS, 0, 0)
         v_r = jax.lax.all_to_all(v_send, AXIS, 0, 0)
-        return inner(buf, t_r.reshape(-1), v_r.reshape(-1))
+        return inner(buf, t_r.reshape(-1), v_r.reshape((-1,) + feat))
 
-    buf0 = jnp.full((loc_n,), ident, values.dtype)
+    buf0 = jnp.full((loc_n,) + feat, ident, values.dtype)
     return jax.lax.fori_loop(0, rounds1, outer, buf0)
 
 
@@ -1378,8 +1412,10 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
         return _hier_routed_fetch(sg, vals, targets, valid, cap=cap)
     D, loc_n = sg.D, sg.m_loc * sg.n_loc
     L = targets.shape[0]
-    cap = _pipeline_cap(sg, cap or _cap_for(L, D))
-    flat = vals.reshape(-1)
+    feat = planlib.feat_shape(vals, 2)
+    cap = _pipeline_cap(sg, cap or _cap_for(L, D), _feat_elems(feat))
+    flat = vals.reshape((-1,) + feat)
+    zero = jnp.zeros((), vals.dtype)
     ok_t = valid & (targets >= 0) & (targets < sg.n_pad)
     order, off = _bucket_by_device(sg, targets, ok_t)
     st_ = jnp.where(ok_t, targets, sg.n_pad)[order]
@@ -1392,16 +1428,16 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
         req_r = jax.lax.all_to_all(req, sg.axis, 0, 0)
         slot = req_r - base
         okr = (slot >= 0) & (slot < loc_n)
-        resp = jnp.where(okr, flat[jnp.clip(slot, 0, loc_n - 1)],
-                         jnp.zeros((), vals.dtype))
+        got_r = flat[jnp.clip(slot, 0, loc_n - 1)]
+        resp = jnp.where(planlib.feat_mask(okr, got_r, 2), got_r, zero)
         return idxc, ok, jax.lax.all_to_all(resp, sg.axis, 0, 0)
 
     def _write(out, trip):
         idxc, ok, resp_b = trip
         return out.at[jnp.where(ok, idxc, L)].set(
-            jnp.where(ok, resp_b, jnp.zeros((), vals.dtype)))
+            jnp.where(planlib.feat_mask(ok, resp_b, 2), resp_b, zero))
 
-    out0 = jnp.zeros((L + 1,), vals.dtype)
+    out0 = jnp.zeros((L + 1,) + feat, vals.dtype)
     if not sg.pipeline:
         got_sorted = jax.lax.fori_loop(
             0, rounds, lambda r, out: _write(out, _trip(r)), out0)[:L]
@@ -1414,8 +1450,8 @@ def _routed_fetch(sg: ShardedGraph, vals, targets, valid,
         first = _trip(jnp.zeros((), jnp.int32))
         out, last = jax.lax.fori_loop(1, rounds, body, (out0, first))
         got_sorted = _write(out, last)[:L]
-    got = jnp.zeros((L,), vals.dtype).at[order].set(got_sorted)
-    return jnp.where(ok_t, got, jnp.zeros((), vals.dtype))
+    got = jnp.zeros((L,) + feat, vals.dtype).at[order].set(got_sorted)
+    return jnp.where(planlib.feat_mask(ok_t, got, 1), got, zero)
 
 
 def _hier_routed_fetch(sg: ShardedGraph, vals, targets, valid,
@@ -1432,8 +1468,9 @@ def _hier_routed_fetch(sg: ShardedGraph, vals, targets, valid,
     loc_n = sg.m_loc * sg.n_loc
     n_pad = sg.n_pad
     L = targets.shape[0]
-    cap1, cap2 = _hier_caps(sg, L, cap)
-    flat = vals.reshape(-1)
+    feat = planlib.feat_shape(vals, 2)
+    cap1, cap2 = _hier_caps(sg, L, cap, _feat_elems(feat))
+    flat = vals.reshape((-1,) + feat)
     zero = jnp.zeros((), vals.dtype)
     ok_t = valid & (targets >= 0) & (targets < n_pad)
     order, off = _bucket_level(sg, targets, ok_t, "w")
@@ -1459,16 +1496,17 @@ def _hier_routed_fetch(sg: ShardedGraph, vals, targets, valid,
             req_r = jax.lax.all_to_all(req, HAXIS, 0, 0)
             slot = req_r - base
             okr = (slot >= 0) & (slot < loc_n)
-            resp = jnp.where(okr, flat[jnp.clip(slot, 0, loc_n - 1)],
+            got_r = flat[jnp.clip(slot, 0, loc_n - 1)]
+            resp = jnp.where(planlib.feat_mask(okr, got_r, 2), got_r,
                              zero)
             return idxc, ok, jax.lax.all_to_all(resp, HAXIS, 0, 0)
 
         def _write(out, trip):
             idxc, ok, resp_b = trip
             return out.at[jnp.where(ok, idxc, Lr)].set(
-                jnp.where(ok, resp_b, zero))
+                jnp.where(planlib.feat_mask(ok, resp_b, 2), resp_b, zero))
 
-        out0 = jnp.zeros((Lr + 1,), vals.dtype)
+        out0 = jnp.zeros((Lr + 1,) + feat, vals.dtype)
         if not sg.pipeline:
             head3 = jax.lax.fori_loop(
                 0, rounds2, lambda r, o: _write(o, _trip(r)), out0)[:Lr]
@@ -1481,25 +1519,26 @@ def _hier_routed_fetch(sg: ShardedGraph, vals, targets, valid,
             ft = _trip(jnp.zeros((), jnp.int32))
             out, last = jax.lax.fori_loop(1, rounds2, body, (out0, ft))
             head3 = _write(out, last)[:Lr]
-        heads = jnp.zeros((Lr,), vals.dtype).at[ord3].set(head3)
+        heads = jnp.zeros((Lr,) + feat, vals.dtype).at[ord3].set(head3)
         hidx = jax.lax.cummax(
             jnp.where(first, jnp.arange(Lr, dtype=jnp.int32), 0))
-        got = jnp.zeros((Lr,), vals.dtype).at[ord2].set(heads[hidx])
-        return jnp.where(reqs < n_pad, got, zero)
+        got = jnp.zeros((Lr,) + feat, vals.dtype).at[ord2].set(heads[hidx])
+        return jnp.where(planlib.feat_mask(reqs < n_pad, got, 1), got,
+                         zero)
 
     def outer(r, out):
         idxc, ok = _round_lanes(off, r, cap1, L)
         req = jnp.where(ok, st_[idxc], n_pad)          # (T, cap1)
         req_r = jax.lax.all_to_all(req, AXIS, 0, 0)
-        got_r = gateway(req_r.reshape(-1)).reshape(T, cap1)
+        got_r = gateway(req_r.reshape(-1)).reshape((T, cap1) + feat)
         resp_b = jax.lax.all_to_all(got_r, AXIS, 0, 0)
         return out.at[jnp.where(ok, idxc, L)].set(
-            jnp.where(ok, resp_b, zero))
+            jnp.where(planlib.feat_mask(ok, resp_b, 2), resp_b, zero))
 
-    out0 = jnp.zeros((L + 1,), vals.dtype)
+    out0 = jnp.zeros((L + 1,) + feat, vals.dtype)
     got_sorted = jax.lax.fori_loop(0, rounds1, outer, out0)[:L]
-    got = jnp.zeros((L,), vals.dtype).at[order].set(got_sorted)
-    return jnp.where(ok_t, got, zero)
+    got = jnp.zeros((L,) + feat, vals.dtype).at[order].set(got_sorted)
+    return jnp.where(planlib.feat_mask(ok_t, got, 1), got, zero)
 
 
 # ---------------------------------------------------------------------------
@@ -1515,22 +1554,27 @@ def _plan_exchange_pipelined(sg: ShardedGraph, plan: TracedPlan,
     segment partials are put on the wire before chunk c-1's received
     partials scatter locally."""
 
+    feat = planlib.feat_shape(flat_vals, 1)
+
     def send(c):
         rows_ok = plan.crow_ok[c]
         row_out = planlib.combine_rows_subset(
             plan, flat_vals, plan.crow[c], rows_ok, op)
-        sbuf = jnp.full((plan.cs, plan.nb), ident, flat_vals.dtype)
-        seg_out = scatter_op(op, sbuf,
-                             jnp.where(rows_ok, plan.crow_seg[c], 0),
-                             jnp.where(rows_ok[:, None], row_out, ident))
-        snd = jnp.where(plan.cxval[c][:, :, None],
-                        seg_out[plan.cxseg[c]], ident)
+        sbuf = jnp.full((plan.cs, plan.nb) + feat, ident, flat_vals.dtype)
+        seg_out = scatter_op(
+            op, sbuf, jnp.where(rows_ok, plan.crow_seg[c], 0),
+            jnp.where(planlib.feat_mask(rows_ok[:, None], row_out, 2),
+                      row_out, ident))
+        g = seg_out[plan.cxseg[c]]
+        snd = jnp.where(planlib.feat_mask(plan.cxval[c][:, :, None], g, 3),
+                        g, ident)
         return jax.lax.all_to_all(snd, sg.axis, 0, 0)
 
     def combine(buf, c, recv):
-        return scatter_op(op, buf,
-                          jnp.where(plan.crval[c], plan.crblk[c], 0),
-                          jnp.where(plan.crval[c][:, :, None], recv, ident))
+        return scatter_op(
+            op, buf, jnp.where(plan.crval[c], plan.crblk[c], 0),
+            jnp.where(planlib.feat_mask(plan.crval[c][:, :, None], recv, 3),
+                      recv, ident))
 
     recv = send(0)
     for c in range(1, plan.n_chunks):
@@ -1551,24 +1595,31 @@ def _plan_exchange_hier(sg: ShardedGraph, plan: TracedPlan,
     residue crosses the host axis.  With the pipeline on, the inter-host
     leg is blocked into ``plan.hchunks`` static position-chunks so chunk
     c's all_to_all flies while chunk c-1's received residue scatters."""
+    feat = planlib.feat_shape(seg_out, 2)
     # leg 1 (intra-host): my segments to their destination column
-    send1 = jnp.where(plan.x1val[:, :, None], seg_out[plan.x1seg], ident)
+    g1 = seg_out[plan.x1seg]
+    send1 = jnp.where(planlib.feat_mask(plan.x1val[:, :, None], g1, 3),
+                      g1, ident)
     recv1 = jax.lax.all_to_all(send1, AXIS, 0, 0)      # (T, x1cap, nb)
     # intermediate combine by destination block (per-level Theorem 1)
-    ibuf = jnp.full((plan.n_iseg, plan.nb), ident, seg_out.dtype)
-    ibuf = scatter_op(op, ibuf, jnp.where(plan.ival, plan.iscat, 0),
-                      jnp.where(plan.ival[:, :, None], recv1, ident))
+    ibuf = jnp.full((plan.n_iseg, plan.nb) + feat, ident, seg_out.dtype)
+    ibuf = scatter_op(
+        op, ibuf, jnp.where(plan.ival, plan.iscat, 0),
+        jnp.where(planlib.feat_mask(plan.ival[:, :, None], recv1, 3),
+                  recv1, ident))
 
     # leg 2 (inter-host): only the combined residue crosses hosts
     def send2(sl):
-        snd = jnp.where(plan.x2val[:, sl, None], ibuf[plan.x2seg[:, sl]],
-                        ident)
+        g2 = ibuf[plan.x2seg[:, sl]]
+        snd = jnp.where(planlib.feat_mask(plan.x2val[:, sl, None], g2, 3),
+                        g2, ident)
         return jax.lax.all_to_all(snd, HAXIS, 0, 0)
 
     def combine2(buf, sl, recv):
         return scatter_op(
             op, buf, jnp.where(plan.r2val[:, sl], plan.r2blk[:, sl], 0),
-            jnp.where(plan.r2val[:, sl, None], recv, ident))
+            jnp.where(planlib.feat_mask(plan.r2val[:, sl, None], recv, 3),
+                      recv, ident))
 
     C = plan.hchunks if sg.pipeline else 1
     ck = -(-plan.x2cap // C)
@@ -1607,34 +1658,42 @@ def _combine_with_plan_sharded(sg: ShardedGraph, plan: TracedPlan,
     bitwise identical (float-sum scatter order changes within the
     tolerance the parity harness already grants sum combines)."""
     ident = identity_of(op, flat_vals.dtype)
+    feat = planlib.feat_shape(flat_vals, 1)
     nbl = sg.m_loc * plan.B_per_w
-    loc = jnp.full((nbl, plan.nb), ident, flat_vals.dtype)
+    loc = jnp.full((nbl, plan.nb) + feat, ident, flat_vals.dtype)
     if exchange and sg.pipeline and plan.crow is not None \
             and plan.n_chunks > 1:
         loc = _plan_exchange_pipelined(sg, plan, flat_vals, op, loc, ident)
     else:
-        packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather],
-                           ident)
+        gathered = flat_vals[plan.row_gather]
+        packed = jnp.where(planlib.feat_mask(plan.row_valid, gathered, 2),
+                           gathered, ident)
         row_out = planlib._combine_rows(packed, plan.row_local, op, plan.nb)
-        seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
+        seg_buf = jnp.full((plan.n_segs, plan.nb) + feat, ident,
+                           flat_vals.dtype)
         seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
         if exchange:
             if plan.x1seg is not None:
                 loc = _plan_exchange_hier(sg, plan, seg_out, op, loc,
                                           ident)
             else:
-                send = jnp.where(plan.xval[:, :, None], seg_out[plan.xseg],
-                                 ident)
+                g = seg_out[plan.xseg]
+                send = jnp.where(
+                    planlib.feat_mask(plan.xval[:, :, None], g, 3),
+                    g, ident)
                 recv = jax.lax.all_to_all(send, sg.axis, 0, 0)
                 loc = scatter_op(
                     op, loc, jnp.where(plan.rval, plan.rblk, 0),
-                    jnp.where(plan.rval[:, :, None], recv, ident))
+                    jnp.where(
+                        planlib.feat_mask(plan.rval[:, :, None], recv, 3),
+                        recv, ident))
         else:
             # all segments are mine: scatter by local block id directly
             # (padded dummy segments carry all-identity rows — harmless)
             lblk = jnp.clip(plan.seg_blk - sg.w0 * plan.B_per_w, 0, nbl - 1)
             loc = scatter_op(op, loc, lblk, seg_out)
-    inbox = loc.reshape(sg.m_loc, plan.B_per_w * plan.nb)[:, :sg.n_loc]
+    inbox = loc.reshape((sg.m_loc, plan.B_per_w * plan.nb) + feat
+                        )[:, :sg.n_loc]
 
     stats = None
     if count_cross:
@@ -1663,7 +1722,8 @@ def _combine_sorted_rows_sharded(sg: ShardedGraph, targets, values, mask,
         targets, values, mask, op, n_pad)
 
     buf = _routed_scatter_combine(sg, seg_t, seg_val, real, op)
-    inbox = buf.reshape(sg.m_loc, sg.n_loc)
+    inbox = buf.reshape((sg.m_loc, sg.n_loc)
+                        + planlib.feat_shape(values, 2))
 
     cross = real & (seg_t // sg.n_loc != seg_row + sg.w0)
     msgs = jax.lax.psum(cross.sum().astype(jnp.int32), sg.axis)
@@ -1682,7 +1742,8 @@ def _combine_sorted_flat_sharded(sg: ShardedGraph, targets, values, mask,
         targets, values, mask, worker, op, n_pad)
 
     buf = _routed_scatter_combine(sg, seg_t, seg_val, real, op, cap=cap)
-    inbox = buf.reshape(sg.m_loc, sg.n_loc)
+    inbox = buf.reshape((sg.m_loc, sg.n_loc)
+                        + planlib.feat_shape(values, 1))
 
     seg_log = sg.log_of(jnp.where(real, seg_w, 0))
     cross = real & (seg_t // sg.n_loc != seg_log)
@@ -1706,10 +1767,11 @@ def push_combined_sharded(sg: ShardedGraph, targets, values, mask, op: str,
 
     if backend == "pallas" and plan is not None:
         ident = identity_of(op, values.dtype)
-        masked = jnp.where(mask, values, ident)
+        masked = jnp.where(planlib.feat_mask(mask, values, 2), values,
+                           ident)
         inbox, (msgs, pw) = _combine_with_plan_sharded(
-            sg, plan, masked.reshape(-1), op,
-            flat_hits=mask.reshape(-1))
+            sg, plan, masked.reshape((-1,) + planlib.feat_shape(values, 2)),
+            op, flat_hits=mask.reshape(-1))
     else:
         inbox, (msgs, pw) = _combine_sorted_rows_sharded(
             sg, targets, values, mask, op)
@@ -1732,7 +1794,8 @@ def push_combined_flat_sharded(sg: ShardedGraph, targets, values, mask,
 
     if backend == "pallas" and plan is not None:
         ident = identity_of(op, values.dtype)
-        masked = jnp.where(mask, values, ident)
+        masked = jnp.where(planlib.feat_mask(mask, values, 1), values,
+                           ident)
         inbox, (msgs, pw) = _combine_with_plan_sharded(
             sg, plan, masked, op, flat_hits=mask)
     else:
@@ -1757,36 +1820,47 @@ def push_mirror_sharded(sg: ShardedGraph, vals, active, op: str,
     ident = identity_of(op, vals.dtype)
     n_pad = sg.n_pad
     loc_n = sg.m_loc * sg.n_loc
-    flat_vals = vals.reshape(-1)
+    feat = planlib.feat_shape(vals, 2)
+    flat_vals = vals.reshape((-1,) + feat)
     flat_act = active.reshape(-1)
-    contrib = jnp.where(flat_act, flat_vals, ident)     # owner-side payload
+    contrib = jnp.where(planlib.feat_mask(flat_act, flat_vals, 1),
+                        flat_vals, ident)               # owner-side payload
     lv = _fetch_planned(sg, sg.fetch["mir"], contrib, ident)
 
     cesrc = (sg.mir_cesrc if sg.layout == "csr"
              else sg.mir_cesrc.reshape(sg.mir_esrc.shape))
     raw = lv[cesrc]
-    ev = raw + sg.mir_ew if relay == "add_w" else raw
-    ev = jnp.where(sg.mir_emask & (raw != ident), ev, ident)
+    ev = relay_values(raw, sg.mir_ew, relay, cesrc.ndim)
+    if feat:
+        # feature payloads can legitimately equal the identity, so edge
+        # activity is fetched explicitly instead of read off the values
+        la = _fetch_planned(sg, sg.fetch["mir"],
+                            flat_act.astype(jnp.int32),
+                            jnp.zeros((), jnp.int32))
+        act_e = sg.mir_emask & (la[cesrc] > 0)
+        ev = jnp.where(act_e[..., None], ev, ident)
+    else:
+        act_e = sg.mir_emask & (raw != ident)
+        ev = jnp.where(act_e, ev, ident)
     if backend == "pallas":
         # a non-split partition's mirror edges are destination-sharded:
         # every plan segment is local, so the exchange is skipped
         inbox, _ = _combine_with_plan_sharded(
-            sg, sg.plans["mir"], ev.reshape(-1), op, count_cross=False,
-            exchange=sg.split)
+            sg, sg.plans["mir"], ev.reshape((-1,) + feat), op,
+            count_cross=False, exchange=sg.split)
     elif sg.layout == "csr":
         if sg.split:
             # shard placement can put fan-out edges on a device that does
             # not own their destination rows: route the combined values
-            buf = _routed_scatter_combine(
-                sg, sg.mir_edst, ev, sg.mir_emask & (raw != ident), op)
-            inbox = buf.reshape(sg.m_loc, sg.n_loc)
+            buf = _routed_scatter_combine(sg, sg.mir_edst, ev, act_e, op)
+            inbox = buf.reshape((sg.m_loc, sg.n_loc) + feat)
         else:
-            buf = jnp.full((loc_n,), ident, vals.dtype)
+            buf = jnp.full((loc_n,) + feat, ident, vals.dtype)
             inbox = scatter_op(op, buf, sg.mir_edst - sg.w0 * sg.n_loc,
-                               ev).reshape(sg.m_loc, sg.n_loc)
+                               ev).reshape((sg.m_loc, sg.n_loc) + feat)
     else:
         def fan_out(edst, emask, ev_row):
-            buf = jnp.full((sg.n_loc,), ident, vals.dtype)
+            buf = jnp.full((sg.n_loc,) + feat, ident, vals.dtype)
             return scatter_op(op, buf, jnp.where(emask, edst, 0), ev_row)
 
         inbox = jax.vmap(fan_out)(sg.mir_edst, sg.mir_emask, ev)
@@ -1817,6 +1891,7 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
     ew = sg.eg_w if use_mirroring else sg.all_w
     plan = (sg.plans.get("eg" if use_mirroring else "all")
             if backend == "pallas" else None)
+    feat = planlib.feat_shape(vals, 2)
     if sg.layout == "csr":
         if sg.split:
             # edge-balanced device bounds: sources can be remote workers —
@@ -1825,7 +1900,7 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
             kind = "eg" if use_mirroring else "all"
             fp = sg.fetch[kind]
             csrc = sg.eg_csrc if use_mirroring else sg.all_csrc
-            cv = _fetch_planned(sg, fp, vals.reshape(-1),
+            cv = _fetch_planned(sg, fp, vals.reshape((-1,) + feat),
                                 jnp.zeros((), vals.dtype))
             ca = _fetch_planned(sg, fp,
                                 active.reshape(-1).astype(jnp.int32),
@@ -1834,17 +1909,17 @@ def broadcast_sharded(sg: ShardedGraph, vals, active, op: str,
             worker = sg.eg_pw if use_mirroring else sg.all_pw
         else:
             loc_src = esrc - sg.w0 * sg.n_loc
-            src_val = vals.reshape(-1)[loc_src]
+            src_val = vals.reshape((-1,) + feat)[loc_src]
             src_act = active.reshape(-1)[loc_src]
             worker = esrc // sg.n_loc
-        v = src_val + ew if relay == "add_w" else src_val
+        v = relay_values(src_val, ew, relay, 1)
         inbox, stats = push_combined_flat_sharded(
             sg, edst, v, emask & src_act, worker, op,
             backend=backend, plan=plan)
     else:
         src_val = vals[jnp.arange(sg.m_loc)[:, None], esrc]
         src_act = active[jnp.arange(sg.m_loc)[:, None], esrc]
-        v = src_val + ew if relay == "add_w" else src_val
+        v = relay_values(src_val, ew, relay, 2)
         inbox, stats = push_combined_sharded(sg, edst, v, emask & src_act,
                                              op, backend=backend, plan=plan)
     if use_mirroring:
@@ -1877,11 +1952,13 @@ def gather_sharded(sg: ShardedGraph, vals, targets, tmask,
     else:
         uniq = t
         inv = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), t.shape)
+    feat = planlib.feat_shape(vals, 2)
     flat_u = uniq.reshape(-1)
     got = _routed_fetch(sg, vals, flat_u, flat_u < n_pad
-                        ).reshape(uniq.shape)
-    out = jnp.take_along_axis(got, inv, axis=1)
-    out = jnp.where(tmask, out, jnp.zeros((), vals.dtype))
+                        ).reshape(uniq.shape + feat)
+    out = jnp.take_along_axis(got, planlib.feat_mask(inv, got, 2), axis=1)
+    out = jnp.where(planlib.feat_mask(tmask, out, 2), out,
+                    jnp.zeros((), vals.dtype))
 
     owner = jnp.clip(uniq // sg.n_loc, 0, sg.M - 1)
     uvalid = uniq < n_pad
@@ -1921,8 +1998,10 @@ def gather_edges_sharded(sg: ShardedGraph, vals, targets, tmask,
     hidx = jax.lax.cummax(jnp.where(first, jnp.arange(L, dtype=jnp.int32),
                                     0))
     val_sorted = head_vals[hidx]
-    out = jnp.zeros((L,), vals.dtype).at[order].set(val_sorted)
-    out = jnp.where(t < n_pad, out, jnp.zeros((), vals.dtype))
+    feat = planlib.feat_shape(vals, 2)
+    out = jnp.zeros((L,) + feat, vals.dtype).at[order].set(val_sorted)
+    out = jnp.where(planlib.feat_mask(t < n_pad, out, 1), out,
+                    jnp.zeros((), vals.dtype))
 
     owner = jnp.clip(targets // sg.n_loc, 0, sg.M - 1)
     raw_remote = tmask & ((targets // sg.n_loc) != wlog)
@@ -2075,14 +2154,24 @@ def run_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     return st, finalize_stats(raw_acc, stats_shape), n, hist
 
 
-def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
-                  plan_kinds: Sequence[str] = (), pipeline: bool = False,
-                  pipeline_chunks: Optional[int] = None):
-    """One-shot sharded channel application (no BSP loop): ``make_fn(sg)``
-    returns ``fn(*local_args) -> (out, stats)`` where every ``out`` leaf is
-    worker/edge-sharded on its leading axis and ``stats`` is replicated.
-    csr edge-shaped outputs come back device-concatenated with per-device
-    padding — strip with ``csr_device_bounds``."""
+def build_apply(pg, make_fn: Callable, args: Tuple, devices: int = 1,
+                plan_kinds: Sequence[str] = (), pipeline: bool = False,
+                pipeline_chunks: Optional[int] = None,
+                out_rule: str = "rows",
+                is_sharded: Optional[Callable] = None):
+    """Build (but don't run) a one-shot sharded channel application:
+    returns ``(fn, arrays)`` with ``fn(arrays, args) == make_fn(sg)(*args)``
+    jitted once — callers that re-apply the same join with fresh ``args``
+    (a training loop stepping the same graph) pay ONE compilation instead
+    of one per call.  Input leaves with leading axis ``pg.M`` are
+    worker-sharded, the rest replicated.  ``out_rule`` picks the output
+    placement: ``"rows"`` (the historical contract) marks every ``out``
+    leaf worker-sharded; ``"auto"`` keys each ``out`` leaf by the same
+    leading-axis test as the inputs — what a mixed pytree of sharded
+    row-state and replicated dense parameters (a training step) needs.
+    ``is_sharded`` replaces the leading-axis test with a caller predicate
+    (leaf -> bool) for pytrees where a replicated leaf's first dim could
+    coincide with ``pg.M`` (e.g. a (M, hidden) weight matrix)."""
     D, hier = _normalize_devices(devices)
     if pg.M % D:
         raise ValueError(f"M={pg.M} workers must divide over "
@@ -2091,11 +2180,18 @@ def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
     meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds,
                                            pipeline, pipeline_chunks)
     row_spec = P((HAXIS, AXIS)) if hier else P(AXIS)
-    in_specs = jax.tree.map(
-        lambda x: row_spec if (getattr(x, "ndim", 0) >= 1
-                               and x.shape[0] == pg.M) else P(), args)
+
+    def _spec_of(x):
+        if is_sharded is not None:
+            return row_spec if is_sharded(x) else P()
+        return row_spec if (getattr(x, "ndim", 0) >= 1
+                            and x.shape[0] == pg.M) else P()
+
+    in_specs = jax.tree.map(_spec_of, args)
     out_shape, stats_shape = jax.eval_shape(make_fn(pg), *args)
-    out_specs = (jax.tree.map(lambda _: row_spec, out_shape),
+    out_leaf = (_spec_of if out_rule == "auto"
+                else (lambda _: row_spec))
+    out_specs = (jax.tree.map(out_leaf, out_shape),
                  jax.tree.map(lambda _: P(), stats_shape))
 
     def inner(arrs, a):
@@ -2104,7 +2200,20 @@ def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
 
     fn = shard_map(inner, mesh=mesh, in_specs=(arr_specs, in_specs),
                    out_specs=out_specs, check_rep=False)
-    return jax.jit(fn)(arrays, args)
+    return jax.jit(fn), arrays
+
+
+def apply_sharded(pg, make_fn: Callable, args: Tuple, devices: int = 1,
+                  plan_kinds: Sequence[str] = (), pipeline: bool = False,
+                  pipeline_chunks: Optional[int] = None):
+    """One-shot sharded channel application (no BSP loop): ``make_fn(sg)``
+    returns ``fn(*local_args) -> (out, stats)`` where every ``out`` leaf is
+    worker/edge-sharded on its leading axis and ``stats`` is replicated.
+    csr edge-shaped outputs come back device-concatenated with per-device
+    padding — strip with ``csr_device_bounds``."""
+    fn, arrays = build_apply(pg, make_fn, args, devices, plan_kinds,
+                             pipeline, pipeline_chunks)
+    return fn(arrays, args)
 
 
 def exchange_volume_report(pg, devices, plan_kinds: Sequence[str] = ()):

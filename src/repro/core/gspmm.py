@@ -1,0 +1,146 @@
+"""gSpMM as a channel join: generalized sparse-dense aggregation on the
+BSP engine's message channels, with feature-blocked (lanes, F) payloads.
+
+The three DGL-style generalized SpMM primitives are expressed as ONE
+``channels.broadcast`` join each — the same Ch_msg (sender-side combined)
++ Ch_mir (mirror fan-out) pipeline every algorithm rides, so the paper's
+message-reduction guarantees (Theorem 1 combining, mirror broadcast for
+high-degree vertices) apply to GNN aggregation unchanged:
+
+    copy_u_sum :  out[v] = sum_{(u,v) in E}  x[u]
+    u_mul_e_sum:  out[v] = sum_{(u,v) in E}  x[u] * w(u,v)
+    u_mul_e_max:  out[v] = max_{(u,v) in E}  x[u] * w(u,v)
+
+``x`` is the (M, n_loc, F) vertex-feature state (device-local
+(m_loc, n_loc, F) inside the sharded executor); the edge weight
+broadcasts over the feature axis (``relay="mul_w"``).
+
+Differentiation: the sum joins carry a ``jax.custom_vjp``.  On the
+symmetrized graphs the engine operates on (every edge stored in both
+directions, w(u,v) = w(v,u)), the adjoint of the weighted segment-sum is
+the SAME weighted broadcast applied to the cotangent:
+
+    d/dx [ sum_v <g[v], out[v]> ]  =  A^T (W * g)  =  A (W * g)
+
+so the backward pass is one more channel join — mirror broadcast,
+destination-routed exchange and all — instead of XLA differentiating
+through the sort/scatter internals.  Inside ``shard_map`` the backward
+join issues the same collectives as the forward, which keeps the
+gradient of each device's feature rows complete without any replicated
+O(n) buffer.  ``u_mul_e_max`` is forward-only (aggregation for
+inference-style pooling; no VJP is defined).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channels
+
+GSPMM_KINDS = ("copy_u_sum", "u_mul_e_sum", "u_mul_e_max")
+
+_KIND = {
+    "copy_u_sum": ("sum", "none"),
+    "u_mul_e_sum": ("sum", "mul_w"),
+    "u_mul_e_max": ("max", "mul_w"),
+}
+
+
+def _join(g, op: str, relay: str, backend: str, use_mirroring: bool):
+    """The raw (non-differentiable) channel join: feats -> (out, stats)."""
+    def apply(feats):
+        active = jnp.ones(feats.shape[:2], bool)
+        return channels.broadcast(g, feats, active, op, relay=relay,
+                                  use_mirroring=use_mirroring,
+                                  backend=backend)
+    return apply
+
+
+def gspmm_join(g, kind: str, backend: str = "dense",
+               use_mirroring: bool = True):
+    """Build the differentiable gSpMM aggregation for graph context ``g``
+    (a PartitionedGraph, or the device-local ShardedGraph inside a
+    ``shard_map`` body — the join then lowers to real collectives).
+
+    Returns ``fn(feats) -> out`` with feats/out (rows, n_loc, F).
+    Message stats are computed in the forward join and dropped — call
+    :func:`gspmm_stats` for the accounting.  The sum kinds define a
+    custom VJP (one mirror-broadcast join of the cotangent; requires the
+    symmetrized edge set the engine stores); ``u_mul_e_max`` is
+    forward-only."""
+    if kind not in GSPMM_KINDS:
+        raise ValueError(f"unknown gSpMM kind {kind!r}; "
+                         f"use one of {GSPMM_KINDS}")
+    op, relay = _KIND[kind]
+    apply = _join(g, op, relay, backend, use_mirroring)
+
+    if op != "sum":
+        def fwd_only(feats):
+            out, _ = apply(feats)
+            # empty inboxes hold the max identity (-inf); zero-fill like
+            # the dense segment-max convention so downstream dense math
+            # (activations, matmuls) never sees non-finite values
+            return jnp.where(jnp.isinf(out), jnp.zeros((), out.dtype), out)
+        return fwd_only
+
+    @jax.custom_vjp
+    def f(feats):
+        return apply(feats)[0]
+
+    def f_fwd(feats):
+        return apply(feats)[0], None
+
+    def f_bwd(_, gout):
+        # self-adjoint on the symmetrized edge set: A == A^T, w symmetric
+        return (apply(gout)[0],)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def gspmm_stats(g, kind: str, feats, backend: str = "dense",
+                use_mirroring: bool = True) -> Tuple[jnp.ndarray, dict]:
+    """Run the join once returning ``(out, stats)`` — the message
+    accounting (msgs_combined / msgs_mirror / per-worker loads) for the
+    aggregation, identical to any other channel join's stats."""
+    op, relay = _KIND[kind]
+    return _join(g, op, relay, backend, use_mirroring)(feats)
+
+
+def copy_u_sum(g, feats, backend: str = "dense"):
+    """out[v] = sum of neighbour features (differentiable)."""
+    return gspmm_join(g, "copy_u_sum", backend)(feats)
+
+
+def u_mul_e_sum(g, feats, backend: str = "dense"):
+    """out[v] = weighted sum of neighbour features (differentiable)."""
+    return gspmm_join(g, "u_mul_e_sum", backend)(feats)
+
+
+def u_mul_e_max(g, feats, backend: str = "dense"):
+    """out[v] = weighted max over neighbour features (forward-only;
+    empty inboxes are zero-filled)."""
+    return gspmm_join(g, "u_mul_e_max", backend)(feats)
+
+
+def gspmm_sharded(pg, kind: str, feats, devices=1, backend: str = "dense",
+                  pipeline: bool = False, use_mirroring: bool = True):
+    """One-shot sharded gSpMM: runs the join over the device mesh
+    (``devices`` an int or ``(hosts, per_host)``) and returns
+    ``(out, stats)`` with ``out`` (M, n_loc, F) gathered back.  Parity
+    contract follows the executor: max bitwise, sum within exchange
+    round-off, stats integer-exact."""
+    from repro.core import exec as exec_mod
+
+    def mk(g):
+        def fn(x):
+            return gspmm_stats(g, kind, x, backend=backend,
+                               use_mirroring=use_mirroring)
+        return fn
+
+    kinds = (exec_mod.broadcast_plan_kinds(backend, use_mirroring)
+             if backend == "pallas" else ())
+    return exec_mod.apply_sharded(pg, mk, (feats,), devices=devices,
+                                  plan_kinds=kinds, pipeline=pipeline)

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.segment_combine.kernel import (NEG, POS,
+from repro.kernels.segment_combine.kernel import (NEG, POS, sentinels,
                                                   segment_combine_blocks)
 from repro.kernels.segment_combine.ref import segment_combine_blocks_ref
 
@@ -91,6 +91,22 @@ def scatter_op(op: str, buf, idx, vals):
     if op == "max":
         return buf.at[idx].max(vals)
     return buf.at[idx].add(vals)
+
+
+def feat_mask(mask, values, lane_ndim: int):
+    """Broadcast a lane mask over an optional trailing feature axis.
+
+    The vector-payload convention everywhere: a value array is either
+    lane-shaped (``lane_ndim`` axes, one value per lane — today's scalar
+    contract, untouched) or carries ONE extra trailing feature axis
+    ``(..., F)``.  Scalar inputs return ``mask`` unchanged, so the F=1
+    bitwise-identity guarantee is structural, not numerical."""
+    return mask if values.ndim == lane_ndim else mask[..., None]
+
+
+def feat_shape(values, lane_ndim: int) -> tuple:
+    """() for scalar payloads, (F,) for feature-blocked ones."""
+    return tuple(values.shape[lane_ndim:])
 
 
 def scatter_hits(n: int, idx, hits) -> jnp.ndarray:
@@ -259,11 +275,15 @@ def _combine_rows(packed: jnp.ndarray, row_local: jnp.ndarray, op: str,
     # the combined blocks compare exactly against the dense path.  Integer
     # blocks already use iinfo bounds == the channel identities, so the
     # id-carrying algorithms combine exactly in their integer dtype.
+    # The thresholds come from sentinels(dtype): float16 blocks saturate
+    # at +-65504, where the canonical 3e38 would overflow to inf and the
+    # comparison could never fire.
     if jnp.issubdtype(packed.dtype, jnp.floating):
+        neg, pos = sentinels(packed.dtype)
         if op == "min":
-            out = jnp.where(out >= POS, jnp.inf, out)
+            out = jnp.where(out >= pos, jnp.inf, out)
         elif op == "max":
-            out = jnp.where(out <= NEG, -jnp.inf, out)
+            out = jnp.where(out <= neg, -jnp.inf, out)
     return out
 
 
@@ -282,8 +302,8 @@ def combine_rows_subset(plan, flat_vals: jnp.ndarray, rows: jnp.ndarray,
     ``row_local``/``nb`` are read."""
     ident = identity_of(op, flat_vals.dtype)
     valid = rows_ok[:, None] & jnp.asarray(plan.row_valid)[rows]
-    packed = jnp.where(valid, flat_vals[jnp.asarray(plan.row_gather)[rows]],
-                       ident)
+    gathered = flat_vals[jnp.asarray(plan.row_gather)[rows]]
+    packed = jnp.where(feat_mask(valid, gathered, 2), gathered, ident)
     rloc = jnp.where(valid, jnp.asarray(plan.row_local)[rows], -1)
     return _combine_rows(packed, rloc, op, plan.nb)
 
@@ -320,28 +340,35 @@ def combine_with_plan(plan: EdgePlan, flat_vals: jnp.ndarray, op: str,
     worker, and ``per_worker_combined`` is reported over the ``M_out``
     logical workers.
     """
-    assert flat_vals.ndim == 1, "pass per-edge values flattened"
+    assert flat_vals.ndim in (1, 2), \
+        "pass per-edge values flattened: (E,) or feature-blocked (E, F)"
+    feat = feat_shape(flat_vals, 1)
     if plan.n_rows:
         assert int(plan.row_gather.max()) < flat_vals.shape[0], \
             "plan does not match this edge set"
     M_out = M_out if M_out is not None else plan.M_src
     ident = identity_of(op, flat_vals.dtype)
     if plan.n_rows == 0:
-        inbox = jnp.full((plan.M_dst, plan.n_loc), ident, flat_vals.dtype)
+        inbox = jnp.full((plan.M_dst, plan.n_loc) + feat, ident,
+                         flat_vals.dtype)
         if count_cross:
             return inbox, (jnp.zeros((), jnp.int32),
                            jnp.zeros((M_out,), jnp.int32))
         return inbox, None
 
-    packed = jnp.where(plan.row_valid, flat_vals[plan.row_gather], ident)
+    gathered = flat_vals[plan.row_gather]
+    packed = jnp.where(feat_mask(plan.row_valid, gathered, 2), gathered,
+                       ident)
     row_out = _combine_rows(packed, plan.row_local, op, plan.nb)
 
-    seg_buf = jnp.full((plan.n_segs, plan.nb), ident, flat_vals.dtype)
+    seg_buf = jnp.full((plan.n_segs, plan.nb) + feat, ident,
+                       flat_vals.dtype)
     seg_out = scatter_op(op, seg_buf, plan.row_seg, row_out)
 
-    glob = jnp.full((plan.n_blocks, plan.nb), ident, flat_vals.dtype)
+    glob = jnp.full((plan.n_blocks, plan.nb) + feat, ident, flat_vals.dtype)
     glob = scatter_op(op, glob, plan.seg_blk, seg_out)
-    inbox = glob.reshape(plan.M_dst, plan.B_per_w * plan.nb)[:, :plan.n_loc]
+    inbox = glob.reshape((plan.M_dst, plan.B_per_w * plan.nb) + feat
+                         )[:, :plan.n_loc]
 
     stats = None
     if count_cross:
@@ -373,18 +400,22 @@ def sorted_segments(targets: jnp.ndarray, values: jnp.ndarray,
     (row, distinct target) segment its validity, target, combined value,
     and source row."""
     ident = identity_of(op, values.dtype)
+    feat = feat_shape(values, 2)
     R, K = targets.shape
     t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
     order = jnp.argsort(t, axis=1)
     ts = jnp.take_along_axis(t, order, axis=1)
-    vs = jnp.take_along_axis(jnp.where(mask, values, ident), order, axis=1)
+    vs = jnp.take_along_axis(
+        jnp.where(feat_mask(mask, values, 2), values, ident),
+        feat_mask(order, values, 2), axis=1)
 
     first = jnp.concatenate(
         [jnp.ones((R, 1), bool), ts[:, 1:] != ts[:, :-1]], axis=1)
     seg_id = (jnp.cumsum(first.reshape(-1)) - 1).astype(jnp.int32)
     seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
               "sum": jax.ops.segment_sum}[op]
-    seg_val = seg_fn(vs.reshape(-1), seg_id, num_segments=R * K)
+    seg_val = seg_fn(vs.reshape((R * K,) + feat), seg_id,
+                     num_segments=R * K)
     seg_t = jax.ops.segment_min(ts.reshape(-1), seg_id, num_segments=R * K)
     rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, K))
     seg_row = jax.ops.segment_min(rows.reshape(-1), seg_id,
@@ -404,15 +435,16 @@ def combine_sorted(targets: jnp.ndarray, values: jnp.ndarray,
     per_worker_combined)), combined counts identical to the dense path.
     """
     n_pad = M * n_loc
+    feat = feat_shape(values, 2)
     real, seg_t, seg_val, seg_row, ident = sorted_segments(
         targets, values, mask, op, n_pad)
 
     # inbox: receiver applies the same associative op, so one flat scatter
     # of the per-segment combined values is exact.
-    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = jnp.full((n_pad,) + feat, ident, values.dtype)
     buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
-                      jnp.where(real, seg_val, ident))
-    inbox = buf.reshape(M, n_loc)
+                      jnp.where(feat_mask(real, seg_val, 1), seg_val, ident))
+    inbox = buf.reshape((M, n_loc) + feat)
 
     # mask-driven crossness: a live segment IS >= 1 real message — never
     # test the combined value against the identity (a genuine payload can
@@ -448,7 +480,7 @@ def sorted_segments_flat(targets: jnp.ndarray, values: jnp.ndarray,
     E = targets.shape[0]
     t = jnp.where(mask, targets, n_pad)          # sentinel sorts last
     order, ws, ts, first = sort_by_worker_target(src_worker, t)
-    vs = jnp.where(mask, values, ident)[order]
+    vs = jnp.where(feat_mask(mask, values, 1), values, ident)[order]
 
     seg_id = (jnp.cumsum(first) - 1).astype(jnp.int32)
     seg_fn = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
@@ -478,16 +510,17 @@ def combine_sorted_flat(targets: jnp.ndarray, values: jnp.ndarray,
     workers for crossness and the per-worker report."""
     ident = identity_of(op, values.dtype)
     n_pad = M * n_loc
+    feat = feat_shape(values, 1)
     if targets.shape[0] == 0:
-        return (jnp.full((M, n_loc), ident, values.dtype),
+        return (jnp.full((M, n_loc) + feat, ident, values.dtype),
                 (jnp.zeros((), jnp.int32), jnp.zeros((M,), jnp.int32)))
     real, seg_t, seg_val, seg_w, ident = sorted_segments_flat(
         targets, values, mask, src_worker, op, n_pad)
 
-    buf = jnp.full((n_pad,), ident, values.dtype)
+    buf = jnp.full((n_pad,) + feat, ident, values.dtype)
     buf = scatter_op(op, buf, jnp.where(real, seg_t, 0),
-                     jnp.where(real, seg_val, ident))
-    inbox = buf.reshape(M, n_loc)
+                     jnp.where(feat_mask(real, seg_val, 1), seg_val, ident))
+    inbox = buf.reshape((M, n_loc) + feat)
 
     seg_log = seg_w if log_of is None else jnp.asarray(log_of)[seg_w]
     # mask-driven crossness (see combine_sorted): live segment == real send

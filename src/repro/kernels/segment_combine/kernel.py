@@ -31,12 +31,29 @@ from jax.experimental import pallas as pl
 NEG = -3.0e38
 POS = 3.0e38
 
+# largest (eb, nb, fc) min/max select tile the vector kernel materializes
+# in VMEM at once: 512 x 256 x 8 x 4B = 4 MB, well inside the ~16 MB core
+# budget alongside the shared (eb, nb) hit matrix
+_MINMAX_FCHUNK = 8
+# feature-tile width of the vector grid: one MXU-friendly 128-lane register
+FEAT_TILE = 128
+
 
 def sentinels(dtype):
-    """(min-identity, max-identity) used inside the combine blocks."""
+    """(min-identity, max-identity) used inside the combine blocks.
+
+    Floats narrower than f32 (float16: max 65504) cannot represent the
+    3e38 sentinels — they would overflow to inf and break the plan
+    layer's sentinel -> +-inf remap — so sub-f32 floats fall back to
+    their own finfo bounds (bfloat16 shares f32's exponent range and
+    keeps the canonical NEG/POS).
+    """
     if jnp.issubdtype(dtype, jnp.integer):
         info = jnp.iinfo(dtype)
         return info.min, info.max
+    info = jnp.finfo(dtype)
+    if float(info.max) < POS:
+        return float(info.min), float(info.max)
     return NEG, POS
 
 
@@ -64,11 +81,63 @@ def _kernel(vals_ref, idx_ref, out_ref, *, op: str, nb: int):
             axis=0)
 
 
+def _kernel_vec(vals_ref, idx_ref, out_ref, *, op: str, nb: int):
+    """Feature-blocked twin of ``_kernel``: one (edge block, feature tile)
+    grid step combines an (Eb, ft) value tile into an (nb, ft) output tile.
+    Features are independent, so the (Eb, nb) hit matrix is shared across
+    the tile; min/max walk the tile in ``_MINMAX_FCHUNK`` column chunks so
+    the (Eb, nb, fc) select never outgrows VMEM."""
+    vals = vals_ref[0]                          # (Eb, ft)
+    idx = idx_ref[0]                            # (Eb,)
+    eb, ft = vals.shape
+    neg, pos = sentinels(vals.dtype)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (eb, nb), 1)
+    hit = idx[:, None] == cols
+    if op == "sum":
+        acc = (jnp.int32 if jnp.issubdtype(vals.dtype, jnp.integer)
+               else jnp.float32)
+        onehot = hit.astype(vals.dtype)
+        # out[n, f] = sum_e onehot[e, n] * vals[e, f]  (MXU contraction)
+        out_ref[0] = jax.lax.dot_general(
+            onehot, vals, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc).astype(out_ref.dtype)
+        return
+    fill = jnp.asarray(pos if op == "min" else neg, vals.dtype)
+    red = jnp.min if op == "min" else jnp.max
+    outs = []
+    for f0 in range(0, ft, _MINMAX_FCHUNK):
+        v = vals[:, f0:f0 + _MINMAX_FCHUNK]     # (Eb, fc)
+        outs.append(red(jnp.where(hit[:, :, None], v[:, None, :], fill),
+                        axis=0))
+    out_ref[0] = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+
 def segment_combine_blocks(vals: jax.Array, idx: jax.Array, op: str,
                            nb: int, interpret: bool = True) -> jax.Array:
-    """vals/idx: (n_blocks, Eb); returns (n_blocks, nb) combined blocks.
-    idx entries are block-local destinations; padding idx = -1 (never hits).
+    """vals: (n_blocks, Eb) or feature-blocked (n_blocks, Eb, F);
+    idx: (n_blocks, Eb).  Returns (n_blocks, nb) / (n_blocks, nb, F)
+    combined blocks.  idx entries are block-local destinations; padding
+    idx = -1 (never hits).  Scalar input takes the original 2-D kernel
+    unchanged (the F=1 bitwise-identity contract); vector input runs a
+    (block, feature-tile) grid with an inner chunk loop.
     """
+    if vals.ndim == 3:
+        n_blocks, eb, F = vals.shape
+        ft = min(F, FEAT_TILE)
+        n_ft = -(-F // ft)
+        Fp = n_ft * ft
+        if Fp != F:  # pad the tail tile; features never mix, slice after
+            vals = jnp.pad(vals, ((0, 0), (0, 0), (0, Fp - F)))
+        out = pl.pallas_call(
+            functools.partial(_kernel_vec, op=op, nb=nb),
+            grid=(n_blocks, n_ft),
+            in_specs=[pl.BlockSpec((1, eb, ft), lambda i, j: (i, 0, j)),
+                      pl.BlockSpec((1, eb), lambda i, j: (i, 0))],
+            out_specs=pl.BlockSpec((1, nb, ft), lambda i, j: (i, 0, j)),
+            out_shape=jax.ShapeDtypeStruct((n_blocks, nb, Fp), vals.dtype),
+            interpret=interpret,
+        )(vals, idx)
+        return out[:, :, :F] if Fp != F else out
     n_blocks, eb = vals.shape
     return pl.pallas_call(
         functools.partial(_kernel, op=op, nb=nb),

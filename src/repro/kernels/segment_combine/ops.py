@@ -49,8 +49,13 @@ def pack_values(vals: np.ndarray, order: np.ndarray, idx_local: np.ndarray,
     that dtype (the kernel ignores them via idx == -1 either way)."""
     vals = np.asarray(vals)
     n_blocks, eb = idx_local.shape
-    out = np.full((n_blocks, eb), _identity(op, vals.dtype), vals.dtype)
     valid = idx_local.reshape(-1) >= 0
+    if vals.ndim == 2:  # feature-blocked (E, F) payload
+        out = np.full((n_blocks, eb, vals.shape[1]),
+                      _identity(op, vals.dtype), vals.dtype)
+        out.reshape(-1, vals.shape[1])[valid] = vals[order]
+        return out
+    out = np.full((n_blocks, eb), _identity(op, vals.dtype), vals.dtype)
     out.reshape(-1)[valid] = vals[order]
     return out
 
@@ -58,10 +63,13 @@ def pack_values(vals: np.ndarray, order: np.ndarray, idx_local: np.ndarray,
 def segment_combine(packed_vals: jax.Array, packed_idx: jax.Array, op: str,
                     nb: int, n_out: int, use_kernel: bool = True,
                     interpret: bool = True) -> jax.Array:
-    """Combine packed edge messages into (n_out,) destination values."""
+    """Combine packed edge messages into (n_out,) destination values —
+    or (n_out, F) when ``packed_vals`` carries a feature axis."""
     fn = segment_combine_blocks if use_kernel else segment_combine_blocks_ref
     out = fn(packed_vals, packed_idx, op, nb,
              **({"interpret": interpret} if use_kernel else {}))
+    if out.ndim == 3:
+        return out.reshape(-1, out.shape[2])[:n_out]
     return out.reshape(-1)[:n_out]
 
 

@@ -12,11 +12,17 @@ def _identity(op: str, dtype):
 
 
 def segment_combine_blocks_ref(vals, idx, op: str, nb: int):
-    n_blocks, eb = vals.shape
+    """vals: (n_blocks, Eb) or feature-blocked (n_blocks, Eb, F); the
+    trailing feature axis rides the same scatter (features never mix)."""
+    n_blocks, eb = idx.shape
     ident = _identity(op, vals.dtype)
-    out = jnp.full((n_blocks, nb), ident, vals.dtype)
     safe = jnp.clip(idx, 0, nb - 1)
-    v = jnp.where(idx >= 0, vals, ident)
+    if vals.ndim == 3:
+        out = jnp.full((n_blocks, nb, vals.shape[2]), ident, vals.dtype)
+        v = jnp.where((idx >= 0)[:, :, None], vals, ident)
+    else:
+        out = jnp.full((n_blocks, nb), ident, vals.dtype)
+        v = jnp.where(idx >= 0, vals, ident)
     rows = jnp.arange(n_blocks)[:, None] + jnp.zeros_like(idx)
     if op == "sum":
         return out.at[rows, safe].add(v)

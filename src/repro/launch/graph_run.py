@@ -18,7 +18,7 @@ import argparse
 import time
 
 GRAPH_NAMES = ("powerlaw", "road", "erdos")
-ALGOS = ("hashmin", "pagerank", "sv", "sssp", "msf", "attr_bcast")
+ALGOS = ("hashmin", "pagerank", "sv", "sssp", "msf", "attr_bcast", "gcn")
 
 
 def make_graph(graph: str, n: int, seed: int):
@@ -88,6 +88,16 @@ def main():
                          "combined residue crosses the host axis; the "
                          "driver prints intra- vs cross-host "
                          "exchange-volume stats")
+    ap.add_argument("--feat-dim", type=int, default=32,
+                    help="gcn: embedding feature dimension F — the "
+                         "vector-payload width every channel join "
+                         "carries as a trailing (lanes, F) block")
+    ap.add_argument("--hidden", type=int, default=64,
+                    help="gcn: hidden width of the 2-layer GCN")
+    ap.add_argument("--classes", type=int, default=8,
+                    help="gcn: number of synthetic label classes")
+    ap.add_argument("--epochs", type=int, default=10,
+                    help="gcn: full-graph AdamW steps")
     ap.add_argument("--pipeline", action="store_true",
                     help="double-buffer the supersteps: chunk every "
                          "routed exchange so chunk k's all_to_all "
@@ -178,6 +188,31 @@ def main():
                                  pipeline=pipe)
         print(f"[msf] total weight {float(res[1]):.2f}, "
               f"{int(res[2])} edges")
+        pg = pgw
+    elif args.algo == "gcn":
+        from repro.core.gspmm import gspmm_sharded
+        from repro.train.gcn import normalize_adjacency, train_gcn
+        gw = make_graph(args.graph, args.n, args.seed).symmetrized()
+        gw = normalize_adjacency(gw)
+        pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
+                        layout=args.layout, balance=args.balance,
+                        split_factor=args.split_factor,
+                        hosts=args.hosts if args.hosts > 1 else None)
+        params, losses = train_gcn(
+            pgw, feat_dim=args.feat_dim, hidden=args.hidden,
+            n_classes=args.classes, epochs=args.epochs, seed=args.seed,
+            backend=be, devices=dev or 1, use_mirroring=mirror,
+            pipeline=pipe)
+        print(f"[gcn] F={args.feat_dim} hidden={args.hidden} "
+              f"classes={args.classes}: loss "
+              f"{losses[0]:.4f} -> {losses[-1]:.4f} over "
+              f"{args.epochs} epochs")
+        # message accounting for ONE aggregation join (the training step
+        # runs 4 per epoch: 2 forward + 2 backward-cotangent joins)
+        _, stats = gspmm_sharded(pgw, "u_mul_e_sum", params["emb"],
+                                 devices=dev or 1, backend=be,
+                                 pipeline=pipe, use_mirroring=mirror)
+        n_ss = args.epochs
         pg = pgw
     else:
         import jax.numpy as jnp

@@ -407,6 +407,61 @@ def check_hier_levels(n=180, M=8, tau=8, hier=(2, 4)) -> dict:
     return rep
 
 
+def check_gspmm_hier(n=180, M=8, tau=8, F=4, hier=(2, 4)) -> dict:
+    """The vector-payload 2-D gate: a gSpMM channel join carrying an F>1
+    feature block, compiled on a ``(H, T)`` mesh, must run the SAME two
+    all-to-all levels as the scalar channels — replica groups of size T
+    (intra-host leg, per-level combine) and of size H (cross-host leg,
+    combined residue only).  The ``(lanes, F)`` blocks ride the routed
+    exchange; they must not change its topology.  And no all-reduce /
+    all-gather may touch a >= n_pad-element operand — the
+    replicated-buffer wall, which an F-block regression would blow
+    through F times harder."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.core import exec as exec_mod
+    from repro.core import gspmm
+
+    H, T = hier
+    pg = _test_graph(n, M, tau)
+    feats = jnp.asarray(np.random.RandomState(0)
+                        .randn(pg.M, pg.n_loc, F).astype(np.float32))
+    rep = {"hier": [H, T], "F": int(F), "n_pad": int(pg.n_pad),
+           "programs": {}}
+    ok = True
+    for name, backend, kinds in (
+            ("gspmm_dense", "dense", ()),
+            ("gspmm_plan", "pallas",
+             exec_mod.broadcast_plan_kinds("pallas"))):
+        def mk(g, be=backend):
+            def fn(x):
+                return gspmm.gspmm_stats(g, "u_mul_e_sum", x, backend=be)
+            return fn
+        fn, arrays = exec_mod.build_apply(pg, mk, (feats,), devices=hier,
+                                          plan_kinds=kinds)
+        txt = fn.lower(arrays, (feats,)).compile().as_text()
+        sizes = all_to_all_group_sizes(txt)
+        two = {H, T} <= sizes
+        worst = collective_operand_elems(txt)
+        bad = max(worst["all-reduce"], worst["all-gather"])
+        small = bad < pg.n_pad
+        rep["programs"][name] = {
+            "all_to_all_group_sizes": sorted(sizes),
+            "collective_max_elems": worst,
+            "two_levels": bool(two),
+            "no_replicated_buffer": bool(small)}
+        ok &= two and small
+        print(f"[shard_check] gspmm F={F} {name} @ {H}x{T}: all-to-all "
+              f"group sizes {sorted(sizes)}, worst all-reduce/all-gather "
+              f"operand {bad} vs n_pad {pg.n_pad}: "
+              + ("OK" if two and small else
+                 ("MISSING LEVEL" if not two else "REPLICATED BUFFER")))
+    rep["ok"] = bool(ok)
+    return rep
+
+
 def check_hier_caps(n=160, M=8, hier=(2, 4)) -> bool:
     """Per-level cap overflow regression: drive the raw routed joins on a
     2-D mesh with explicit ``(cap1, cap2)`` caps far below the traffic —
@@ -684,6 +739,9 @@ def main() -> None:
         report["hier_caps_ok"] = check_hier_caps(M=args.workers,
                                                  hier=(2, 4))
         ok &= report["hier_caps_ok"]
+        report["gspmm_hier"] = check_gspmm_hier(n=args.n, M=args.workers,
+                                                hier=(2, 4))
+        ok &= report["gspmm_hier"]["ok"]
     else:
         for bal in args.balance:
             rep, bok = run_matrix(algos=tuple(args.algos),

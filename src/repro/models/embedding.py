@@ -141,3 +141,47 @@ def softmax_xent(logits: jax.Array, labels: jax.Array, mask: jax.Array):
     picked = jnp.sum(logits * oh, axis=-1)
     nll = (lse - picked) * mask
     return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Graph-node embeddings on the BSP engine (vector Ch_req payloads)
+# ---------------------------------------------------------------------------
+
+def node_embedding_init(pg, feat_dim: int, seed: int = 0,
+                        scale: float | None = None,
+                        dtype=jnp.float32) -> jax.Array:
+    """Worker-sharded node-embedding table for a partitioned graph.
+
+    Returns a ``(M, n_loc, feat_dim)`` array — the engine's row-state
+    shape with ONE trailing feature axis, i.e. exactly the vector-payload
+    convention every channel accepts.  Rows are N(0, scale) for real
+    vertices (``scale`` defaults to ``feat_dim**-0.5``) and zero for the
+    layout's padding slots, so padded rows contribute nothing to joins.
+    The init is a function of the ORIGINAL vertex id (placed through
+    ``pg.perm``): two partitions of the same graph start from the same
+    embedding for every vertex, which is what the sharded-vs-unsharded
+    gradient-parity tests rely on."""
+    import numpy as np
+    if scale is None:
+        scale = float(feat_dim) ** -0.5
+    rng = np.random.RandomState(seed)
+    rows = rng.randn(pg.n, feat_dim).astype(np.float32) * scale
+    tab = np.zeros((pg.n_pad, feat_dim), np.float32)
+    tab[np.asarray(pg.perm)] = rows
+    return jnp.asarray(tab, dtype).reshape(pg.M, pg.n_loc, feat_dim)
+
+
+def node_embedding_fetch(g, table: jax.Array, ids: jax.Array,
+                         mask: jax.Array):
+    """Sparse embedding lookup over the request-respond channel.
+
+    ``table`` is the sharded ``(rows, n_loc, F)`` node table; ``ids``
+    ``(rows, R)`` global (padded) vertex ids each worker wants rows for.
+    This is the S-V access pattern of §6 with a VECTOR payload: requests
+    are deduplicated per worker, the owner responds once per distinct id
+    with the full ``(F,)`` block, and the response table is scattered back
+    locally — returns ``((rows, R, F) values, stats)``.  Works unsharded
+    (PartitionedGraph) and inside ``shard_map`` (ShardedGraph), where the
+    respond leg lowers to the routed (lanes, F) exchange."""
+    from repro.core import channels
+    return channels.gather(g, table, ids, mask)
