@@ -1,6 +1,7 @@
 """End-to-end graph-analytics driver over all paper workloads: the
 paper-kind production scenario (CC + MSF + PageRank + SSSP on one graph
-corpus, with channel configuration and balance reporting).
+corpus, with channel configuration and balance reporting) — everything
+through the ``repro.api.Engine`` front door.
 
     PYTHONPATH=src python examples/graph_analytics.py [scale]
 """
@@ -11,14 +12,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from repro.algorithms.hashmin import hashmin
-from repro.algorithms.msf import msf
-from repro.algorithms.pagerank import pagerank
-from repro.algorithms.sssp import sssp
-from repro.algorithms.sv import sv
+from repro.api import Engine
 from repro.core.cost_model import choose_tau
 from repro.graph import generators as gen
-from repro.graph.structs import partition
 from repro.core.cost_model import straggler_report
 
 scale = int(sys.argv[1]) if len(sys.argv) > 1 else 10_000
@@ -27,34 +23,41 @@ M = 16
 g = gen.powerlaw(scale, avg_deg=8, alpha=1.8, seed=0,
                  weighted=True).symmetrized()
 tau = choose_tau(g.out_degrees(), M)
-pg = partition(g, M, tau=tau, seed=0)
+eng = Engine()                     # dense backend, padded layout, 1 device
+pg = eng.partition(g, M, tau=tau, seed=0)
 print(f"corpus: n={g.n} m={g.m} tau*={tau} M={M}")
 
 print("\n-- connected components (Hash-Min, mirrored) --")
-labels, s, n = hashmin(pg)
-rep = straggler_report(np.asarray(s["per_worker_total"]))
-print(f"supersteps={int(n)} msgs={int(s['msgs_total']):,} "
+res = eng.run("hashmin", pg)
+rep = straggler_report(np.asarray(res.stats["per_worker_total"]))
+print(f"supersteps={res.n_supersteps} "
+      f"msgs={int(res.stats['msgs_total']):,} "
       f"balance max/mean={rep['max_over_mean']:.2f}")
 
 print("\n-- connected components (S-V, request-respond) --")
-labels2, s2, n2 = sv(pg)
-print(f"rounds={int(n2)} rr={int(s2['msgs_rr']):,} "
-      f"basic={int(s2['msgs_basic']):,} "
-      f"({int(s2['msgs_basic']) / max(int(s2['msgs_rr']), 1):.2f}x reduction)")
+res = eng.run("sv", pg)
+rr, basic = int(res.stats["msgs_rr"]), int(res.stats["msgs_basic"])
+print(f"rounds={res.n_supersteps} rr={rr:,} basic={basic:,} "
+      f"({basic / max(rr, 1):.2f}x reduction)")
 
 print("\n-- PageRank (10 iters) --")
-pr, s3, _ = pagerank(pg, n_iters=10, tol=0.0)
-top = np.argsort(-np.asarray(pr).reshape(-1))[:5]
-print(f"msgs={int(s3['msgs_total']):,} top-5 pr={np.asarray(pr).reshape(-1)[top]}")
+res = eng.run("pagerank", pg, n_iters=10, tol=0.0)
+pr = np.asarray(res.state).reshape(-1)
+top = np.argsort(-pr)[:5]
+print(f"msgs={int(res.stats['msgs_total']):,} top-5 pr={pr[top]}")
 
 print("\n-- SSSP from vertex 0 (relay() on mirrors) --")
-dist, s4, n4 = sssp(pg, int(pg.perm[0]))
-d = np.asarray(dist).reshape(-1)
-print(f"supersteps={int(n4)} msgs={int(s4['msgs_total']):,} "
+res = eng.run("sssp", pg, source=int(pg.perm[0]))
+d = np.asarray(res.state).reshape(-1)
+print(f"supersteps={res.n_supersteps} "
+      f"msgs={int(res.stats['msgs_total']):,} "
       f"reached={int(np.isfinite(d).sum())}/{pg.n_pad}")
 
 print("\n-- minimum spanning forest (Boruvka + SEAS) --")
-(resm, s5, n5) = msf(pg)
-print(f"rounds={int(n5)} |MSF|={int(resm[2])} weight={float(resm[1]):.1f} "
-      f"rr={int(s5['msgs_rr']):,} basic={int(s5['msgs_basic']):,}")
+res = eng.run("msf", pg)
+labels, total_w, n_edges = res.state
+print(f"rounds={res.n_supersteps} |MSF|={int(n_edges)} "
+      f"weight={float(total_w):.1f} "
+      f"rr={int(res.stats['msgs_rr']):,} "
+      f"basic={int(res.stats['msgs_basic']):,}")
 print("\nDone.")

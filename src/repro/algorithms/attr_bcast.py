@@ -7,24 +7,25 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.api import EngineConfig, RunResult
 from repro.core import exec as exec_mod
 from repro.core.channels import gather_edges
 from repro.graph.structs import PartitionedGraph
 
 
-def attribute_broadcast(pg: PartitionedGraph, attr,
-                        backend: str = "dense",
-                        devices: int | None = None,
-                        pipeline: bool = False):
-    """attr: (M, n_loc) vertex attribute.  Returns (edge_attr aligned with
-    pg.all_dst — (M, A_loc) padded layout, (E,) csr layout — and stats).
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        attr) -> RunResult:
+    """Attribute broadcast under an EngineConfig.  ``attr`` is an
+    (M, n_loc) vertex attribute; ``state`` is the per-edge attribute
+    aligned with pg.all_dst — (M, A_loc) padded layout, (E,) csr.
     stats['msgs_basic'] is the 3-superstep Pregel cost (request+response
     per edge, 2|E| messages); stats['msgs_rr'] the deduplicated Ch_req
     cost, identical across layouts and device counts.
 
-    ``backend`` is accepted for driver uniformity: Ch_req is a pure
-    gather with no combine stage, so both backends share one path."""
-    del backend
+    Ch_req is a pure gather with no combine stage, so ``backend`` does
+    not change the path."""
+    cfg = config or EngineConfig()
+    devices = cfg.devices
 
     def make_fn(g):
         def fn(a):
@@ -33,10 +34,11 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
 
     if devices is None:
         out, stats = jax.jit(make_fn(pg))(attr)
-        return out, stats
+        return RunResult(state=out, stats=stats, n_supersteps=1)
 
     out, stats = exec_mod.apply_sharded(pg, make_fn, (attr,),
-                                        devices=devices, pipeline=pipeline)
+                                        devices=devices,
+                                        pipeline=cfg.pipeline)
     if pg.layout == "csr":
         # sharded csr outputs come back device-concatenated with per-device
         # padding: strip back to the flat (E,) edge order (split partitions
@@ -48,4 +50,15 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
         out = jax.numpy.concatenate(
             [out[d * cap:d * cap + int(counts[d])]
              for d in range(D)])
-    return out, stats
+    return RunResult(state=out, stats=stats, n_supersteps=1)
+
+
+def attribute_broadcast(pg: PartitionedGraph, attr,
+                        backend: str = "dense",
+                        devices: int | None = None,
+                        pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns (edge_attr, stats).
+    Use ``Engine.run("attr_bcast", ...)``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline), attr=attr)
+    return res.state, res.stats

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.api import EngineConfig, RunResult
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
@@ -19,23 +20,23 @@ from repro.core.plan import identity_of
 from repro.graph.structs import PartitionedGraph
 
 
-def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
-            use_mirroring: bool = True, record_history: bool = False,
-            backend: str = "dense", devices: int | None = None,
-            pipeline: bool = False):
-    """Returns (labels, stats, n_supersteps[, history]).  ``devices=None``
-    runs the single-device batched simulation; an int runs the sharded
-    executor over that many devices (bitwise-identical labels & stats).
-    ``pipeline=True`` double-buffers the sharded exchanges (still
-    bitwise — min combine)."""
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        max_supersteps: int = 10_000,
+        record_history: bool = False) -> RunResult:
+    """Hash-Min under an EngineConfig.  ``state`` is the (M, n_loc) int32
+    label array (min relabeled id of each component).  ``devices=None``
+    runs the single-device batched simulation; an int/tuple runs the
+    sharded executor (bitwise-identical labels & stats); ``pipeline``
+    double-buffers the sharded exchanges (still bitwise — min combine)."""
+    cfg = config or EngineConfig()
     imax = identity_of("min", jnp.int32)
 
     def make_step(g):
         def step(state, i):
             minv, active = state
             inbox, stats = broadcast(g, minv, active, op="min",
-                                     use_mirroring=use_mirroring,
-                                     backend=backend)
+                                     use_mirroring=cfg.use_mirroring,
+                                     backend=cfg.backend)
             upd = g.vmask & (inbox < minv)
             new = jnp.where(upd, inbox, minv)
             halted = ~g.gany(upd)
@@ -45,19 +46,33 @@ def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
     ids = pg.local_ids().astype(jnp.int32)
     minv0 = jnp.where(pg.vmask, ids, imax)
     state0 = (minv0, pg.vmask)
-    if devices is None:
+    if cfg.devices is None:
         st, stats, n, hist = bsp.run(jax.jit(make_step(pg)), state0,
                                      max_supersteps,
                                      record_history=record_history,
-                                     pipeline=pipeline)
+                                     pipeline=cfg.pipeline)
     else:
         st, stats, n, hist = exec_mod.run_sharded(
             pg, make_step, state0, max_supersteps,
-            record_history=record_history, devices=devices,
-            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring),
-            pipeline=pipeline)
-    minv = st[0]
+            record_history=record_history, devices=cfg.devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(cfg.backend,
+                                                     cfg.use_mirroring),
+            pipeline=cfg.pipeline)
+    return RunResult(state=st[0], stats=stats, n_supersteps=n,
+                     history=hist if record_history else None)
+
+
+def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
+            use_mirroring: bool = True, record_history: bool = False,
+            backend: str = "dense", devices: int | None = None,
+            pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns (labels, stats,
+    n_supersteps[, history]).  Use ``Engine.run("hashmin", ...)`` /
+    ``run(pg, EngineConfig(...))``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline,
+                               use_mirroring=use_mirroring),
+              max_supersteps=max_supersteps, record_history=record_history)
     if record_history:
-        return minv, stats, n, hist
-    return minv, stats, n
+        return res.state, res.stats, res.n_supersteps, res.history
+    return res.state, res.stats, res.n_supersteps

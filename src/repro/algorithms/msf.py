@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.api import EngineConfig, RunResult
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import gather, gather_edges, scatter_edges
@@ -27,17 +28,20 @@ from repro.algorithms.sv import _acc
 IMAX = jnp.iinfo(jnp.int32).max
 
 
-def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
-        backend: str = "dense", devices: int | None = None,
-        pipeline: bool = False):
-    """Returns ((labels, total_weight, n_edges), stats, rounds).
-    Requires pg built from a *weighted, symmetrized* graph.
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        max_rounds: int = 40, jump_iters: int = 20) -> RunResult:
+    """Boruvka MSF under an EngineConfig.  ``state`` is the tuple
+    (labels, total_weight, n_edges).  Requires pg built from a
+    *weighted, symmetrized* graph.
 
     Edge-shaped reads/writes (per-edge supervertex queries, min-edge
     election) go through the pg-level channel wrappers, which follow
     ``pg.layout`` (padded rows vs flat csr) and, under the sharded
     executor, the device mesh.  State-shaped ops (pointer jumping) are
     layout-independent."""
+    cfg = config or EngineConfig()
+    del jump_iters  # pointer jumping loops to convergence
+    backend = cfg.backend
 
     def make_step(g):
         M = g.M
@@ -123,11 +127,24 @@ def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
 
     state0 = (pg.local_ids().astype(jnp.int32), jnp.zeros((), jnp.float32),
               jnp.zeros((), jnp.int32))
-    if devices is None:
+    if cfg.devices is None:
         st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
-                                  max_rounds, pipeline=pipeline)
+                                  max_rounds, pipeline=cfg.pipeline)
     else:
         st, stats, n, _ = exec_mod.run_sharded(pg, make_step, state0,
-                                               max_rounds, devices=devices,
-                                               pipeline=pipeline)
-    return st, stats, n
+                                               max_rounds,
+                                               devices=cfg.devices,
+                                               pipeline=cfg.pipeline)
+    return RunResult(state=st, stats=stats, n_supersteps=n)
+
+
+def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
+        backend: str = "dense", devices: int | None = None,
+        pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns ((labels,
+    total_weight, n_edges), stats, rounds).  Use ``Engine.run("msf",
+    ...)``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline),
+              max_rounds=max_rounds, jump_iters=jump_iters)
+    return res.state, res.stats, res.n_supersteps

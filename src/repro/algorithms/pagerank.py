@@ -5,19 +5,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.api import EngineConfig, RunResult
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
 from repro.graph.structs import PartitionedGraph
 
 
-def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
-             tol: float = 1e-4, use_mirroring: bool = True,
-             record_history: bool = False, backend: str = "dense",
-             devices: int | None = None, pipeline: bool = False):
-    """Returns (pr, stats, n_supersteps[, history]).  ``pipeline=True``
-    double-buffers the sharded exchanges (sum combine: values agree to
-    the usual float exchange-order round-off; stats stay exact)."""
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        n_iters: int = 30, damping: float = 0.85, tol: float = 1e-4,
+        record_history: bool = False) -> RunResult:
+    """PageRank under an EngineConfig.  ``state`` is the (M, n_loc)
+    float32 rank vector.  ``pipeline`` double-buffers the sharded
+    exchanges (sum combine: values agree to the usual float exchange-
+    order round-off; stats stay exact)."""
+    cfg = config or EngineConfig()
     n = pg.n
 
     def make_step(g):
@@ -28,8 +30,8 @@ def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
             contrib = jnp.where(g.vmask, pr / deg, 0.0)
             active = g.vmask & (g.deg > 0)
             inbox, stats = broadcast(g, contrib, active, op="sum",
-                                     use_mirroring=use_mirroring,
-                                     backend=backend)
+                                     use_mirroring=cfg.use_mirroring,
+                                     backend=cfg.backend)
             new_pr = jnp.where(g.vmask,
                                (1 - damping) / n + damping * inbox, 0.0)
             delta = g.gmax(jnp.abs(new_pr - pr).max())
@@ -38,17 +40,32 @@ def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
         return step
 
     pr0 = jnp.where(pg.vmask, 1.0 / n, 0.0)
-    if devices is None:
+    if cfg.devices is None:
         st, stats, nss, hist = bsp.run(jax.jit(make_step(pg)), pr0, n_iters,
                                        record_history=record_history,
-                                       pipeline=pipeline)
+                                       pipeline=cfg.pipeline)
     else:
         st, stats, nss, hist = exec_mod.run_sharded(
             pg, make_step, pr0, n_iters, record_history=record_history,
-            devices=devices,
-            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring),
-            pipeline=pipeline)
+            devices=cfg.devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(cfg.backend,
+                                                     cfg.use_mirroring),
+            pipeline=cfg.pipeline)
+    return RunResult(state=st, stats=stats, n_supersteps=nss,
+                     history=hist if record_history else None)
+
+
+def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
+             tol: float = 1e-4, use_mirroring: bool = True,
+             record_history: bool = False, backend: str = "dense",
+             devices: int | None = None, pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns (pr, stats,
+    n_supersteps[, history]).  Use ``Engine.run("pagerank", ...)``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline,
+                               use_mirroring=use_mirroring),
+              n_iters=n_iters, damping=damping, tol=tol,
+              record_history=record_history)
     if record_history:
-        return st, stats, nss, hist
-    return st, stats, nss
+        return res.state, res.stats, res.n_supersteps, res.history
+    return res.state, res.stats, res.n_supersteps

@@ -6,24 +6,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.api import EngineConfig, RunResult
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
 from repro.graph.structs import PartitionedGraph
 
 
-def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
-         use_mirroring: bool = True, backend: str = "dense",
-         devices: int | None = None, pipeline: bool = False):
-    """source: vertex id in the *relabeled* space (use pg.perm[orig])."""
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        source: int, max_supersteps: int = 10_000) -> RunResult:
+    """SSSP under an EngineConfig.  ``source`` is a vertex id in the
+    *relabeled* space (use pg.perm[orig]); ``state`` is the (M, n_loc)
+    float32 distance array."""
+    cfg = config or EngineConfig()
 
     def make_step(g):
         def step(state, i):
             dist, active = state
             inbox, stats = broadcast(g, dist, active, op="min",
                                      relay="add_w",
-                                     use_mirroring=use_mirroring,
-                                     backend=backend)
+                                     use_mirroring=cfg.use_mirroring,
+                                     backend=cfg.backend)
             upd = g.vmask & (inbox < dist)
             new = jnp.where(upd, inbox, dist)
             return (new, upd), ~g.gany(upd), stats
@@ -33,13 +36,25 @@ def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
     dist0 = jnp.where(ids == source, 0.0, jnp.inf)
     dist0 = jnp.where(pg.vmask, dist0, jnp.inf)
     state0 = (dist0, ids == source)
-    if devices is None:
+    if cfg.devices is None:
         st, stats, n, _ = bsp.run(jax.jit(make_step(pg)), state0,
-                                  max_supersteps, pipeline=pipeline)
+                                  max_supersteps, pipeline=cfg.pipeline)
     else:
         st, stats, n, _ = exec_mod.run_sharded(
-            pg, make_step, state0, max_supersteps, devices=devices,
-            plan_kinds=exec_mod.broadcast_plan_kinds(backend,
-                                                     use_mirroring),
-            pipeline=pipeline)
-    return st[0], stats, n
+            pg, make_step, state0, max_supersteps, devices=cfg.devices,
+            plan_kinds=exec_mod.broadcast_plan_kinds(cfg.backend,
+                                                     cfg.use_mirroring),
+            pipeline=cfg.pipeline)
+    return RunResult(state=st[0], stats=stats, n_supersteps=n)
+
+
+def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
+         use_mirroring: bool = True, backend: str = "dense",
+         devices: int | None = None, pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns (dist, stats, n).
+    Use ``Engine.run("sssp", ...)``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline,
+                               use_mirroring=use_mirroring),
+              source=source, max_supersteps=max_supersteps)
+    return res.state, res.stats, res.n_supersteps

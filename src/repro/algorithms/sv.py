@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.api import EngineConfig, RunResult
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast, gather, scatter_state
@@ -38,11 +39,14 @@ def _acc(stats, s, workers):
     return stats
 
 
-def sv(pg: PartitionedGraph, max_supersteps: int = 64,
-       backend: str = "dense", devices: int | None = None,
-       pipeline: bool = False):
-    """Returns (labels (M, n_loc) int32 = min id of each CC, stats, rounds)."""
+def run(pg: PartitionedGraph, config: EngineConfig | None = None, *,
+        max_supersteps: int = 64) -> RunResult:
+    """Shiloach-Vishkin under an EngineConfig.  ``state`` is the
+    (M, n_loc) int32 label array (min id of each CC).  Pointer reads are
+    request-respond exchanges, so ``use_mirroring`` does not apply."""
+    cfg = config or EngineConfig()
     imax = identity_of("min", jnp.int32)
+    backend = cfg.backend
 
     def make_step(g):
         M = g.M
@@ -99,13 +103,24 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64,
         return step
 
     D0 = pg.local_ids().astype(jnp.int32)
-    if devices is None:
+    if cfg.devices is None:
         D, stats, n, _ = bsp.run(jax.jit(make_step(pg)), D0, max_supersteps,
-                                 pipeline=pipeline)
+                                 pipeline=cfg.pipeline)
     else:
         D, stats, n, _ = exec_mod.run_sharded(
-            pg, make_step, D0, max_supersteps, devices=devices,
+            pg, make_step, D0, max_supersteps, devices=cfg.devices,
             plan_kinds=exec_mod.broadcast_plan_kinds(
                 backend, use_mirroring=False),
-            pipeline=pipeline)
-    return D, stats, n
+            pipeline=cfg.pipeline)
+    return RunResult(state=D, stats=stats, n_supersteps=n)
+
+
+def sv(pg: PartitionedGraph, max_supersteps: int = 64,
+       backend: str = "dense", devices: int | None = None,
+       pipeline: bool = False):
+    """Deprecated positional-tuple wrapper: returns (labels, stats,
+    rounds).  Use ``Engine.run("sv", ...)``."""
+    res = run(pg, EngineConfig(backend=backend, devices=devices,
+                               pipeline=pipeline),
+              max_supersteps=max_supersteps)
+    return res.state, res.stats, res.n_supersteps

@@ -925,6 +925,161 @@ def _shard_graph(pg, devices, plan_kinds: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
+# frozen shape profiles: resident executors that NEVER re-trace
+# ---------------------------------------------------------------------------
+#
+# jax.jit caches on (function object, argument shapes/dtypes).  A resident
+# program built by ``build_sharded`` keeps its function object alive, so
+# the only way a graph mutation can force a re-trace is by changing the
+# shapes of the ``arrays`` pytree — per-device edge caps, the mirror-id
+# table length, the mirror fetch-plan tables — or a meta static like the
+# pair_counts cap hint.  A ShardProfile freezes every one of those at
+# warmup (with headroom), and ``reshard_arrays`` re-pads a folded graph's
+# arrays to the exact same envelope: same function + same shapes = cache
+# hit, zero re-traces, while an overflow past the envelope raises
+# ``ProfileOverflow`` so the caller re-warms deliberately.  Padding is
+# semantics-free by the masking contract (mask=False lanes contribute
+# nothing to values or stats), and a frozen cap hint can only change how
+# many overflow *rounds* a routed exchange takes — never its result.
+
+class ProfileOverflow(ValueError):
+    """The graph outgrew its frozen ShardProfile: re-warm the executor."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardProfile:
+    """Frozen shape envelope of a resident sharded executor (csr layout,
+    1-D mesh, no split, no pallas plan tables)."""
+    D: int
+    eg_cap: int        # per-device Ch_msg edge rows
+    all_cap: int       # per-device full-adjacency rows
+    mir_cap: int       # per-device mirror fan-out rows
+    n_mir: int         # replicated mirror-id table length
+    fetch_cap: int     # mirror fetch plan per-device-pair lanes
+    fetch_need: int    # mirror fetch plan compact buffer length
+    cap_hint: Optional[int]  # frozen pair_counts routing cap
+
+
+def _profile_supported(meta):
+    if meta["layout"] != "csr":
+        raise ValueError("ShardProfile needs layout='csr' (padded shapes "
+                         "are already content-dependent per worker)")
+    if meta["split"]:
+        raise ValueError("ShardProfile does not support balance='split': "
+                         "physical shard bounds are static meta, not "
+                         "paddable arrays")
+    if meta["hier"]:
+        raise ValueError("ShardProfile supports the 1-D mesh only")
+    if meta["plan_meta"]:
+        raise ValueError("ShardProfile supports plan_kinds=() (dense "
+                         "backend) only")
+
+
+def shard_profile(pg, devices, slack: float = 1.25,
+                  pad: int = 8) -> ShardProfile:
+    """Measure ``pg``'s natural shard shapes and inflate them by
+    ``slack`` (rounded up to ``pad`` lanes) into a frozen envelope with
+    mutation headroom."""
+    D, _ = _normalize_devices(devices)
+    meta, arrays, _ = _shard_graph(pg, devices, ())
+    _profile_supported(meta)
+
+    def up(x):
+        return int(-(-int(np.ceil(x * slack)) // pad) * pad)
+
+    fm = meta["fetch_meta"]["mir"]
+    hint = meta["cap_hint"]
+    return ShardProfile(
+        D=D,
+        eg_cap=up(arrays["eg_src"].shape[1]),
+        all_cap=up(arrays["all_src"].shape[1]),
+        mir_cap=up(arrays["mir_esrc"].shape[1]),
+        n_mir=up(arrays["mir_ids"].shape[0]),
+        fetch_cap=up(fm["cap"]), fetch_need=up(fm["n_need"]),
+        cap_hint=None if hint is None else up(hint))
+
+
+def _pad_cols(a, cap, pad_col, what):
+    """(D, c) -> (D, cap) padded with the per-device column ``pad_col``."""
+    a = np.asarray(a)
+    d, c = a.shape
+    if c > cap:
+        raise ProfileOverflow(f"{what}: {c} rows exceed the frozen "
+                              f"profile cap {cap}")
+    if c == cap:
+        return a
+    pad = np.broadcast_to(np.asarray(pad_col, a.dtype).reshape(d, 1),
+                          (d, cap - c)).copy()
+    return np.concatenate([a, pad], axis=1)
+
+
+def _apply_profile(meta, arrays, prof: ShardProfile) -> None:
+    """Re-pad freshly sharded ``arrays`` (and the content-dependent meta
+    statics) to the frozen envelope, in place."""
+    _profile_supported(meta)
+    D, m, n_loc = meta["D"], meta["m_loc"], meta["n_loc"]
+    if D != prof.D:
+        raise ProfileOverflow(f"profile built for D={prof.D}, got D={D}")
+    base = np.arange(D) * m * n_loc
+    zero = np.zeros(D)
+    for name, cap in (("eg", prof.eg_cap), ("all", prof.all_cap)):
+        arrays[f"{name}_src"] = _pad_cols(arrays[f"{name}_src"], cap,
+                                          base, f"{name}_src")
+        arrays[f"{name}_dst"] = _pad_cols(arrays[f"{name}_dst"], cap,
+                                          zero, f"{name}_dst")
+        arrays[f"{name}_w"] = _pad_cols(arrays[f"{name}_w"], cap, zero,
+                                        f"{name}_w")
+        arrays[f"{name}_mask"] = _pad_cols(arrays[f"{name}_mask"], cap,
+                                           zero, f"{name}_mask")
+    arrays["mir_esrc"] = _pad_cols(arrays["mir_esrc"], prof.mir_cap,
+                                   zero, "mir_esrc")
+    arrays["mir_edst"] = _pad_cols(arrays["mir_edst"], prof.mir_cap,
+                                   base, "mir_edst")
+    arrays["mir_ew"] = _pad_cols(arrays["mir_ew"], prof.mir_cap, zero,
+                                 "mir_ew")
+    arrays["mir_emask"] = _pad_cols(arrays["mir_emask"], prof.mir_cap,
+                                    zero, "mir_emask")
+    arrays["mir_cesrc"] = _pad_cols(arrays["mir_cesrc"], prof.mir_cap,
+                                    zero, "mir_cesrc")
+    # replicated mirror tables: sentinel-padded ids (n_pad => inert in
+    # every need-list and value gather), zero extra workers
+    ids = np.asarray(arrays["mir_ids"])
+    if len(ids) > prof.n_mir:
+        raise ProfileOverflow(f"n_mir {len(ids)} exceeds the frozen "
+                              f"profile {prof.n_mir}")
+    sent = np.full(prof.n_mir - len(ids), meta["M"] * n_loc, ids.dtype)
+    arrays["mir_ids"] = np.concatenate([ids, sent])
+    nw = np.asarray(arrays["mir_nworkers"])
+    arrays["mir_nworkers"] = np.concatenate(
+        [nw, np.zeros(prof.n_mir - len(nw), nw.dtype)])
+    # mirror fetch plan: -1 lanes are dropped by _fetch_planned; a larger
+    # n_need only grows the compact buffer (real positions untouched)
+    fm = meta["fetch_meta"]["mir"]
+    if fm["cap"] > prof.fetch_cap or fm["n_need"] > prof.fetch_need:
+        raise ProfileOverflow(
+            f"mirror fetch plan (cap {fm['cap']}, n_need {fm['n_need']}) "
+            f"exceeds the frozen profile (cap {prof.fetch_cap}, n_need "
+            f"{prof.fetch_need})")
+    for k in ("send_slot", "recv_pos"):
+        a = np.asarray(arrays[f"fetch_mir_{k}"])
+        out = np.full(a.shape[:2] + (prof.fetch_cap,), -1, a.dtype)
+        out[:, :, :a.shape[2]] = a
+        arrays[f"fetch_mir_{k}"] = out
+    meta["fetch_meta"]["mir"] = {"cap": prof.fetch_cap,
+                                 "n_need": prof.fetch_need}
+    meta["cap_hint"] = prof.cap_hint
+
+
+def reshard_arrays(pg, devices, profile: ShardProfile) -> Dict:
+    """Arrays-only reshard of a (folded) graph under a frozen profile:
+    feed the result to a program previously built with the SAME profile —
+    shapes are envelope-stable, so the jit cache hits (zero re-trace)."""
+    meta, arrays, _ = _shard_graph(pg, devices, ())
+    _apply_profile(meta, arrays, profile)
+    return arrays
+
+
+# ---------------------------------------------------------------------------
 # the inside-shard_map graph view
 # ---------------------------------------------------------------------------
 
@@ -2082,7 +2237,9 @@ def _acc_specs(stats_shape):
 def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
                   record_history: bool = False, devices: int = 1,
                   plan_kinds: Sequence[str] = (), pipeline: bool = False,
-                  pipeline_chunks: Optional[int] = None):
+                  pipeline_chunks: Optional[int] = None,
+                  profile: Optional[ShardProfile] = None,
+                  on_trace: Optional[Callable] = None):
     """Build the jitted sharded BSP program.  Returns (fn, args) with
     ``fn(*args) == (final_state, raw_acc, n_supersteps, history)`` —
     fold ``raw_acc`` with ``finalize_stats`` (run_sharded does) to get
@@ -2105,7 +2262,13 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     ``devices`` may also be an ``(hosts, per_host)`` pair: the program
     then runs on the 2-D mesh with the hierarchical two-leg exchanges
     (combine within the host, route the residue across hosts), same
-    parity contract against the 1-D path."""
+    parity contract against the 1-D path.
+
+    ``profile`` pads the shard arrays to a frozen :class:`ShardProfile`
+    envelope so a resident program survives graph folds with ZERO
+    re-traces (feed ``reshard_arrays`` outputs to the returned fn);
+    ``on_trace`` is called (Python side effect) each time the inner
+    program actually traces — the serving trace counter."""
     D, hier = _normalize_devices(devices)
     if pg.M % D:
         raise ValueError(f"M={pg.M} workers must divide over "
@@ -2113,6 +2276,8 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     mesh = graph_mesh(devices)
     meta, arrays, arr_specs = _shard_graph(pg, devices, plan_kinds,
                                            pipeline, pipeline_chunks)
+    if profile is not None:
+        _apply_profile(meta, arrays, profile)
 
     _, _, stats_shape = jax.eval_shape(make_step(pg), state0,
                                        jnp.zeros((), jnp.int32))
@@ -2121,6 +2286,8 @@ def build_sharded(pg, make_step: Callable, state0, max_supersteps: int,
     hist_specs = stats_specs if record_history else None
 
     def inner(arrs, st0):
+        if on_trace is not None:
+            on_trace()
         sg = _make_sg(meta, arrs)
         return bsp.run(make_step(sg), st0, max_supersteps, record_history,
                        raw_totals=True, pipeline=pipeline)

@@ -1,0 +1,411 @@
+"""Persistent graph service: a resident sharded graph, streaming
+mutations, and batched concurrent point queries.
+
+Everything else in the repo is batch — partition once, run one
+algorithm, exit.  This module keeps the partitioned, sharded graph LIVE
+on the mesh and serves traffic from it:
+
+* **Resident executors, zero re-traces.**  Every query program is built
+  ONCE per batch bucket against a frozen :class:`~repro.core.exec.
+  ShardProfile`; after warmup, admission never re-traces (the service
+  counts traces — the serve_graph demo asserts the counter stays flat
+  across batches AND across mutations).
+
+* **Streaming mutations with an epoch barrier.**  ``mutate()`` enqueues
+  an :class:`~repro.graph.structs.EdgeDelta`; the next ``pump()`` folds
+  every pending delta into the flat csr layout (``fold_delta`` — no
+  re-partition, perm pinned), bumps the graph epoch, and re-pads the
+  shard arrays to the frozen profile.  Queries are only served BETWEEN
+  folds, so every in-flight query reads exactly one epoch's snapshot —
+  never a mix.
+
+* **Query batching, coalescing, and an epoch-keyed result cache.**
+  Queries are admitted a batch at a time; duplicate (kind, source)
+  pairs in a batch collapse to one executor lane; results are cached
+  per (epoch, kind, source) so repeats are free until the next
+  mutation invalidates them (by key, not by flushing).
+
+* **One compiled executor per bucket, three query kinds.**  Landmark /
+  batched SSSP and personalized PageRank share a single unified BSP
+  step: per-query source columns ride the trailing feature axis as
+  ``(lanes, Q)`` blocks (the PR-8 vector-payload path), so a 64-query
+  batch costs one BSP run, not 64.  Batch sizes are padded up to fixed
+  buckets (default 4/16/64) with dummy lanes so the executor cache is
+  tiny and admission never compiles.  Ego-component lookups are served
+  from per-epoch Hash-Min labels computed lazily ONCE per epoch on a
+  resident profile-stable program.
+
+The client protocol is the ``Query`` / ``QueryResult`` dataclass pair;
+:class:`GraphClient` speaks it over a direct method call (a socket
+transport would carry the same messages — the service loop is already
+single-writer round-based, exactly like ``launch/serve_model.py``'s
+request loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.api import Engine, EngineConfig
+from repro.core import exec as exec_mod
+from repro.core.channels import broadcast
+from repro.core.plan import identity_of
+from repro.graph import structs
+
+KINDS = ("sssp", "ppr", "ego")
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """A point query against the resident graph.  ``source`` is an
+    ORIGINAL vertex id; ``kind`` one of ``sssp`` (distances from
+    source), ``ppr`` (personalized PageRank mass seeded at source) or
+    ``ego`` (the source's component root + size)."""
+    kind: str
+    source: int
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """``value``: (n,) float32 per-original-vertex distances (sssp) or
+    ppr mass, or an ``(root, size)`` pair (ego).  ``epoch`` names the
+    graph snapshot the answer was computed on; ``cached`` marks an
+    epoch-keyed cache hit (no executor lanes spent)."""
+    query: Query
+    epoch: int
+    value: Any
+    cached: bool = False
+
+
+class GraphService:
+    """Resident graph + admission queue + bucketed batch executors.
+
+    Single-writer, round-based: ``pump()`` alternates [fold pending
+    mutations -> bump epoch] with [serve one admitted batch], which IS
+    the mutation epoch barrier — a batch can never straddle a fold.
+    """
+
+    def __init__(self, graph: structs.Graph, M: int = 32,
+                 tau: Optional[int] = None,
+                 config: Optional[EngineConfig] = None,
+                 buckets: Sequence[int] = (4, 16, 64),
+                 ppr_alpha: float = 0.15, ppr_iters: int = 20,
+                 max_supersteps: int = 512,
+                 profile_slack: float = 1.5, seed: int = 0):
+        if config is None:
+            config = EngineConfig(layout="csr", balance="edges", devices=1)
+        if config.layout != "csr" or config.balance == "split":
+            raise ValueError("the resident service needs layout='csr' "
+                             "and balance in ('hash', 'edges') — the "
+                             "ShardProfile restrictions")
+        if config.backend != "dense":
+            raise ValueError("the resident service runs backend='dense' "
+                             "(plan tables are content-shaped and would "
+                             "re-trace on every fold)")
+        self.engine = Engine(config)
+        self.devices = config.devices if config.devices is not None else 1
+        self.g = graph
+        self.pg = self.engine.partition(graph, M, tau=tau, seed=seed)
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.ppr_alpha = float(ppr_alpha)
+        self.ppr_iters = int(ppr_iters)
+        self.max_supersteps = int(max_supersteps)
+        self.profile_slack = float(profile_slack)
+        self.profile = exec_mod.shard_profile(self.pg, self.devices,
+                                              slack=profile_slack)
+        self.arrays = exec_mod.reshard_arrays(self.pg, self.devices,
+                                              self.profile)
+        self.epoch = 0
+        self.traces = 0          # Python-side count of executor traces
+        self.last_batch: Dict[str, Any] = {}
+        self.last_pump: Dict[str, Any] = {}
+        self._execs: Dict[int, Tuple] = {}   # bucket -> (fn, stats_shape)
+        self._cc: Optional[Tuple] = None     # resident Hash-Min program
+        self._labels: Optional[Tuple] = None  # (epoch, root, size) arrays
+        self._queue: List[Tuple[int, Query]] = []
+        self._results: Dict[int, QueryResult] = {}
+        self._cache: Dict[Tuple, Any] = {}
+        self._pending: List[structs.EdgeDelta] = []
+        self._next_ticket = 0
+        # every query needs a real relabeled slot for its dummy lanes
+        self._dummy_src = int(self.pg.perm[0])
+
+    # -- client-facing surface -------------------------------------------
+
+    def submit(self, queries: Sequence[Query]) -> List[int]:
+        """Enqueue queries; returns their tickets (serve with pump())."""
+        tickets = []
+        for q in queries:
+            if q.kind not in KINDS:
+                raise ValueError(f"unknown query kind {q.kind!r}")
+            if not (0 <= q.source < self.pg.n):
+                raise ValueError(f"source {q.source} outside the vertex "
+                                 f"universe [0, {self.pg.n})")
+            t = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append((t, q))
+            tickets.append(t)
+        return tickets
+
+    def mutate(self, delta: structs.EdgeDelta) -> None:
+        """Enqueue a streaming edge delta; folded at the next pump()
+        BEFORE any queued query is served (the epoch barrier)."""
+        self._pending.append(delta)
+
+    def take_result(self, ticket: int) -> QueryResult:
+        return self._results.pop(ticket)
+
+    def pump(self) -> int:
+        """One service round: fold pending mutations, then serve every
+        admitted query (in bucket-bounded slices).  Returns the number
+        of results produced."""
+        self._fold_pending()
+        served = 0
+        self.last_pump = {"slices": 0, "lanes_sssp": 0, "lanes_ppr": 0,
+                          "n_supersteps": 0, "epoch": self.epoch}
+        while self._queue:
+            maxb = self.buckets[-1]
+            batch: List[Tuple[int, Query]] = []
+            lanes = {"sssp": set(), "ppr": set()}
+            while self._queue:
+                t, q = self._queue[0]
+                if q.kind in lanes:
+                    lanes[q.kind].add(q.source)
+                    if max(len(lanes["sssp"]), len(lanes["ppr"])) > maxb:
+                        break
+                batch.append(self._queue.pop(0))
+            self._serve_batch(batch)
+            served += len(batch)
+        return served
+
+    def warmup(self) -> None:
+        """Build + trace every bucket executor and the component program
+        with dummy lanes, so no later admission ever compiles."""
+        for b in self.buckets:
+            self._run_exec(b, [self._dummy_src], [self._dummy_src])
+        self._labels_now()
+
+    # -- mutation folding (the epoch barrier) ----------------------------
+
+    def _fold_pending(self) -> None:
+        if not self._pending:
+            return
+        for d in self._pending:
+            self.pg = structs.fold_delta(self.pg, d)
+            self.g = structs.apply_delta(self.g, d)
+        self._pending = []
+        self.epoch += 1
+        self._labels = None
+        # stale cache keys can never hit again; drop them to stay small
+        self._cache = {k: v for k, v in self._cache.items()
+                       if k[0] == self.epoch}
+        try:
+            self.arrays = exec_mod.reshard_arrays(self.pg, self.devices,
+                                                  self.profile)
+        except exec_mod.ProfileOverflow:
+            # the graph outgrew its envelope: freeze a bigger one and
+            # drop the resident programs (they re-warm lazily)
+            self.profile = exec_mod.shard_profile(
+                self.pg, self.devices, slack=self.profile_slack)
+            self.arrays = exec_mod.reshard_arrays(self.pg, self.devices,
+                                                  self.profile)
+            self._execs.clear()
+            self._cc = None
+
+    # -- the unified batched SSSP + PPR executor -------------------------
+
+    def _bucket_for(self, k: int) -> int:
+        for b in self.buckets:
+            if k <= b:
+                return b
+        return self.buckets[-1]
+
+    def _count_trace(self) -> None:
+        self.traces += 1
+
+    def _make_query_step(self):
+        cfg = self.engine.config
+        alpha, iters = self.ppr_alpha, self.ppr_iters
+
+        def make_step(g):
+            def step(state, i):
+                dist, dact, pr, restart = state
+                # landmark SSSP: Q distance columns ride the feature axis
+                inbox_d, s1 = broadcast(g, dist, dact, op="min",
+                                        relay="add_w",
+                                        use_mirroring=cfg.use_mirroring,
+                                        backend=cfg.backend)
+                upd = g.vmask[..., None] & (inbox_d < dist)
+                dist = jnp.where(upd, inbox_d, dist)
+                dact = jnp.any(upd, axis=-1)
+                # personalized PageRank: power iteration on the same
+                # superstep, frozen after exactly ``iters`` iterations
+                deg = jnp.maximum(g.deg, 1)[..., None]
+                contrib = jnp.where(g.vmask[..., None], pr / deg, 0.0)
+                pact = g.vmask & (g.deg > 0)
+                inbox_p, s2 = broadcast(g, contrib, pact, op="sum",
+                                        use_mirroring=cfg.use_mirroring,
+                                        backend=cfg.backend)
+                pr_new = jnp.where(g.vmask[..., None],
+                                   alpha * restart
+                                   + (1 - alpha) * inbox_p, 0.0)
+                pr = jnp.where(i < iters, pr_new, pr)
+                stats = {k: s1[k] + s2[k] for k in s1}
+                halted = (~g.gany(upd)) & (i + 1 >= iters)
+                return (dist, dact, pr, restart), halted, stats
+            return step
+        return make_step
+
+    def _query_state(self, s_rel: np.ndarray, p_rel: np.ndarray):
+        """Initial state for relabeled source slots (already padded to
+        the bucket width)."""
+        pg = self.pg
+        n_pad, qs, qp = pg.n_pad, len(s_rel), len(p_rel)
+        vm = np.asarray(pg.vmask).reshape(-1)
+        dist0 = np.full((n_pad, qs), np.inf, np.float32)
+        dist0[s_rel, np.arange(qs)] = 0.0
+        dact0 = np.zeros(n_pad, bool)
+        dact0[s_rel] = True
+        restart = np.zeros((n_pad, qp), np.float32)
+        restart[p_rel, np.arange(qp)] = 1.0
+        shape = (pg.M, pg.n_loc)
+        return (jnp.asarray(dist0.reshape(shape + (qs,))),
+                jnp.asarray((dact0 & vm).reshape(shape)),
+                jnp.asarray(restart.reshape(shape + (qp,))),
+                jnp.asarray(restart.reshape(shape + (qp,))))
+
+    def _run_exec(self, b: int, s_rel: List[int], p_rel: List[int]):
+        """Run the bucket-``b`` executor on padded source lists; returns
+        (dist (n_pad, b), ppr (n_pad, b), stats, n_supersteps)."""
+        pad = lambda xs: np.asarray(   # noqa: E731
+            list(xs) + [self._dummy_src] * (b - len(xs)), np.int64)
+        state0 = self._query_state(pad(s_rel), pad(p_rel))
+        if b not in self._execs:
+            fn, _, stats_shape = exec_mod.build_sharded(
+                self.pg, self._make_query_step(), state0,
+                self.max_supersteps, devices=self.devices,
+                profile=self.profile, on_trace=self._count_trace)
+            self._execs[b] = (fn, stats_shape)
+        fn, stats_shape = self._execs[b]
+        st, acc, n, _ = fn(self.arrays, state0)
+        dist = np.asarray(st[0]).reshape(self.pg.n_pad, b)
+        pr = np.asarray(st[2]).reshape(self.pg.n_pad, b)
+        stats = exec_mod.finalize_stats(acc, stats_shape)
+        return dist, pr, stats, int(n)
+
+    # -- per-epoch component labels (ego lookups) ------------------------
+
+    def _labels_now(self):
+        if self._labels is not None and self._labels[0] == self.epoch:
+            return self._labels
+        if self._cc is None:
+            cfg = self.engine.config
+            imax = identity_of("min", jnp.int32)
+
+            def make_step(g):
+                def step(state, i):
+                    minv, active = state
+                    inbox, stats = broadcast(
+                        g, minv, active, op="min",
+                        use_mirroring=cfg.use_mirroring,
+                        backend=cfg.backend)
+                    upd = g.vmask & (inbox < minv)
+                    new = jnp.where(upd, inbox, minv)
+                    return (new, upd), ~g.gany(upd), stats
+                return step
+
+            ids = self.pg.local_ids().astype(jnp.int32)
+            state0 = (jnp.where(self.pg.vmask, ids, imax), self.pg.vmask)
+            fn, _, stats_shape = exec_mod.build_sharded(
+                self.pg, make_step, state0, self.max_supersteps,
+                devices=self.devices, profile=self.profile,
+                on_trace=self._count_trace)
+            self._cc = (fn, state0, stats_shape)
+        fn, state0, _ = self._cc
+        st, _, _, _ = fn(self.arrays, state0)
+        root = structs.canonical_labels(self.pg, st[0])  # (n,) min orig id
+        _, inv, counts = np.unique(root, return_inverse=True,
+                                   return_counts=True)
+        self._labels = (self.epoch, root, counts[inv])
+        return self._labels
+
+    # -- batch serving ----------------------------------------------------
+
+    def _serve_batch(self, batch: List[Tuple[int, Query]]) -> None:
+        pre_cached = {(self.epoch, q.kind, q.source) for _, q in batch
+                      if (self.epoch, q.kind, q.source) in self._cache}
+        need: Dict[str, List[int]] = {"sssp": [], "ppr": []}
+        for _, q in batch:
+            key = (self.epoch, q.kind, q.source)
+            if key in self._cache or q.kind == "ego":
+                continue
+            if q.source not in need[q.kind]:
+                need[q.kind].append(q.source)
+        n_lanes = max(len(need["sssp"]), len(need["ppr"]))
+        if n_lanes:
+            b = self._bucket_for(n_lanes)
+            s_rel = [int(self.pg.perm[v]) for v in need["sssp"]]
+            p_rel = [int(self.pg.perm[v]) for v in need["ppr"]]
+            dist, pr, stats, n = self._run_exec(b, s_rel, p_rel)
+            # per-query original-id-order vectors
+            dists = dist[self.pg.perm]   # (n, b)
+            prs = pr[self.pg.perm]
+            for j, v in enumerate(need["sssp"]):
+                self._cache[(self.epoch, "sssp", v)] = dists[:, j].copy()
+            for j, v in enumerate(need["ppr"]):
+                self._cache[(self.epoch, "ppr", v)] = prs[:, j].copy()
+            self.last_batch = {"bucket": b, "epoch": self.epoch,
+                               "lanes_sssp": len(s_rel),
+                               "lanes_ppr": len(p_rel),
+                               "n_supersteps": n, "stats": stats}
+            lp = self.last_pump
+            lp["slices"] += 1
+            lp["lanes_sssp"] += len(s_rel)
+            lp["lanes_ppr"] += len(p_rel)
+            lp["n_supersteps"] += n
+        if any(q.kind == "ego" for _, q in batch):
+            _, root, size = self._labels_now()
+            for _, q in batch:
+                if q.kind == "ego":
+                    self._cache[(self.epoch, "ego", q.source)] = (
+                        int(root[q.source]), int(size[q.source]))
+        for t, q in batch:
+            key = (self.epoch, q.kind, q.source)
+            self._results[t] = QueryResult(
+                query=q, epoch=self.epoch, value=self._cache[key],
+                cached=key in pre_cached)
+
+    # convenience for tests / benchmarks
+    def snapshot_graph(self) -> structs.Graph:
+        """The host-side edge list of the CURRENT epoch (reference
+        oracle input)."""
+        return self.g
+
+
+class GraphClient:
+    """In-process client speaking the Query/QueryResult protocol.  The
+    transport is a direct call into the service's admission queue — a
+    remote transport would serialize the same dataclasses."""
+
+    def __init__(self, service: GraphService):
+        self.service = service
+
+    def request(self, queries: Sequence[Query]) -> List[QueryResult]:
+        """Submit a batch and drive the service until every answer is
+        in; results come back in submission order."""
+        tickets = self.service.submit(queries)
+        while any(t not in self.service._results for t in tickets):
+            self.service.pump()
+        return [self.service.take_result(t) for t in tickets]
+
+    def sssp(self, source: int) -> QueryResult:
+        return self.request([Query("sssp", source)])[0]
+
+    def ppr(self, source: int) -> QueryResult:
+        return self.request([Query("ppr", source)])[0]
+
+    def ego(self, source: int) -> QueryResult:
+        return self.request([Query("ego", source)])[0]

@@ -288,7 +288,8 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
               seed: int = 0, layout: str = "padded",
               balance: str = "hash",
               split_factor: float = 1.2,
-              hosts: Optional[int] = None) -> PartitionedGraph:
+              hosts: Optional[int] = None,
+              perm: Optional[np.ndarray] = None) -> PartitionedGraph:
     """Partition ``g`` over M workers with mirroring threshold ``tau``
     (None => mirroring disabled, i.e. tau = inf).
 
@@ -313,6 +314,12 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     maps worker blocks onto the mesh.  Placement only: results are
     bitwise identical to the host-oblivious partition after
     ``canonical_labels``.
+
+    ``perm`` pins the vertex relabeling (``new_id = perm[old_id]``)
+    instead of deriving it from ``seed``/``balance``/``hosts`` — used by
+    the delta-fold reference path and parity tests, where the mutated
+    graph must land in exactly the placement of an existing partition.
+    The host-affinity regroup is skipped too: an explicit perm is final.
     """
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; use one of {LAYOUTS}")
@@ -324,12 +331,18 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
                          'use layout="csr"')
     rng = np.random.RandomState(seed)
     n_loc = -(-g.n // M)
-    if balance == "hash":
+    pinned_perm = perm is not None
+    if pinned_perm:
+        perm = np.asarray(perm, np.int64)
+        if perm.shape != (g.n,):
+            raise ValueError(f"perm must have shape ({g.n},), got "
+                             f"{perm.shape}")
+    elif balance == "hash":
         perm = rng.permutation(g.n).astype(np.int64)
     else:
         perm = _balanced_perm(g, M, n_loc, tau)
     n_ids = M * n_loc
-    if hosts is not None and hosts > 1:
+    if hosts is not None and hosts > 1 and not pinned_perm:
         if M % hosts:
             raise ValueError(f"M={M} workers must divide over "
                              f"hosts={hosts}")
@@ -500,4 +513,360 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
         phys_log=phys_log, phys_eg_off=phys_eg, phys_all_off=phys_all,
         phys_mir_off=phys_mir, eg_pw=eg_pw, all_pw=all_pw, mir_pw=mir_pw,
         pair_counts=pair_counts, hosts=hosts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming mutations: delta-CSR segments folded into the flat layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EdgeDelta:
+    """A streaming mutation batch, in ORIGINAL vertex-id space.
+
+    ``add_*`` are appended as-is (parallel edges allowed, like the base
+    edge list); ``rem_*`` remove every stored edge matching the (src,
+    dst) pair, whatever its weight.  The vertex-id universe is fixed at
+    partition time: deltas may only reference ids < n (size the graph
+    with isolated vertices up front to "add" vertices later).
+    """
+    add_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    add_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    add_w: Optional[np.ndarray] = None
+    rem_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    rem_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+
+    def symmetrized(self) -> "EdgeDelta":
+        """Both directions of every add and removal (for graphs stored
+        symmetrized).  No dedup: don't add (u, v) and (v, u) both."""
+        w = None if self.add_w is None else np.concatenate([self.add_w] * 2)
+        return EdgeDelta(
+            add_src=np.concatenate([self.add_src, self.add_dst]),
+            add_dst=np.concatenate([self.add_dst, self.add_src]),
+            add_w=w,
+            rem_src=np.concatenate([self.rem_src, self.rem_dst]),
+            rem_dst=np.concatenate([self.rem_dst, self.rem_src]))
+
+
+def apply_delta(g: Graph, delta: EdgeDelta) -> Graph:
+    """Host reference mutation: kept edges in original order, adds
+    appended.  ``fold_delta`` on a partition of ``g`` must equal
+    ``partition(apply_delta(g, delta), ..., perm=pg.perm)``."""
+    keep = np.ones(g.m, bool)
+    if len(delta.rem_src):
+        rkey = (np.asarray(delta.rem_src, np.int64) * g.n
+                + np.asarray(delta.rem_dst, np.int64))
+        keep = ~np.isin(g.src.astype(np.int64) * g.n + g.dst, rkey)
+    a_src = np.asarray(delta.add_src, np.int64)
+    a_dst = np.asarray(delta.add_dst, np.int64)
+    src = np.concatenate([g.src[keep], a_src])
+    dst = np.concatenate([g.dst[keep], a_dst])
+    if g.weight is None and delta.add_w is None:
+        return Graph(g.n, src, dst, None)
+    w_old = (g.weight if g.weight is not None
+             else np.ones(g.m, np.float32))
+    a_w = (np.asarray(delta.add_w, np.float32) if delta.add_w is not None
+           else np.ones(len(a_src), np.float32))
+    return Graph(g.n, src, dst,
+                 np.concatenate([w_old[keep], a_w]).astype(np.float32))
+
+
+def _graph_of(pg: PartitionedGraph) -> Graph:
+    """Reconstruct the original-id-space edge list stored in ``pg`` (csr:
+    exact original within-worker order; padded: owner-grouped order)."""
+    if pg.layout == "csr":
+        s_new = np.asarray(pg.all_src, np.int64)
+        d_new = np.asarray(pg.all_dst, np.int64)
+        w = np.asarray(pg.all_w, np.float32)
+    else:
+        m = np.asarray(pg.all_mask)
+        row = np.nonzero(m)[0]
+        s_new = row * pg.n_loc + np.asarray(pg.all_src)[m].astype(np.int64)
+        d_new = np.asarray(pg.all_dst)[m].astype(np.int64)
+        w = np.asarray(pg.all_w)[m].astype(np.float32)
+    return Graph(pg.n, pg.inv_perm[s_new], pg.inv_perm[d_new], w)
+
+
+def _fold_rebuild(pg: PartitionedGraph, delta: EdgeDelta
+                  ) -> PartitionedGraph:
+    """Reference fold: materialize the mutated edge list and re-partition
+    under the PINNED perm (placement identical, so resident executors
+    keep their shapes).  Used for the padded layout and balance="split",
+    whose physical shard boundaries are a global function of the loads."""
+    g2 = apply_delta(_graph_of(pg), delta)
+    return partition(g2, pg.M, tau=pg.tau, layout=pg.layout,
+                     balance=pg.balance, split_factor=pg.split_factor,
+                     hosts=pg.hosts, perm=pg.perm)
+
+
+def fold_delta(pg: PartitionedGraph, delta: EdgeDelta) -> PartitionedGraph:
+    """Fold a streaming edge delta into the flat csr layout WITHOUT
+    re-running ``partition()`` — the serving-path mutation primitive.
+
+    The vertex relabeling (``perm``), worker count, ``n_loc``, ``tau``
+    and ``vmask`` are all preserved, so a resident sharded executor built
+    on ``pg`` keeps its compiled shapes (modulo edge-count growth, which
+    ``core/exec.ShardProfile`` absorbs).  The incremental work is O(E)
+    passes plus O(|delta| log |delta|) sorts — never the O(E log E)
+    global sorts or the greedy LPT assignment of a fresh ``partition()``:
+
+    * full adjacency: removals are mask-compacted in place (kept edges
+      stay owner-grouped in their original relative order), adds are
+      counting-sorted by owner and appended to each owner's segment —
+      exactly where a fresh stable owner-sort of [kept..., adds...]
+      would put them, so the csr arrays match a fresh partition
+      BITWISE;
+    * Ch_msg (eg): recompacted from the merged adjacency by the new
+      mirrored mask (degree flips across tau move edges between the
+      channels);
+    * mirror csr: kept mirror edges are already (dst_worker, src, dst)-
+      sorted; the pool of incoming edges (adds with mirrored sources +
+      lo->hi flipped vertices' edges) is sorted alone and merged via
+      two searchsorted passes;
+    * ``mir_nworkers`` (Theorem-1 counts): copied for untouched
+      vertices, recomputed from the merged edges only for sources the
+      delta or a tau flip touched;
+    * ``pair_counts`` caps: monotone UPPER bound — distinct added
+      (worker, dst) pairs increment, removals never decrement.  Caps
+      may over-provision after churn but can never under-admit (and an
+      under-capped exchange only costs overflow rounds, never
+      correctness); re-partition to re-tighten.
+
+    The padded layout and ``balance="split"`` fall back to the pinned-
+    perm rebuild (``_fold_rebuild``).
+    """
+    if pg.layout != "csr" or pg.balance == "split":
+        return _fold_rebuild(pg, delta)
+    M, n_loc = pg.M, pg.n_loc
+    n_ids = M * n_loc
+    perm = pg.perm
+    tau_eff = pg.tau
+
+    a_src = perm[np.asarray(delta.add_src, np.int64)]
+    a_dst = perm[np.asarray(delta.add_dst, np.int64)]
+    a_w = (np.asarray(delta.add_w, np.float32)
+           if delta.add_w is not None
+           else np.ones(len(a_src), np.float32))
+    rkey = None
+    if len(delta.rem_src):
+        rkey = np.unique(perm[np.asarray(delta.rem_src, np.int64)]
+                         * n_ids
+                         + perm[np.asarray(delta.rem_dst, np.int64)])
+        # endpoint tables + hashed-key bitmap prefilter: the exact
+        # (sorted-rkey) probe only runs on edges sharing BOTH endpoints
+        # with some removal — np.isin would sort all E keys every fold
+        t_src = np.zeros(n_ids, bool)
+        t_dst = np.zeros(n_ids, bool)
+        t_src[(rkey // n_ids)] = True
+        t_dst[(rkey % n_ids)] = True
+        _hb = np.uint64(64 - 22)            # 4M-entry bitmap
+        h_mul = np.uint64(0x9E3779B97F4A7C15)
+        h_bit = np.zeros(1 << 22, bool)
+        h_bit[((rkey.astype(np.uint64) * h_mul)
+               >> _hb).astype(np.int64)] = True
+
+    def _removed(s, d):
+        """Indices into (s, d) of edges matching a removal key."""
+        if rkey is None or not len(s):
+            return np.zeros(0, np.int64)
+        c1 = np.flatnonzero(t_src[s])
+        ci = c1[t_dst[d[c1]]]
+        ck = s[ci].astype(np.int64) * n_ids + d[ci]
+        hh = h_bit[((ck.astype(np.uint64) * h_mul)
+                    >> _hb).astype(np.int64)]
+        ci, ck = ci[hh], ck[hh]
+        p = np.searchsorted(rkey, ck)
+        p[p == len(rkey)] = 0           # ck > rkey[-1] there: no match
+        return ci[rkey[p] == ck]
+
+    all_src = np.asarray(pg.all_src)          # int32, zero-copy views
+    all_dst = np.asarray(pg.all_dst)
+    all_w = np.asarray(pg.all_w)
+    all_off = np.asarray(pg.all_off, np.int64)
+    rem_idx = _removed(all_src, all_dst)
+    keep = np.ones(len(all_src), bool)
+    keep[rem_idx] = False
+
+    deg_old = np.asarray(pg.deg, np.int64).reshape(-1)
+    deg_new = (deg_old
+               - np.bincount(all_src[rem_idx], minlength=n_ids)
+               + np.bincount(a_src, minlength=n_ids))
+
+    # ---- merged full adjacency: kept edges compact in place, adds
+    #      counting-sorted by owner and appended per owner segment ------
+    rem_owner = np.searchsorted(all_off, rem_idx, side="right") - 1
+    a_owner = a_src // n_loc
+    ao = np.argsort(a_owner, kind="stable")
+    a_src, a_dst, a_w, a_owner = a_src[ao], a_dst[ao], a_w[ao], a_owner[ao]
+    kept_cnt = np.diff(all_off) - np.bincount(rem_owner, minlength=M)
+    add_cnt = np.bincount(a_owner, minlength=M)
+    ad_off = np.concatenate([[0], np.cumsum(add_cnt)]).astype(np.int64)
+    new_off = np.concatenate(
+        [[0], np.cumsum(kept_cnt + add_cnt)]).astype(np.int64)
+    e_new = int(new_off[-1])
+    a_src32 = a_src.astype(np.int32)
+    a_dst32 = a_dst.astype(np.int32)
+    no_rem = not len(rem_idx)
+
+    def _merge(vals, add, dtype):
+        # [kept_0, add_0, kept_1, add_1, ...]: exactly where a fresh
+        # stable owner-sort of [kept..., adds...] lands them; segment-
+        # wise so the compaction temp stays cache-resident
+        out = np.empty(e_new, dtype)
+        for w_ in range(M):
+            o, kk = new_off[w_], kept_cnt[w_]
+            sl = slice(all_off[w_], all_off[w_ + 1])
+            out[o:o + kk] = vals[sl] if no_rem else vals[sl][keep[sl]]
+            out[o + kk:new_off[w_ + 1]] = add[ad_off[w_]:ad_off[w_ + 1]]
+        return out
+
+    na_src = _merge(all_src, a_src32, np.int32)
+    na_dst = _merge(all_dst, a_dst32, np.int32)
+    na_w = _merge(all_w, a_w, np.float32)
+
+    # ---- pair_counts: monotone upper bound on the caps -----------------
+    pair_counts = pg.pair_counts.copy()
+    if len(a_src):
+        akey = np.unique(a_owner * np.int64(n_ids) + a_dst)
+        np.add.at(pair_counts,
+                  ((akey // n_ids).astype(np.int64),
+                   ((akey % n_ids) // n_loc).astype(np.int64)), 1)
+
+    if int(deg_old.max()) < tau_eff and int(deg_new.max()) < tau_eff:
+        # no vertex is mirrored before or after the fold: Ch_msg IS the
+        # full adjacency (exactly as in a fresh partition) and every
+        # mirror field is the empty sentinel pg already carries
+        src_j = jnp.asarray(na_src)
+        dst_j = jnp.asarray(na_dst)
+        w_j = jnp.asarray(na_w)
+        mask_j = jnp.asarray(np.ones(e_new, bool))
+        return PartitionedGraph(
+            n=pg.n, M=M, n_loc=n_loc, tau=tau_eff, perm=perm,
+            inv_perm=pg.inv_perm,
+            eg_src=src_j, eg_dst=dst_j, eg_mask=mask_j, eg_w=w_j,
+            all_src=src_j, all_dst=dst_j, all_mask=mask_j, all_w=w_j,
+            mir_ids=pg.mir_ids, mir_slot_of=pg.mir_slot_of,
+            mir_nworkers=pg.mir_nworkers, mir_esrc=pg.mir_esrc,
+            mir_edst=pg.mir_edst, mir_emask=pg.mir_emask,
+            mir_ew=pg.mir_ew,
+            deg=jnp.asarray(deg_new.astype(np.int32).reshape(M, n_loc)),
+            vmask=pg.vmask,
+            layout="csr", eg_off=new_off, all_off=new_off,
+            mir_eoff=pg.mir_eoff,
+            balance=pg.balance, split_factor=pg.split_factor, M_phys=M,
+            pair_counts=pair_counts, hosts=pg.hosts)
+
+    mirrored_old = deg_old >= tau_eff
+    mirrored_new = deg_new >= tau_eff
+    flip_up = mirrored_new & ~mirrored_old
+
+    # ---- Ch_msg: recompact from the merged adjacency -------------------
+    lo_e = ~mirrored_new[na_src]
+    eg_off_n = np.concatenate(
+        [[0], np.cumsum(np.bincount((na_src // n_loc)[lo_e],
+                                    minlength=M))]).astype(np.int64)
+
+    # ---- mirror csr: merge kept (already sorted) with the pool ---------
+    mir_ids_old = np.asarray(pg.mir_ids, np.int64)
+    m_esrc_old = np.asarray(pg.mir_esrc, np.int64)
+    m_gsrc_old = (mir_ids_old[m_esrc_old] if len(m_esrc_old)
+                  else np.zeros(0, np.int64))
+    m_gdst_old = np.asarray(pg.mir_edst, np.int64)
+    m_w_old = np.asarray(pg.mir_ew, np.float32)
+    rem_mir = np.zeros(len(m_gsrc_old), bool)
+    rem_mir[_removed(m_gsrc_old, m_gdst_old)] = True
+    flip_dn_src = mirrored_old & ~mirrored_new
+    keep_mir = ~rem_mir & ~flip_dn_src[m_gsrc_old]
+
+    eg_src_old = np.asarray(pg.eg_src, np.int64)
+    eg_dst_old = np.asarray(pg.eg_dst, np.int64)
+    eg_w_old = np.asarray(pg.eg_w, np.float32)
+    # removal membership only matters on the few flipped-up sources
+    fu_idx = np.flatnonzero(flip_up[eg_src_old])
+    fu_keep = np.ones(len(fu_idx), bool)
+    fu_keep[_removed(eg_src_old[fu_idx], eg_dst_old[fu_idx])] = False
+    up_idx = fu_idx[fu_keep]
+    a_hi = mirrored_new[a_src]
+    p_gsrc = np.concatenate([eg_src_old[up_idx], a_src[a_hi]])
+    p_gdst = np.concatenate([eg_dst_old[up_idx], a_dst[a_hi]])
+    p_w = np.concatenate([eg_w_old[up_idx], a_w[a_hi]]).astype(np.float32)
+    # pool sorted by the mirror key (dst worker, src, dst); lexsort is
+    # stable so old-before-add tie order (= fresh partition order) holds
+    porder = np.lexsort((p_gdst, p_gsrc, p_gdst // n_loc))
+    p_gsrc, p_gdst, p_w = p_gsrc[porder], p_gdst[porder], p_w[porder]
+
+    def _mkey(s, d):
+        # composite (dst_worker, src, dst) key; fits int64 while
+        # M * n_ids^2 < 2^63 (n ~ 3e8 at M=64) — far beyond our scale
+        return (d // n_loc) * (n_ids * n_ids) + s * n_ids + d
+
+    kk = _mkey(m_gsrc_old[keep_mir], m_gdst_old[keep_mir])
+    pk = _mkey(p_gsrc, p_gdst)
+    n_k, n_p = len(kk), len(pk)
+    pos_kept = (np.arange(n_k, dtype=np.int64)
+                + np.searchsorted(pk, kk, side="left"))
+    pos_pool = (np.arange(n_p, dtype=np.int64)
+                + np.searchsorted(kk, pk, side="right"))
+    m_gsrc = np.empty(n_k + n_p, np.int64)
+    m_gdst = np.empty(n_k + n_p, np.int64)
+    m_w = np.empty(n_k + n_p, np.float32)
+    m_gsrc[pos_kept], m_gsrc[pos_pool] = m_gsrc_old[keep_mir], p_gsrc
+    m_gdst[pos_kept], m_gdst[pos_pool] = m_gdst_old[keep_mir], p_gdst
+    m_w[pos_kept], m_w[pos_pool] = m_w_old[keep_mir], p_w
+    m_downer = m_gdst // n_loc
+    hb_n = np.searchsorted(m_downer, np.arange(M + 1)).astype(np.int64)
+
+    mir_vertex_ids = np.flatnonzero(mirrored_new)
+    n_mir = max(len(mir_vertex_ids), 1)
+    mir_idx = np.full(n_ids, -1, np.int64)
+    mir_idx[mir_vertex_ids] = np.arange(len(mir_vertex_ids))
+    mir_ids_arr = np.full(n_mir, n_ids, np.int32)
+    mir_ids_arr[:len(mir_vertex_ids)] = mir_vertex_ids
+
+    # ---- Theorem-1 mirror counts: copy untouched, recount touched ------
+    touched = np.zeros(n_ids, bool)
+    touched[m_gsrc_old[rem_mir]] = True
+    touched[p_gsrc] = True
+    nworkers = np.zeros(n_mir, np.int64)
+    common = mirrored_old & mirrored_new & ~touched
+    cids = np.flatnonzero(common)
+    if len(cids):
+        old_slot = np.asarray(pg.mir_slot_of, np.int64).reshape(-1)
+        nworkers[mir_idx[cids]] = np.asarray(
+            pg.mir_nworkers, np.int64)[old_slot[cids]]
+    am = touched[m_gsrc]
+    if am.any():
+        pair = np.unique(m_gsrc[am] * np.int64(M) + m_downer[am])
+        cnt = np.bincount((pair // M).astype(np.int64), minlength=n_ids)
+        aff = np.flatnonzero(touched & mirrored_new)
+        nworkers[mir_idx[aff]] = cnt[aff]
+
+    return PartitionedGraph(
+        n=pg.n, M=M, n_loc=n_loc, tau=tau_eff, perm=perm,
+        inv_perm=pg.inv_perm,
+        eg_src=jnp.asarray(na_src[lo_e]),
+        eg_dst=jnp.asarray(na_dst[lo_e]),
+        eg_mask=jnp.asarray(np.ones(int(lo_e.sum()), bool)),
+        eg_w=jnp.asarray(na_w[lo_e]),
+        all_src=jnp.asarray(na_src),
+        all_dst=jnp.asarray(na_dst),
+        all_mask=jnp.asarray(np.ones(e_new, bool)),
+        all_w=jnp.asarray(na_w),
+        mir_ids=jnp.asarray(mir_ids_arr),
+        mir_slot_of=jnp.asarray(mir_idx.astype(np.int32)
+                                .reshape(M, n_loc)),
+        mir_nworkers=jnp.asarray(nworkers),
+        mir_esrc=jnp.asarray(mir_idx[m_gsrc].astype(np.int32)),
+        mir_edst=jnp.asarray(m_gdst.astype(np.int32)),
+        mir_emask=jnp.asarray(np.ones(n_k + n_p, bool)),
+        mir_ew=jnp.asarray(m_w),
+        deg=jnp.asarray(deg_new.astype(np.int32).reshape(M, n_loc)),
+        vmask=pg.vmask,
+        layout="csr", eg_off=eg_off_n, all_off=new_off, mir_eoff=hb_n,
+        balance=pg.balance, split_factor=pg.split_factor, M_phys=M,
+        pair_counts=pair_counts, hosts=pg.hosts,
     )

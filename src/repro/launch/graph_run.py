@@ -113,14 +113,8 @@ def main():
 
     # jax initializes on first repro import — after the flags above
     import numpy as np
-    from repro.algorithms.attr_bcast import attribute_broadcast
-    from repro.algorithms.hashmin import hashmin
-    from repro.algorithms.msf import msf
-    from repro.algorithms.pagerank import pagerank
-    from repro.algorithms.sssp import sssp
-    from repro.algorithms.sv import sv
+    from repro.api import Engine
     from repro.core.cost_model import straggler_report
-    from repro.graph.structs import partition
 
     g, pg, tau = build(args.graph, args.n, args.seed, args.workers, args.tau,
                        layout=args.layout, balance=args.balance,
@@ -151,75 +145,61 @@ def main():
             print(f"[balance] device edge-load max/mean="
                   f"{dl['max_over_mean']:.2f} over {dev_tag} devices")
 
-    t0 = time.time()
     mirror = not args.no_mirroring and tau is not None
     be = args.backend
-    if args.algo == "hashmin":
-        _, stats, n_ss = hashmin(pg, use_mirroring=mirror, backend=be,
-                                 devices=dev, pipeline=pipe)
-    elif args.algo == "pagerank":
-        _, stats, n_ss = pagerank(pg, n_iters=30, use_mirroring=mirror,
-                                  backend=be, devices=dev, pipeline=pipe)
-    elif args.algo == "sv":
-        _, stats, n_ss = sv(pg, backend=be, devices=dev, pipeline=pipe)
-    elif args.algo == "sssp":
+    eng = Engine(backend=be, layout=args.layout, balance=args.balance,
+                 split_factor=args.split_factor,
+                 hosts=args.hosts if args.hosts > 1 else None,
+                 devices=dev, pipeline=pipe, use_mirroring=mirror)
+
+    t0 = time.time()
+    if args.algo == "sssp":
         gw = make_graph(args.graph, args.n, args.seed)
         if gw.weight is None:
             gw.weight = np.ones(gw.m, np.float32)
-        gw = gw.symmetrized()
-        pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
-                        layout=args.layout, balance=args.balance,
-                        split_factor=args.split_factor,
-                        hosts=args.hosts if args.hosts > 1 else None)
-        _, stats, n_ss = sssp(pgw, int(pgw.perm[0]), use_mirroring=mirror,
-                              backend=be, devices=dev, pipeline=pipe)
-        pg = pgw
+        pg = eng.partition(gw.symmetrized(), args.workers, tau=tau,
+                           seed=args.seed)
+        res = eng.run("sssp", pg, source=int(pg.perm[0]))
     elif args.algo == "msf":
         gw = make_graph(args.graph, args.n, args.seed)
         if gw.weight is None:
             rng = np.random.RandomState(args.seed)
             gw.weight = rng.rand(gw.m).astype(np.float32) + 0.01
-        gw = gw.symmetrized()
-        pgw = partition(gw, args.workers, tau=None, seed=args.seed,
-                        layout=args.layout, balance=args.balance,
-                        split_factor=args.split_factor,
-                        hosts=args.hosts if args.hosts > 1 else None)
-        (res, stats, n_ss) = msf(pgw, backend=be, devices=dev,
-                                 pipeline=pipe)
-        print(f"[msf] total weight {float(res[1]):.2f}, "
-              f"{int(res[2])} edges")
-        pg = pgw
+        pg = eng.partition(gw.symmetrized(), args.workers, tau=None,
+                           seed=args.seed)
+        res = eng.run("msf", pg)
+        print(f"[msf] total weight {float(res.state[1]):.2f}, "
+              f"{int(res.state[2])} edges")
     elif args.algo == "gcn":
         from repro.core.gspmm import gspmm_sharded
-        from repro.train.gcn import normalize_adjacency, train_gcn
-        gw = make_graph(args.graph, args.n, args.seed).symmetrized()
-        gw = normalize_adjacency(gw)
-        pgw = partition(gw, args.workers, tau=tau, seed=args.seed,
-                        layout=args.layout, balance=args.balance,
-                        split_factor=args.split_factor,
-                        hosts=args.hosts if args.hosts > 1 else None)
-        params, losses = train_gcn(
-            pgw, feat_dim=args.feat_dim, hidden=args.hidden,
-            n_classes=args.classes, epochs=args.epochs, seed=args.seed,
-            backend=be, devices=dev or 1, use_mirroring=mirror,
-            pipeline=pipe)
+        from repro.train.gcn import normalize_adjacency
+        gw = normalize_adjacency(
+            make_graph(args.graph, args.n, args.seed).symmetrized())
+        pg = eng.partition(gw, args.workers, tau=tau, seed=args.seed)
+        res = eng.run("gcn", pg, feat_dim=args.feat_dim,
+                      hidden=args.hidden, n_classes=args.classes,
+                      epochs=args.epochs, seed=args.seed)
+        losses = res.history
         print(f"[gcn] F={args.feat_dim} hidden={args.hidden} "
               f"classes={args.classes}: loss "
               f"{losses[0]:.4f} -> {losses[-1]:.4f} over "
               f"{args.epochs} epochs")
         # message accounting for ONE aggregation join (the training step
         # runs 4 per epoch: 2 forward + 2 backward-cotangent joins)
-        _, stats = gspmm_sharded(pgw, "u_mul_e_sum", params["emb"],
-                                 devices=dev or 1, backend=be,
-                                 pipeline=pipe, use_mirroring=mirror)
-        n_ss = args.epochs
-        pg = pgw
-    else:
+        _, res.stats = gspmm_sharded(pg, "u_mul_e_sum",
+                                     res.state["emb"],
+                                     devices=dev or 1, backend=be,
+                                     pipeline=pipe, use_mirroring=mirror)
+    elif args.algo == "attr_bcast":
         import jax.numpy as jnp
-        attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc)
-        _, stats = attribute_broadcast(pg, attr, backend=be, devices=dev,
-                                       pipeline=pipe)
-        n_ss = 2
+        attr = jnp.arange(pg.n_pad,
+                          dtype=jnp.float32).reshape(pg.M, pg.n_loc)
+        res = eng.run("attr_bcast", pg, attr=attr)
+        res.n_supersteps = 2    # request + respond rounds
+    else:
+        params = {"n_iters": 30} if args.algo == "pagerank" else {}
+        res = eng.run(args.algo, pg, **params)
+    stats, n_ss = res.stats, res.n_supersteps
     dt = time.time() - t0
 
     report_balance(pg)

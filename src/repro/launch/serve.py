@@ -1,79 +1,7 @@
-"""Serving driver: batched prefill + greedy decode with KV/SSM caches.
-
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2_1_3b \
-        --reduced --batch 4 --prompt-len 32 --gen 32
-"""
-from __future__ import annotations
-
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ARCH_IDS, get_config
-from repro.models import model_zoo as zoo
-from repro.models.transformer import ModelContext
-
-
-def run(arch: str, reduced: bool, batch: int, prompt_len: int, gen: int,
-        seed: int = 0):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    ctx = ModelContext(mesh=None, remat="none", q_chunk=max(prompt_len, 64))
-    key = jax.random.PRNGKey(seed)
-    params = zoo.init_params(cfg, key, 1, jnp.float32)
-    rng = np.random.RandomState(seed)
-    prompts = jnp.asarray(rng.randint(0, cfg.vocab, (batch, prompt_len)),
-                          jnp.int32)
-    enc = None
-    if cfg.enc_dec:
-        enc = jnp.asarray(rng.randn(batch, cfg.enc_seq, cfg.d_model),
-                          jnp.float32)
-
-    prefill = jax.jit(lambda p, t, e: zoo.prefill(
-        p, cfg, ctx, t, enc_embeds=e, max_len=prompt_len + gen))
-    decode = jax.jit(lambda p, t, c: zoo.decode_step(p, cfg, ctx, t, c))
-
-    t0 = time.time()
-    logits, cache = prefill(params, prompts, enc)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    for _ in range(gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
-    print(f"[serve] {arch}: batch={batch} prompt={prompt_len} gen={gen} "
-          f"in {dt:.2f}s ({batch * gen / dt:.1f} tok/s)")
-    print("[serve] sample generations (token ids):")
-    for b in range(min(batch, 2)):
-        print("  ", np.asarray(toks[b][:16]))
-    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
-    return toks
-
-
-def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama_1_1b", choices=ARCH_IDS)
-    # BooleanOptionalAction so --no-reduced exists: the old
-    # action="store_true" + default=True made the flag impossible to
-    # turn off from the command line
-    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
-                    default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    return ap
-
-
-def main():
-    args = build_parser().parse_args()
-    run(args.arch, args.reduced, args.batch, args.prompt_len, args.gen)
-
+"""Deprecated alias: the model-zoo serving driver moved to
+``repro.launch.serve_model`` (``serve_graph`` is the GRAPH service).
+``python -m repro.launch.serve`` keeps working for one release."""
+from repro.launch.serve_model import build_parser, main, run  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -87,12 +87,7 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
     integer-exact)."""
     import numpy as np
     import jax.numpy as jnp
-    from repro.algorithms.attr_bcast import attribute_broadcast
-    from repro.algorithms.hashmin import hashmin
-    from repro.algorithms.msf import msf
-    from repro.algorithms.pagerank import pagerank
-    from repro.algorithms.sssp import sssp
-    from repro.algorithms.sv import sv
+    from repro.api import Engine, config_of
     from repro.graph import generators as gen
     from repro.graph.structs import partition
 
@@ -104,33 +99,26 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
            for lay in layouts}
 
     def run_algo(algo, pg, backend, devices, pipe=False):
-        if algo == "hashmin":
-            l, s, nss = hashmin(pg, backend=backend, devices=devices,
-                                pipeline=pipe)
-            return {"exact": np.asarray(l)}, {}, s, int(nss)
+        # one Engine per cell: the config IS the cell coordinates
+        eng = Engine(config_of(pg, backend=backend, devices=devices,
+                               pipeline=pipe))
+        if algo == "attr_bcast":
+            attr = jnp.arange(pg.n_pad, dtype=jnp.float32
+                              ).reshape(pg.M, pg.n_loc) * 3
+            res = eng.run("attr_bcast", pg, attr=attr)
+            return {"exact": np.asarray(res.state)}, {}, res.stats, 2
+        params = {"pagerank": dict(n_iters=8, tol=1e-12),
+                  "sssp": dict(source=int(pg.perm[0]))}.get(algo, {})
+        res = eng.run(algo, pg, **params)
         if algo == "pagerank":
-            pr, s, nss = pagerank(pg, n_iters=8, tol=1e-12,
-                                  backend=backend, devices=devices,
-                                  pipeline=pipe)
-            return {}, {"pr": np.asarray(pr)}, s, int(nss)
-        if algo == "sssp":
-            d, s, nss = sssp(pg, int(pg.perm[0]), backend=backend,
-                             devices=devices, pipeline=pipe)
-            return {"exact": np.asarray(d)}, {}, s, int(nss)
-        if algo == "sv":
-            l, s, nss = sv(pg, backend=backend, devices=devices,
-                           pipeline=pipe)
-            return {"exact": np.asarray(l)}, {}, s, int(nss)
+            return ({}, {"pr": np.asarray(res.state)}, res.stats,
+                    int(res.n_supersteps))
         if algo == "msf":
-            (lab, tw, ne), s, nss = msf(pg, backend=backend,
-                                        devices=devices, pipeline=pipe)
+            lab, tw, ne = res.state
             return ({"exact": np.asarray(lab), "ne": int(ne)},
-                    {"tw": float(tw)}, s, int(nss))
-        attr = jnp.arange(pg.n_pad, dtype=jnp.float32
-                          ).reshape(pg.M, pg.n_loc) * 3
-        ea, s = attribute_broadcast(pg, attr, devices=devices,
-                                    pipeline=pipe)
-        return {"exact": np.asarray(ea)}, {}, s, 2
+                    {"tw": float(tw)}, res.stats, int(res.n_supersteps))
+        return ({"exact": np.asarray(res.state)}, {}, res.stats,
+                int(res.n_supersteps))
 
     report = {"n": n, "M": M, "tau": tau, "balance": balance,
               "pipeline": bool(pipeline), "cells": {}}

@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import EngineConfig, RunResult
 from repro.core import gspmm
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
 
@@ -156,6 +157,25 @@ def make_gcn_step(cfg: OptConfig, backend: str = "dense",
         return step
 
     return mk
+
+
+def run(pg, config: EngineConfig | None = None, *, feat_dim: int = 32,
+        hidden: int = 64, n_classes: int = 8, epochs: int = 10,
+        lr: float = 1e-2, seed: int = 0,
+        params: Optional[dict] = None) -> RunResult:
+    """GCN training under an EngineConfig: ``state`` is the trained
+    params dict, ``history`` the loss trajectory, ``n_supersteps`` the
+    epoch count.  ``devices=None`` in the config maps to the D=1 mesh
+    (training always runs through the sharded executor)."""
+    cfg = config or EngineConfig()
+    params, losses = train_gcn(
+        pg, feat_dim=feat_dim, hidden=hidden, n_classes=n_classes,
+        epochs=epochs, lr=lr, seed=seed, backend=cfg.backend,
+        devices=cfg.devices if cfg.devices is not None else 1,
+        use_mirroring=cfg.use_mirroring, pipeline=cfg.pipeline,
+        params=params)
+    return RunResult(state=params, stats={}, n_supersteps=epochs,
+                     history=losses)
 
 
 def train_gcn(pg, feat_dim: int = 32, hidden: int = 64,

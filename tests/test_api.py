@@ -1,0 +1,85 @@
+"""The Engine front door: EngineConfig/RunResult round-trips and the
+deprecated positional-tuple wrappers staying value-identical to the
+canonical ``run()`` entry points."""
+import numpy as np
+import pytest
+
+from repro.api import ALGORITHMS, Engine, EngineConfig, RunResult, config_of
+from repro.graph import generators as gen
+from repro.graph.structs import partition
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    g = gen.powerlaw(160, avg_deg=5, seed=1, weighted=True).symmetrized()
+    return g, partition(g, 4, tau=8, seed=0, layout="csr")
+
+
+def test_engine_runs_every_algorithm(corpus):
+    g, pg = corpus
+    eng = Engine(config_of(pg))
+    params = {"sssp": dict(source=int(pg.perm[0])),
+              "pagerank": dict(n_iters=4, tol=0.0),
+              "gcn": dict(epochs=1, feat_dim=4, hidden=4, n_classes=2)}
+    import jax.numpy as jnp
+    attr = jnp.arange(pg.n_pad, dtype=jnp.float32).reshape(pg.M, pg.n_loc)
+    params["attr_bcast"] = dict(attr=attr)
+    for algo in ALGORITHMS:
+        if algo == "gcn":
+            continue  # needs a normalized graph; covered in test_gcn.py
+        res = eng.run(algo, pg, **params.get(algo, {}))
+        assert isinstance(res, RunResult)
+        assert isinstance(res.stats, dict)
+        assert res.n_supersteps >= 1
+
+
+def test_engine_partitions_graph_on_the_fly(corpus):
+    g, pg = corpus
+    eng = Engine(layout="csr")
+    res = eng.run("hashmin", g, M=4, tau=8)
+    ref = eng.run("hashmin", pg)
+    assert np.array_equal(np.asarray(res.state), np.asarray(ref.state))
+    with pytest.raises(ValueError):
+        eng.run("hashmin", g)          # Graph without M
+    with pytest.raises(ValueError):
+        eng.run("nope", pg)
+
+
+def test_config_of_mirrors_partition(corpus):
+    _, pg = corpus
+    cfg = config_of(pg, backend="pallas")
+    assert cfg.layout == pg.layout and cfg.balance == pg.balance
+    assert cfg.split_factor == pg.split_factor and cfg.hosts == pg.hosts
+    assert cfg.backend == "pallas"
+    # frozen: engines can only derive new configs, never mutate
+    with pytest.raises(Exception):
+        cfg.backend = "dense"
+
+
+def test_engine_overrides_compose():
+    eng = Engine(EngineConfig(backend="pallas"), pipeline=True)
+    assert eng.config.backend == "pallas" and eng.config.pipeline
+
+
+def test_legacy_wrappers_match_run_results(corpus):
+    """The deprecated tuple entry points are thin views of run()."""
+    _, pg = corpus
+    from repro.algorithms import hashmin as hm, pagerank as prm, sssp as ss
+    eng = Engine(config_of(pg))
+
+    labels, stats, n = hm.hashmin(pg)
+    res = eng.run("hashmin", pg)
+    assert np.array_equal(np.asarray(labels), np.asarray(res.state))
+    assert int(stats["msgs_total"]) == int(res.stats["msgs_total"])
+    assert int(n) == res.n_supersteps
+
+    pr, _, n_pr = prm.pagerank(pg, n_iters=4, tol=0.0)
+    res = eng.run("pagerank", pg, n_iters=4, tol=0.0)
+    assert np.allclose(np.asarray(pr), np.asarray(res.state))
+    assert int(n_pr) == res.n_supersteps
+
+    src = int(pg.perm[3])
+    dist, _, _ = ss.sssp(pg, src)
+    res = eng.run("sssp", pg, source=src)
+    assert np.array_equal(np.asarray(dist), np.asarray(res.state),
+                          equal_nan=True)

@@ -7,11 +7,20 @@ value and offered no way to turn it off — ``BooleanOptionalAction`` adds
 """
 import pytest
 
-from repro.launch import serve, train
+from repro.launch import serve, serve_model, train
 
 
-@pytest.mark.parametrize("build", [serve.build_parser, train.build_parser],
-                         ids=["serve", "train"])
+def test_serve_alias_reexports_serve_model():
+    # launch/serve.py is a deprecated alias for the renamed model-serving
+    # driver; both module paths must expose the same callables
+    assert serve.build_parser is serve_model.build_parser
+    assert serve.run is serve_model.run
+    assert serve.main is serve_model.main
+
+
+@pytest.mark.parametrize("build",
+                         [serve_model.build_parser, train.build_parser],
+                         ids=["serve_model", "train"])
 def test_reduced_round_trip(build):
     ap = build()
     assert ap.parse_args([]).reduced is True
@@ -26,8 +35,9 @@ def test_train_full_alias_still_disables():
     assert ap.parse_args(["--full", "--reduced"]).reduced is True
 
 
-@pytest.mark.parametrize("build", [serve.build_parser, train.build_parser],
-                         ids=["serve", "train"])
+@pytest.mark.parametrize("build",
+                         [serve_model.build_parser, train.build_parser],
+                         ids=["serve_model", "train"])
 def test_other_flags_survive_the_switch(build):
     ap = build()
     args = ap.parse_args(["--no-reduced", "--batch", "3"])

@@ -1,0 +1,270 @@
+"""The persistent graph service + the streaming delta fold.
+
+* ``fold_delta(pg, delta)`` must equal a full re-``partition()`` of the
+  mutated edge list with the SAME relabeling — exact array equality
+  (csr folds incrementally; padded/split rebuild under the pinned perm),
+  with ``pair_counts`` allowed to stay a monotone upper bound.
+* Queries can never straddle a mutation epoch: everything served by one
+  pump() reads exactly one snapshot.
+* After warmup, admission and folds never re-trace (the frozen
+  ShardProfile contract).
+* Batched SSSP / PPR / ego answers match independent oracles.
+"""
+import numpy as np
+import pytest
+
+from conftest import sweep, union_find_cc
+from repro.api import Engine, EngineConfig, config_of
+from repro.core.service import GraphClient, GraphService, Query
+from repro.graph import generators as gen
+from repro.graph.structs import (EdgeDelta, apply_delta, fold_delta,
+                                 partition)
+
+ARRAY_FIELDS = (
+    "perm", "deg", "vmask", "eg_src", "eg_dst", "eg_mask", "eg_w",
+    "all_src", "all_dst", "all_mask", "all_w", "eg_off", "all_off",
+    "mir_ids", "mir_slot_of", "mir_nworkers",
+    "mir_esrc", "mir_edst", "mir_emask", "mir_ew", "mir_eoff")
+
+
+def churn_delta(g, frac, seed, symmetric=True):
+    """Remove ``frac`` of the (undirected) edges, add as many random
+    ones — both directions, like the service's streamed mutations."""
+    rng = np.random.RandomState(seed)
+    lo = np.minimum(g.src, g.dst)
+    hi = np.maximum(g.src, g.dst)
+    key = np.unique(lo.astype(np.int64) * g.n + hi)
+    k = max(int(len(key) * frac), 1)
+    ridx = rng.choice(len(key), size=k, replace=False)
+    a_s = rng.randint(0, g.n, size=k)
+    a_d = rng.randint(0, g.n, size=k)
+    keep = a_s != a_d
+    a_w = (rng.rand(int(keep.sum())).astype(np.float32) + 0.01
+           if g.weight is not None else None)
+    d = EdgeDelta(add_src=a_s[keep], add_dst=a_d[keep], add_w=a_w,
+                  rem_src=key[ridx] // g.n, rem_dst=key[ridx] % g.n)
+    return d.symmetrized() if symmetric else d
+
+
+def assert_same_partition(pa, pb):
+    for f in ARRAY_FIELDS:
+        a, b = getattr(pa, f), getattr(pb, f)
+        if a is None or b is None:
+            assert a is None and b is None, f
+            continue
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"field {f!r} diverged from the fresh partition"
+    assert (pa.M, pa.n_loc, pa.tau, pa.layout, pa.balance) == \
+           (pb.M, pb.n_loc, pb.tau, pb.layout, pb.balance)
+
+
+@pytest.mark.parametrize("layout,balance", [
+    ("csr", "hash"), ("csr", "edges"), ("csr", "split"),
+    ("padded", "hash")])
+def test_fold_equals_full_repartition(layout, balance):
+    for seed in range(sweep(6)):
+        g = gen.powerlaw(300, avg_deg=5, seed=seed,
+                         weighted=True).symmetrized()
+        pg = partition(g, 8, tau=8, seed=seed, layout=layout,
+                       balance=balance, split_factor=1.1)
+        delta = churn_delta(g, 0.05, seed + 100)
+        folded = fold_delta(pg, delta)
+        g2 = apply_delta(g, delta)
+        fresh = partition(g2, 8, tau=8, layout=layout, balance=balance,
+                          split_factor=1.1, perm=pg.perm)
+        assert_same_partition(folded, fresh)
+        # pair_counts only ever over-counts (mirror caps stay safe)
+        if folded.pair_counts is not None:
+            assert np.all(np.asarray(folded.pair_counts)
+                          >= np.asarray(fresh.pair_counts))
+        # and the folded graph computes the same components
+        eng = Engine(config_of(pg))
+        la = eng.run("hashmin", folded).state
+        lb = eng.run("hashmin", fresh).state
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_fold_no_mirror_fast_path():
+    """tau=None (sentinel, no mirroring — the service default) takes the
+    channel-aliasing fast path; still bitwise equal to a fresh run."""
+    for seed in range(sweep(4)):
+        g = gen.powerlaw(280, avg_deg=5, seed=seed,
+                         weighted=True).symmetrized()
+        pg = partition(g, 8, layout="csr", balance="edges")
+        delta = churn_delta(g, 0.05, seed + 50)
+        folded = fold_delta(pg, delta)
+        fresh = partition(apply_delta(g, delta), 8, tau=pg.tau,
+                          layout="csr", balance="edges", perm=pg.perm)
+        assert_same_partition(folded, fresh)
+        # the alias is real: Ch_msg shares the full-adjacency buffers
+        assert folded.eg_src is folded.all_src
+
+
+def test_fold_add_only_and_remove_only():
+    g = gen.powerlaw(240, avg_deg=4, seed=2, weighted=True).symmetrized()
+    pg = partition(g, 4, tau=6, seed=0, layout="csr", balance="edges")
+    rng = np.random.RandomState(0)
+    adds = EdgeDelta(add_src=rng.randint(0, g.n, 40),
+                     add_dst=rng.randint(1, g.n, 40),
+                     add_w=rng.rand(40).astype(np.float32)).symmetrized()
+    rems = churn_delta(g, 0.03, 5)
+    rems = EdgeDelta(rem_src=rems.rem_src, rem_dst=rems.rem_dst)
+    for d in (adds, rems):
+        folded = fold_delta(pg, d)
+        fresh = partition(apply_delta(g, d), 4, tau=6, layout="csr",
+                          balance="edges", perm=pg.perm)
+        assert_same_partition(folded, fresh)
+
+
+def _ppr_oracle(g, src, alpha, iters):
+    deg = np.bincount(g.src, minlength=g.n)
+    pr = np.zeros(g.n)
+    pr[src] = 1.0
+    restart = pr.copy()
+    for _ in range(iters):
+        contrib = np.where(deg > 0, pr / np.maximum(deg, 1), 0.0)
+        inbox = np.zeros(g.n)
+        np.add.at(inbox, g.dst, contrib[g.src])
+        pr = alpha * restart + (1 - alpha) * inbox
+    return pr
+
+
+@pytest.fixture(scope="module")
+def service():
+    g = gen.powerlaw(300, avg_deg=5, seed=3, weighted=True).symmetrized()
+    svc = GraphService(g, M=4,
+                       config=EngineConfig(layout="csr", balance="edges",
+                                           devices=1),
+                       buckets=(2, 4), ppr_iters=8, max_supersteps=64,
+                       profile_slack=2.0)
+    svc.warmup()
+    return svc
+
+
+def test_batched_queries_match_oracles(service):
+    svc = service
+    client = GraphClient(svc)
+    res = client.request([Query("sssp", 0), Query("sssp", 11),
+                          Query("ppr", 7), Query("ego", 5)])
+    eng = Engine(config_of(svc.pg, devices=None))
+    for r in res[:2]:
+        ref = eng.run("sssp", svc.pg,
+                      source=int(svc.pg.perm[r.query.source]))
+        want = np.asarray(ref.state).reshape(-1)[svc.pg.perm]
+        assert np.allclose(r.value, want, equal_nan=True)
+    g = svc.snapshot_graph()
+    want = _ppr_oracle(g, 7, svc.ppr_alpha, svc.ppr_iters)
+    assert np.allclose(res[2].value, want, atol=1e-5)
+    roots = union_find_cc(g.n, g.src, g.dst)
+    sizes = np.bincount(roots, minlength=g.n)
+    assert res[3].value == (int(roots[5]), int(sizes[roots[5]]))
+
+
+def test_result_cache_and_coalescing(service):
+    svc = service
+    client = GraphClient(svc)
+    a = client.sssp(21)
+    assert not a.cached
+    b = client.sssp(21)
+    assert b.cached and np.array_equal(a.value, b.value)
+    # duplicates inside one batch coalesce to one lane
+    res = client.request([Query("ppr", 33), Query("ppr", 33)])
+    assert svc.last_pump["lanes_ppr"] == 1
+    assert np.array_equal(res[0].value, res[1].value)
+
+
+def test_epoch_barrier_no_snapshot_mix(service):
+    svc = service
+    g0 = svc.snapshot_graph()
+    e0 = svc.epoch
+    t_pre = svc.submit([Query("sssp", 17)])
+    svc.pump()
+    pre = svc.take_result(t_pre[0])
+    assert pre.epoch == e0
+
+    delta = churn_delta(g0, 0.05, 42)
+    svc.mutate(delta)
+    # queued both before and after another mutate: ONE pump serves them
+    # all AFTER every pending fold — never a mix
+    t_a = svc.submit([Query("sssp", 17)])
+    svc.mutate(churn_delta(g0, 0.02, 43))
+    t_b = svc.submit([Query("ppr", 9), Query("ego", 17)])
+    svc.pump()
+    ra = svc.take_result(t_a[0])
+    rb = [svc.take_result(t) for t in t_b]
+    assert ra.epoch == svc.epoch and all(r.epoch == svc.epoch for r in rb)
+    assert svc.epoch == e0 + 1  # both folds collapsed into one barrier
+
+    # pre-fold answer was computed on the OLD snapshot, post-fold on the
+    # NEW one — each matches its own oracle exactly
+    eng = Engine(config_of(svc.pg, devices=None))
+    pg_old = partition(g0, 4, tau=svc.pg.tau, layout="csr",
+                       balance="edges")
+    want_old = np.asarray(
+        eng.run("sssp", pg_old,
+                source=int(pg_old.perm[17])).state).reshape(-1)[pg_old.perm]
+    assert np.allclose(pre.value, want_old, equal_nan=True)
+    want_new = np.asarray(
+        eng.run("sssp", svc.pg,
+                source=int(svc.pg.perm[17])).state
+    ).reshape(-1)[svc.pg.perm]
+    assert np.allclose(ra.value, want_new, equal_nan=True)
+    want_ppr = _ppr_oracle(svc.snapshot_graph(), 9, svc.ppr_alpha,
+                           svc.ppr_iters)
+    assert np.allclose(rb[0].value, want_ppr, atol=1e-5)
+
+
+def test_no_retrace_across_batches_and_folds(service):
+    svc = service
+    client = GraphClient(svc)
+    traces = svc.traces
+    client.request([Query("sssp", 40), Query("ppr", 41),
+                    Query("ego", 42)])
+    svc.mutate(churn_delta(svc.snapshot_graph(), 0.03, 77))
+    client.request([Query("sssp", 43), Query("ppr", 44),
+                    Query("ego", 45)])
+    assert svc.traces == traces, "resident executors re-traced"
+
+
+def test_profile_overflow_rewarns_and_stays_correct():
+    g = gen.powerlaw(200, avg_deg=4, seed=5, weighted=True).symmetrized()
+    svc = GraphService(g, M=4,
+                       config=EngineConfig(layout="csr", balance="edges",
+                                           devices=1),
+                       buckets=(2,), ppr_iters=6, max_supersteps=64,
+                       profile_slack=1.01)
+    svc.warmup()
+    client = GraphClient(svc)
+    rng = np.random.RandomState(9)
+    k = g.m  # double the edge count: guaranteed to blow the envelope
+    a_s = rng.randint(0, g.n, size=k)
+    a_d = rng.randint(1, g.n, size=k)
+    keep = a_s != a_d
+    svc.mutate(EdgeDelta(
+        add_src=a_s[keep], add_dst=a_d[keep],
+        add_w=rng.rand(int(keep.sum())).astype(np.float32) + 0.01
+    ).symmetrized())
+    r = client.sssp(3)
+    assert r.epoch == 1
+    eng = Engine(config_of(svc.pg, devices=None))
+    want = np.asarray(
+        eng.run("sssp", svc.pg,
+                source=int(svc.pg.perm[3])).state).reshape(-1)[svc.pg.perm]
+    assert np.allclose(r.value, want, equal_nan=True)
+
+
+def test_service_rejects_unsupported_configs():
+    g = gen.chain(16)
+    with pytest.raises(ValueError):
+        GraphService(g, M=4, config=EngineConfig(layout="padded",
+                                                 devices=1))
+    with pytest.raises(ValueError):
+        GraphService(g, M=4, config=EngineConfig(layout="csr",
+                                                 backend="pallas",
+                                                 devices=1))
+    svc = GraphService(g, M=4, config=EngineConfig(layout="csr",
+                                                   devices=1))
+    with pytest.raises(ValueError):
+        svc.submit([Query("nope", 0)])
+    with pytest.raises(ValueError):
+        svc.submit([Query("sssp", 99)])
