@@ -7,14 +7,19 @@ Two modes:
   basic), printed as CSV for plotting.
 * ``balance_gate()`` (``--gate``) — the partitioner trajectory the CI
   ``bench-balance`` job pins: on the n=200k power-law graph at M=64 it
-  partitions with ``balance`` in {hash, edges, split}, records per-worker
-  / per-physical-shard / per-device edge loads, wall times, and message
-  totals to ``BENCH_balance.json``, and **asserts** (hard gate, not
-  advisory):
+  partitions with ``balance`` in {hash, edges, edges+refine, split},
+  records per-worker / per-physical-shard / per-device edge loads,
+  cross-worker / cross-device message fractions
+  (``exec.crossness_report``), wall times, and message totals to
+  ``BENCH_balance.json``, and **asserts** (hard gates, not advisory):
 
   - ``balance="split"`` per-worker edge-load max_over_mean <= 1.25
     (the hash baseline on this graph is degree-skew-proportional, ~7x);
-  - algorithm outputs are identical across all three modes (canonicalized
+  - the locality refinement pass strictly reduces the cross-device
+    message fraction vs plain ``edges`` at equal-or-better per-worker
+    edge-load max_over_mean (locality must never be bought with
+    imbalance — the refiner's load cap, asserted here);
+  - algorithm outputs are identical across all modes (canonicalized
     to original-vertex space — the modes only move vertices);
   - ``edges`` and ``split`` agree on every raw message count: splitting
     re-shards combining, it never invents or loses a basic message.
@@ -33,6 +38,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 import numpy as np  # noqa: E402
 
 from benchmarks.common import paper_graphs, row, timed  # noqa: E402
+from repro.api import Engine, config_of  # noqa: E402
 from repro.algorithms.hashmin import hashmin  # noqa: E402
 from repro.algorithms.sv import sv  # noqa: E402
 from repro.core.cost_model import (choose_tau, predicted_balance,  # noqa: E402
@@ -97,7 +103,7 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
                  out: str = "BENCH_balance.json",
                  split_factor: float = 1.1) -> dict:
     """The CI load-balance trajectory (hard gate)."""
-    from repro.core.exec import device_edge_loads
+    from repro.core.exec import crossness_report, device_edge_loads
     from repro.graph import generators as gen
 
     t0 = time.perf_counter()
@@ -108,7 +114,7 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
               "gate_max_over_mean": GATE_MAX_OVER_MEAN, "modes": {}}
 
     results = {}
-    for mode in ("hash", "edges", "split"):
+    for mode in ("hash", "edges", "edges+refine", "split"):
         t0 = time.perf_counter()
         # tau=None isolates the partitioner: with mirroring on, Ch_mir
         # already spreads the hubs' fan-out (Figs. 1-2); without it the
@@ -119,8 +125,9 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
         loads = pg.edge_load()
         ploads = pg.edge_load(phys=True)
         t0 = time.perf_counter()
-        labels, stats, n_ss = hashmin(pg, use_mirroring=False,
-                                      backend="pallas")
+        res = Engine(config_of(pg, use_mirroring=False,
+                               backend="pallas")).run("hashmin", pg)
+        labels, stats, n_ss = res.state, res.stats, res.n_supersteps
         run_s = time.perf_counter() - t0
         cell = {
             "partition_s": round(part_s, 2),
@@ -134,6 +141,7 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
             "msgs_basic": int(stats["msgs_basic"]),
             "msgs_combined": int(stats["msgs_combined"]),
             "msgs_total": int(stats["msgs_total"]),
+            "crossness": crossness_report(pg, devices),
         }
         # the cost model's a-priori prediction for this assignment, next
         # to the realized loads it is supposed to anticipate
@@ -148,15 +156,16 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
               f" (workers {cell['worker_load']['max_over_mean']:.3f}), "
               f"device max/mean="
               f"{cell['device_load']['max_over_mean']:.3f}, "
+              f"cross-device frac="
+              f"{cell['crossness']['cross_device_frac']:.4f}, "
               f"msgs={cell['msgs_total']:,d}")
 
     # --- correctness invariants (identical outputs, honest accounting) --
     canon = {m: canonical_labels(pg, lab) for m, (pg, lab, _) in
              results.items()}
-    assert np.array_equal(canon["hash"], canon["edges"]), \
-        "edges balance changed the components"
-    assert np.array_equal(canon["hash"], canon["split"]), \
-        "split balance changed the components"
+    for mode in ("edges", "edges+refine", "split"):
+        assert np.array_equal(canon["hash"], canon[mode]), \
+            f"{mode} balance changed the components"
     # same assignment => bitwise-identical labels and identical raw counts
     assert np.array_equal(results["edges"][1], results["split"][1]), \
         "splitting changed a label bit"
@@ -164,17 +173,38 @@ def balance_gate(n: int = 200_000, workers: int = 64, devices: int = 8,
             == report["modes"]["split"]["msgs_basic"]), \
         "splitting changed the basic message count"
 
-    # --- the hard gate ---------------------------------------------------
+    # --- the hard gates --------------------------------------------------
     baseline = report["modes"]["hash"]["phys_load"]["max_over_mean"]
     split_mm = report["modes"]["split"]["phys_load"]["max_over_mean"]
+    edges_cd = report["modes"]["edges"]["crossness"]["cross_device_frac"]
+    ref_cd = report["modes"]["edges+refine"]["crossness"][
+        "cross_device_frac"]
+    edges_mm = report["modes"]["edges"]["worker_load"]["max_over_mean"]
+    ref_mm = report["modes"]["edges+refine"]["worker_load"][
+        "max_over_mean"]
     report["gate_ok"] = bool(split_mm <= GATE_MAX_OVER_MEAN)
+    report["gate_refine_crossness_ok"] = bool(ref_cd < edges_cd)
+    # refinement never buys locality with imbalance: equal-or-better
+    # load balance than the assignment it refines (its load cap)
+    report["gate_refine_balance_ok"] = bool(ref_mm <= edges_mm + 1e-9)
     print(f"[balance] GATE: hash baseline max/mean={baseline:.3f} -> "
           f"split {split_mm:.3f} (gate <= {GATE_MAX_OVER_MEAN})")
+    print(f"[balance] GATE: cross-device fraction edges {edges_cd:.4f} "
+          f"-> refined {ref_cd:.4f} (strictly less) at worker max/mean "
+          f"{ref_mm:.3f} vs edges {edges_mm:.3f} (equal or better)")
+    # report lands on disk BEFORE any gate can abort the job
     Path(out).write_text(json.dumps(report, indent=2))
     print(f"[balance] report -> {out}")
     assert report["gate_ok"], (
         f"balance gate FAILED: split per-worker edge-load max_over_mean "
         f"{split_mm:.3f} > {GATE_MAX_OVER_MEAN}")
+    assert report["gate_refine_crossness_ok"], (
+        f"refine gate FAILED: refined cross-device fraction {ref_cd:.4f} "
+        f"not < unrefined {edges_cd:.4f}")
+    assert report["gate_refine_balance_ok"], (
+        f"refine gate FAILED: refined worker edge-load max_over_mean "
+        f"{ref_mm:.3f} > edges {edges_mm:.3f} (locality bought with "
+        f"imbalance)")
     return report
 
 

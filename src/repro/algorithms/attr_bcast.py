@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import exec as exec_mod
 from repro.core.channels import gather_edges
 from repro.graph.structs import PartitionedGraph
@@ -59,6 +59,7 @@ def attribute_broadcast(pg: PartitionedGraph, attr,
                         pipeline: bool = False):
     """Deprecated positional-tuple wrapper: returns (edge_attr, stats).
     Use ``Engine.run("attr_bcast", ...)``."""
+    warn_legacy("attribute_broadcast()", 'Engine.run("attr_bcast", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline), attr=attr)
     return res.state, res.stats

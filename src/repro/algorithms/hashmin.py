@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
@@ -69,6 +69,7 @@ def hashmin(pg: PartitionedGraph, max_supersteps: int = 10_000,
     """Deprecated positional-tuple wrapper: returns (labels, stats,
     n_supersteps[, history]).  Use ``Engine.run("hashmin", ...)`` /
     ``run(pg, EngineConfig(...))``."""
+    warn_legacy("hashmin()", 'Engine.run("hashmin", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline,
                                use_mirroring=use_mirroring),

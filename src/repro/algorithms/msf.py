@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import gather, gather_edges, scatter_edges
@@ -144,6 +144,7 @@ def msf(pg: PartitionedGraph, max_rounds: int = 40, jump_iters: int = 20,
     """Deprecated positional-tuple wrapper: returns ((labels,
     total_weight, n_edges), stats, rounds).  Use ``Engine.run("msf",
     ...)``."""
+    warn_legacy("msf()", 'Engine.run("msf", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline),
               max_rounds=max_rounds, jump_iters=jump_iters)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
@@ -61,6 +61,7 @@ def pagerank(pg: PartitionedGraph, n_iters: int = 30, damping: float = 0.85,
              devices: int | None = None, pipeline: bool = False):
     """Deprecated positional-tuple wrapper: returns (pr, stats,
     n_supersteps[, history]).  Use ``Engine.run("pagerank", ...)``."""
+    warn_legacy("pagerank()", 'Engine.run("pagerank", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline,
                                use_mirroring=use_mirroring),

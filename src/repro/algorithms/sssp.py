@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast
@@ -53,6 +53,7 @@ def sssp(pg: PartitionedGraph, source: int, max_supersteps: int = 10_000,
          devices: int | None = None, pipeline: bool = False):
     """Deprecated positional-tuple wrapper: returns (dist, stats, n).
     Use ``Engine.run("sssp", ...)``."""
+    warn_legacy("sssp()", 'Engine.run("sssp", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline,
                                use_mirroring=use_mirroring),

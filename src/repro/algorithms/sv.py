@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.api import EngineConfig, RunResult
+from repro.api import EngineConfig, RunResult, warn_legacy
 from repro.core import bsp
 from repro.core import exec as exec_mod
 from repro.core.channels import broadcast, gather, scatter_state
@@ -120,6 +120,7 @@ def sv(pg: PartitionedGraph, max_supersteps: int = 64,
        pipeline: bool = False):
     """Deprecated positional-tuple wrapper: returns (labels, stats,
     rounds).  Use ``Engine.run("sv", ...)``."""
+    warn_legacy("sv()", 'Engine.run("sv", ...)')
     res = run(pg, EngineConfig(backend=backend, devices=devices,
                                pipeline=pipeline),
               max_supersteps=max_supersteps)

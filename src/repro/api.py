@@ -27,7 +27,10 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import warnings
 from typing import Any, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.graph import structs
 
@@ -55,7 +58,7 @@ class EngineConfig:
     """
     backend: str = "dense"          # "dense" | "pallas" channel combine
     layout: str = "padded"          # "padded" | "csr" edge layout
-    balance: str = "hash"           # "hash" | "edges" | "split"
+    balance: str = "hash"           # one of graph.partitioner.BALANCES
     devices: Union[int, Tuple[int, int], None] = None
     hosts: Optional[int] = None
     pipeline: bool = False          # double-buffer sharded exchanges
@@ -75,6 +78,38 @@ class RunResult:
     stats: dict
     n_supersteps: int
     history: Any = None
+
+    def load_report(self) -> Optional[dict]:
+        """Measured per-worker load telemetry of this run: the
+        ``cost_model.straggler_report`` of the summed superstep
+        ``per_worker_total`` stats (max/mean imbalance + the worker
+        ids carrying the tail) — the signal the resident service's
+        elastic repartition trigger watches.  None when the run kept
+        no per-worker stats."""
+        per_worker = self.stats.get("per_worker_total")
+        if per_worker is None:
+            parts = [np.asarray(self.stats[k], np.int64)
+                     for k in ("per_worker_basic", "per_worker_combined",
+                               "per_worker_mirror")
+                     if k in self.stats]
+            if not parts:
+                return None
+            per_worker = sum(parts)
+        from repro.core import cost_model
+        pw = np.asarray(per_worker, np.int64)
+        rep = cost_model.straggler_report(pw)
+        rep["per_worker_total"] = pw
+        rep["top_workers"] = np.argsort(-pw)[:4].tolist()
+        return rep
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """The one DeprecationWarning every legacy tuple entry point emits
+    (``repro.api.Engine`` / the canonical ``run()`` never warns)."""
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} "
+        f"(repro.api.Engine front door) instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def config_of(pg: structs.PartitionedGraph, **overrides) -> EngineConfig:

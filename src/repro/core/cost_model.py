@@ -121,6 +121,187 @@ def choose_split(edge_load: np.ndarray, split_factor: float = 1.2
     return k
 
 
+def pair_weight(M: int, hosts: Optional[int] = None,
+                cross_host_weight: float = 4.0) -> np.ndarray:
+    """(M, M) per-worker-pair lane price for the crossness objective:
+    0 on the diagonal (intra-worker messages never hit a wire), 1 for a
+    cross-worker pair, ``cross_host_weight`` for a pair straddling two
+    host blocks of M/H workers (the hierarchical mesh's expensive axis —
+    refinement should prefer un-crossing a host link over a device
+    link)."""
+    W = np.ones((M, M), np.float64)
+    if hosts is not None and hosts > 1:
+        if M % hosts:
+            raise ValueError(f"M={M} workers must divide over "
+                             f"hosts={hosts}")
+        hid = np.arange(M) // (M // hosts)
+        W[hid[:, None] != hid[None, :]] = float(cross_host_weight)
+    np.fill_diagonal(W, 0.0)
+    return W
+
+
+def crossness(pair_counts: np.ndarray,
+              weight: Optional[np.ndarray] = None) -> float:
+    """The locality objective ``refine_assignment`` descends: the
+    weighted count of distinct cross-worker (source worker, destination
+    vertex) pairs — exactly the combined messages a full broadcast
+    superstep puts on the wire (``pair_counts`` IS that matrix)."""
+    pc = np.asarray(pair_counts, np.float64)
+    if weight is None:
+        weight = pair_weight(len(pc))
+    return float((pc * weight).sum())
+
+
+def refine_assignment(src: np.ndarray, dst: np.ndarray,
+                      assign: np.ndarray, M: int, cap: int,
+                      cost: np.ndarray,
+                      weight: Optional[np.ndarray] = None,
+                      rounds: int = 3) -> tuple:
+    """Greedy locality refinement of a vertex->worker assignment:
+    move (or swap) vertices toward the worker holding most of their
+    neighbors, strictly descending the ``crossness`` objective
+    (distinct (source worker, destination vertex) pairs, weighted by
+    ``weight``) while never exceeding the ``greedy_assign``
+    constraints — at most ``cap`` vertices per worker and never
+    raising the max per-worker ``cost`` load above its starting value
+    (equal-or-better balance by construction).
+
+    Each round evaluates every vertex's gain against a frozen snapshot
+    (vectorized over the deduplicated edge list), then applies the
+    candidate moves in descending-gain order with an EXACT incremental
+    re-check, so interacting moves can never ascend the objective.  A
+    move blocked by a full target worker (the common case: when M
+    divides n every slot is taken) is retried as a SWAP with the best
+    opposite-direction candidate, committed only if the exact combined
+    gain still descends.  Returns ``(assign, n_moves)``.
+    """
+    n = len(assign)
+    owner = np.asarray(assign, np.int64).copy()
+    cost = np.asarray(cost, np.int64)
+    # distinct directed pairs only (parallel edges don't add crossness);
+    # self-loops move with their vertex and never cross
+    key = np.unique(np.asarray(src, np.int64) * n
+                    + np.asarray(dst, np.int64))
+    es = key // n
+    ed = key % n
+    keep = es != ed
+    es, ed = es[keep], ed[keep]
+    order_e = np.argsort(es, kind="stable")
+    es, ed = es[order_e], ed[order_e]
+    indptr = np.searchsorted(es, np.arange(n + 1))
+
+    W = pair_weight(M) if weight is None else np.asarray(weight,
+                                                         np.float64)
+    # C[u, w] = # distinct in-neighbors of u on worker w: pair (w, u)
+    # exists iff C[u, w] > 0
+    C = np.zeros((n, M), np.int32)
+    np.add.at(C, (ed, owner[es]), 1)
+    loads = np.zeros(M, np.int64)
+    np.add.at(loads, owner, cost)
+    slots = np.bincount(owner, minlength=M)
+    load_cap = int(loads.max(initial=0))
+    rows = np.arange(n)
+    total_moves = 0
+
+    def _exact_gain(v, av, bv):
+        # J-delta of moving v: av -> bv under the CURRENT C/owner
+        nzw = np.flatnonzero(C[v])
+        g = W[nzw, av].sum() - W[nzw, bv].sum()
+        nb = ed[indptr[v]:indptr[v + 1]]
+        onb = owner[nb]
+        g += ((C[nb, av] == 1) * W[av, onb]).sum()
+        g -= ((C[nb, bv] == 0) * W[bv, onb]).sum()
+        return g
+
+    def _apply(v, av, bv):
+        owner[v] = bv
+        loads[av] -= cost[v]
+        loads[bv] += cost[v]
+        slots[av] -= 1
+        slots[bv] += 1
+        nb = ed[indptr[v]:indptr[v + 1]]
+        np.add.at(C, (nb, av), -1)
+        np.add.at(C, (nb, bv), 1)
+
+    for _ in range(max(int(rounds), 0)):
+        # frozen sweep: J-delta of moving v from a=owner[v] to its
+        # dominant in-neighbor worker b, in two exact parts —
+        #  1. v as destination: pairs (s, v) reprice from W[s, a] to
+        #     W[s, b] over v's distinct in-neighbor workers s;
+        #  2. v as source: for each out-neighbor u, pair (a, u) drops
+        #     iff v was a's last in-edge of u, pair (b, u) appears iff
+        #     b had none
+        Z = (C > 0).astype(np.float64) @ W
+        a = owner
+        cand = np.argmax(C, axis=1).astype(np.int64)
+        gain = Z[rows, a] - Z[rows, cand]
+        a_e, b_e, o_u = a[es], cand[es], a[ed]
+        part2 = ((C[ed, a_e] == 1) * W[a_e, o_u]
+                 - (C[ed, b_e] == 0) * W[b_e, o_u])
+        np.add.at(gain, es, part2)
+        todo = np.flatnonzero((cand != a) & (C[rows, cand] > 0)
+                              & (gain > 1e-9))
+        todo = todo[np.argsort(-gain[todo], kind="stable")]
+        # opposite-direction swap partners, best gain first, keyed by
+        # the FROZEN (from, to) direction (staleness re-checked at pop)
+        partners: dict = {}
+        for v in todo:
+            partners.setdefault((int(a[v]), int(cand[v])),
+                                []).append(int(v))
+        heads = {k: 0 for k in partners}
+        moved = np.zeros(n, bool)
+        moves = 0
+        for v in todo:
+            if moved[v]:
+                continue
+            av, bv = int(owner[v]), int(cand[v])
+            if av == bv:
+                continue
+            # exact re-check under the CURRENT state (earlier moves in
+            # this sweep may have changed both terms)
+            g = _exact_gain(v, av, bv)
+            if g <= 1e-9:
+                continue
+            if slots[bv] < cap and loads[bv] + cost[v] <= load_cap:
+                _apply(v, av, bv)
+                moved[v] = True
+                moves += 1
+                continue
+            # target full: pair with the best reverse-direction (bv ->
+            # av) candidate u; a swap keeps slot counts and is accepted
+            # only if the exact COMBINED gain descends and neither
+            # worker's load exceeds its cap
+            queue = partners.get((bv, av))
+            if queue is None:
+                continue
+            _apply(v, av, bv)  # tentative (slots may sit at cap + 1)
+            done = False
+            for _try in range(4):
+                i = heads[(bv, av)]
+                if i >= len(queue):
+                    break
+                u = queue[i]
+                heads[(bv, av)] = i + 1
+                if moved[u] or u == v or int(owner[u]) != bv:
+                    continue
+                if (loads[bv] - cost[u] > load_cap
+                        or loads[av] + cost[u] > load_cap):
+                    continue
+                gu = _exact_gain(u, bv, av)
+                if g + gu > 1e-9:
+                    _apply(u, bv, av)
+                    moved[v] = moved[u] = True
+                    moves += 2
+                    done = True
+                break
+            if not done:
+                _apply(v, bv, av)  # revert the tentative half
+        total_moves += moves
+        if not moves:
+            break
+    return owner, total_moves
+
+
 def worker_affinity(pair_counts: np.ndarray) -> np.ndarray:
     """Symmetric (M, M) worker communication affinity from the partition's
     distinct (source worker, destination vertex) pair matrix: traffic in

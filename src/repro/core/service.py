@@ -94,13 +94,15 @@ class GraphService:
                  buckets: Sequence[int] = (4, 16, 64),
                  ppr_alpha: float = 0.15, ppr_iters: int = 20,
                  max_supersteps: int = 512,
-                 profile_slack: float = 1.5, seed: int = 0):
+                 profile_slack: float = 1.5, seed: int = 0,
+                 rebalance_threshold: Optional[float] = None):
         if config is None:
             config = EngineConfig(layout="csr", balance="edges", devices=1)
         if config.layout != "csr" or config.balance == "split":
             raise ValueError("the resident service needs layout='csr' "
-                             "and balance in ('hash', 'edges') — the "
-                             "ShardProfile restrictions")
+                             "and a non-split balance mode ('hash', "
+                             "'edges', 'edges+refine', 'vertex-cut') — "
+                             "the ShardProfile restrictions")
         if config.backend != "dense":
             raise ValueError("the resident service runs backend='dense' "
                              "(plan tables are content-shaped and would "
@@ -108,6 +110,9 @@ class GraphService:
         self.engine = Engine(config)
         self.devices = config.devices if config.devices is not None else 1
         self.g = graph
+        self.M, self.tau, self.seed = int(M), tau, int(seed)
+        self.rebalance_threshold = rebalance_threshold
+        self.repartitions = 0
         self.pg = self.engine.partition(graph, M, tau=tau, seed=seed)
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.ppr_alpha = float(ppr_alpha)
@@ -179,6 +184,7 @@ class GraphService:
                 batch.append(self._queue.pop(0))
             self._serve_batch(batch)
             served += len(batch)
+        self._maybe_repartition()
         return served
 
     def warmup(self) -> None:
@@ -214,6 +220,60 @@ class GraphService:
                                                   self.profile)
             self._execs.clear()
             self._cc = None
+
+    # -- telemetry-driven elastic repartition ----------------------------
+
+    def repartition(self) -> None:
+        """Re-run the configured partitioner on the CURRENT graph and
+        reshard under the frozen profile — a fresh assignment (folds
+        only ever *grow* the monotone ``pair_counts`` caps; this
+        re-tightens them to fresh-partition values) at reshard cost,
+        never a re-trace storm: the compiled bucket executors take the
+        shard arrays (vmask/deg included) as arguments, so only the
+        resident Hash-Min program — whose cached ``state0`` bakes in
+        the old perm — is rebuilt.  The epoch does NOT bump: the graph
+        content is unchanged, so epoch-keyed cached answers stay
+        valid."""
+        self.pg = self.engine.partition(self.g, self.M, tau=self.tau,
+                                        seed=self.seed)
+        try:
+            self.arrays = exec_mod.reshard_arrays(self.pg, self.devices,
+                                                  self.profile)
+        except exec_mod.ProfileOverflow:
+            # the fresh assignment needs a bigger envelope: re-freeze
+            # and drop the resident programs (they re-warm lazily)
+            self.profile = exec_mod.shard_profile(
+                self.pg, self.devices, slack=self.profile_slack)
+            self.arrays = exec_mod.reshard_arrays(self.pg, self.devices,
+                                                  self.profile)
+            self._execs.clear()
+            self._cc = None
+        if self._cc is not None:
+            # the compiled Hash-Min fn is profile-shaped and survives a
+            # reshard; only its cached state0 bakes in the old perm
+            fn, _, stats_shape = self._cc
+            imax = identity_of("min", jnp.int32)
+            ids = self.pg.local_ids().astype(jnp.int32)
+            state0 = (jnp.where(self.pg.vmask, ids, imax),
+                      self.pg.vmask)
+            self._cc = (fn, state0, stats_shape)
+        self._labels = None
+        self._dummy_src = int(self.pg.perm[0])
+        self.repartitions += 1
+
+    def _maybe_repartition(self) -> None:
+        """The pump()-level elastic trigger: when the measured
+        per-worker message load of the last served batch drifts past
+        ``rebalance_threshold`` (max/mean), the next partition is
+        computed fresh."""
+        if self.rebalance_threshold is None or not self.last_batch:
+            return
+        pw = np.asarray(self.last_batch["stats"].get(
+            "per_worker_total", ()), np.float64)
+        if pw.size == 0 or pw.mean() <= 0:
+            return
+        if float(pw.max() / pw.mean()) > float(self.rebalance_threshold):
+            self.repartition()
 
     # -- the unified batched SSSP + PPR executor -------------------------
 

@@ -23,8 +23,11 @@ Two edge layouts are supported (``partition(..., layout=...)``):
   (hosting worker derivable the same way).
 
 Vertex ids are relabeled at partition time and then block-partitioned:
-``owner(v) = v // n_loc`` with O(1) owner computation.  The relabeling is
-the load-balancing knob (``partition(..., balance=...)``):
+``owner(v) = v // n_loc`` with O(1) owner computation.  The relabeling
+is the load-balancing/locality knob (``partition(..., balance=...)``),
+resolved through the pluggable partitioner layer in
+``graph/partitioner.py`` (``Partitioner.assign(g, M, hosts) ->
+(perm, split_spec)``):
 
 * ``"hash"``  — a random permutation: distributionally identical to
   Pregel's hash partitioning (the reference baseline).
@@ -33,6 +36,16 @@ the load-balancing knob (``partition(..., balance=...)``):
   bound) and packed LPT-style onto workers, each worker's vertices taking
   consecutive ids in its block.  Fixes multi-vertex skew; a single vertex
   hotter than a whole worker's fair share still creates a straggler.
+* ``"edges+refine"`` — ``"edges"`` plus a greedy locality refinement
+  pass (``cost_model.refine_assignment``) that strictly descends the
+  ``pair_counts`` crossness objective under the same slot/load caps —
+  fewer distinct cross-worker message pairs at equal balance.
+* ``"vertex-cut"`` — ``"edges"`` plus mega-hub state-row splitting:
+  vertices whose degree exceeds ``split_factor * m / M`` are force-
+  mirrored (``tau_eff`` is lowered to the cut threshold), so their
+  fan-out rows shard across the destination workers with the
+  master/replica mirror combine — the remaining single-vertex
+  straggler ``"split"`` can only shard at the edge-range level.
 * ``"split"`` — ``"edges"`` plus hot-worker splitting (csr layout only):
   workers whose edge load exceeds ``split_factor x`` the mean are split
   into equal-edge-count *physical shards* by moving csr row-offset
@@ -53,9 +66,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import cost_model
+from repro.graph import partitioner as partitioner_mod
+from repro.graph.partitioner import BALANCES  # noqa: F401 (re-export)
 
 LAYOUTS = ("padded", "csr")
-BALANCES = ("hash", "edges", "split")
 
 
 @dataclasses.dataclass
@@ -241,24 +255,6 @@ def _pad_rows(rows, pad_val, dtype):
     return out, mask
 
 
-def _balanced_perm(g: Graph, M: int, n_loc: int, tau: Optional[int]
-                   ) -> np.ndarray:
-    """Edge-balanced relabeling: LPT-assign vertices to workers by the
-    cost model, then give each worker's vertices consecutive new ids in
-    its block (``owner(v) = v // n_loc`` still holds; blocks may have
-    trailing unused slots)."""
-    deg = np.bincount(g.src, minlength=g.n)
-    cost = cost_model.vertex_cost(deg, M, tau)
-    assign = cost_model.greedy_assign(cost, M, n_loc)
-    order = np.argsort(assign, kind="stable")
-    counts = np.bincount(assign, minlength=M)
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    pos = np.arange(g.n, dtype=np.int64) - np.repeat(starts, counts)
-    perm = np.empty(g.n, np.int64)
-    perm[order] = assign[order] * n_loc + pos
-    return perm
-
-
 def canonical_labels(pg: PartitionedGraph, labels) -> np.ndarray:
     """Group labels computed in *relabeled* space (e.g. Hash-Min / S-V
     component ids, which are min relabeled ids) -> per-original-vertex
@@ -299,10 +295,16 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     from the same single stable sort, so corresponding edge orders are
     identical (csr == padded rows concatenated without the padding).
 
-    ``balance`` picks the vertex->worker assignment (module docstring):
-    ``"hash"`` random, ``"edges"`` greedy edge-balanced, ``"split"``
-    edge-balanced plus physical splitting of workers whose edge load
-    exceeds ``split_factor x`` the mean (csr only).
+    ``balance`` resolves through the pluggable partitioner layer
+    (``graph/partitioner.py`` — ``partitioner_for(balance).assign(g, M,
+    hosts) -> (perm, split_spec)``): ``"hash"`` random, ``"edges"``
+    greedy edge-balanced, ``"edges+refine"`` edge-balanced plus the
+    greedy crossness-descent locality pass, ``"split"`` edge-balanced
+    plus physical splitting of workers whose edge load exceeds
+    ``split_factor x`` the mean (csr only), ``"vertex-cut"``
+    edge-balanced plus forced mirroring of vertices whose degree
+    exceeds ``split_factor * m / M`` (mega-hub state rows shard across
+    the destination workers via the master/replica mirror combine).
 
     ``hosts=H`` makes the placement host-topology-aware for the
     hierarchical (H, T) device mesh: after the balance assignment the M
@@ -329,36 +331,24 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
     if balance == "split" and layout != "csr":
         raise ValueError('balance="split" moves csr row-offset boundaries; '
                          'use layout="csr"')
-    rng = np.random.RandomState(seed)
     n_loc = -(-g.n // M)
     pinned_perm = perm is not None
+    tau_eff = tau if tau is not None else g.n + 1
     if pinned_perm:
+        # an explicit perm is final: the partitioner layer (and the
+        # host regroup) is bypassed, and ``tau`` must already be the
+        # EFFECTIVE threshold (``pg.tau`` embeds the vertex-cut fold)
         perm = np.asarray(perm, np.int64)
         if perm.shape != (g.n,):
             raise ValueError(f"perm must have shape ({g.n},), got "
                              f"{perm.shape}")
-    elif balance == "hash":
-        perm = rng.permutation(g.n).astype(np.int64)
     else:
-        perm = _balanced_perm(g, M, n_loc, tau)
+        p9r = partitioner_mod.partitioner_for(
+            balance, tau=tau, seed=seed, split_factor=split_factor)
+        perm, spec = p9r.assign(g, M, hosts)
+        if spec.vc_thresh is not None:
+            tau_eff = min(tau_eff, int(spec.vc_thresh))
     n_ids = M * n_loc
-    if hosts is not None and hosts > 1 and not pinned_perm:
-        if M % hosts:
-            raise ValueError(f"M={M} workers must divide over "
-                             f"hosts={hosts}")
-        # worker-pair traffic of the tentative assignment -> regroup
-        # workers host by host, then relabel blocks (slot within the
-        # block is preserved, so only worker *placement* changes)
-        s0 = perm[g.src] // n_loc
-        pkey0 = np.unique(s0 * np.int64(n_ids) + perm[g.dst])
-        pc0 = np.zeros((M, M), np.int64)
-        np.add.at(pc0, ((pkey0 // n_ids).astype(np.int64),
-                        ((pkey0 % n_ids) // n_loc).astype(np.int64)), 1)
-        worker_order = cost_model.affinity_groups(
-            cost_model.worker_affinity(pc0), hosts)
-        rank = np.empty(M, np.int64)
-        rank[worker_order] = np.arange(M)
-        perm = rank[perm // n_loc] * n_loc + perm % n_loc
     inv = np.full(n_ids, -1, np.int64)
     inv[perm] = np.arange(g.n)
     src = perm[g.src]
@@ -367,7 +357,6 @@ def partition(g: Graph, M: int, tau: Optional[int] = None,
 
     owner = src // n_loc
     deg = np.bincount(src, minlength=n_ids)
-    tau_eff = tau if tau is not None else g.n + 1
     mirrored = deg >= tau_eff                      # per (new) vertex id
 
     # ---- Ch_msg edges: sources below threshold -------------------------
@@ -634,7 +623,9 @@ def fold_delta(pg: PartitionedGraph, delta: EdgeDelta) -> PartitionedGraph:
       (worker, dst) pairs increment, removals never decrement.  Caps
       may over-provision after churn but can never under-admit (and an
       under-capped exchange only costs overflow rounds, never
-      correctness); re-partition to re-tighten.
+      correctness); an elastic ``GraphService.repartition()`` (or any
+      fresh ``partition()``) re-tightens them to exact fresh-partition
+      values.
 
     The padded layout and ``balance="split"`` fall back to the pinned-
     perm rebuild (``_fold_rebuild``).

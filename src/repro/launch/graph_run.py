@@ -68,10 +68,15 @@ def main():
                          "(reference) or flat csr arrays + row offsets "
                          "(O(E + M + n) host memory)")
     ap.add_argument("--balance", default="hash",
-                    choices=["hash", "edges", "split"],
+                    choices=["hash", "edges", "edges+refine", "split",
+                             "vertex-cut"],
                     help="vertex->worker placement: random hash "
-                         "(reference), greedy edge-count-balanced, or "
-                         "edge-balanced + hot-worker splitting (csr only)")
+                         "(reference), greedy edge-count-balanced, "
+                         "edges + greedy crossness-descent locality "
+                         "refinement, edge-balanced + hot-worker "
+                         "splitting (csr only), or edges + mega-hub "
+                         "vertex-cut (state-row splitting via forced "
+                         "mirroring)")
     ap.add_argument("--split-factor", type=float, default=1.2,
                     help="split workers whose edge load exceeds this "
                          "multiple of the mean (balance=split)")
@@ -144,6 +149,15 @@ def main():
             dl = straggler_report(device_edge_loads(pg_run, dev))
             print(f"[balance] device edge-load max/mean="
                   f"{dl['max_over_mean']:.2f} over {dev_tag} devices")
+        from repro.core.exec import crossness_report
+        cr = crossness_report(pg_run, dev)
+        line = (f"[crossness] cross-worker message fraction="
+                f"{cr['cross_worker_frac']:.3f}")
+        if "cross_device_frac" in cr:
+            line += f" cross-device={cr['cross_device_frac']:.3f}"
+        if "cross_host_frac" in cr:
+            line += f" cross-host={cr['cross_host_frac']:.3f}"
+        print(line)
 
     mirror = not args.no_mirroring and tau is not None
     be = args.backend

@@ -37,9 +37,11 @@ it works on a plain CPU machine and in CI):
 
 ``--suite tier1`` is the consolidated fast profile driven by the tier-1
 test suite in ONE subprocess; ``--suite full`` is the nightly
-6 algos x 2 layouts x 2 backends x 3 balance modes x devices {1,2,8}
-matrix, run sequential AND through the double-buffered pipeline (the
-reference is always the sequential single-device run).  Explicit
+6 algos x 2 layouts x 2 backends x 5 balance modes x devices
+{1,2,8,(2,4)} matrix, run sequential AND through the double-buffered
+pipeline (the reference is always the sequential single-device run).
+Every balance sweep also prints the cross-device message fraction of
+its partition (``exec.crossness_report``).  Explicit
 ``--devices/--algos/--balance/--layouts`` (+ ``--pipeline``) compose a
 custom matrix instead.  Exits non-zero on the first violated cell.
 """
@@ -121,7 +123,20 @@ def run_matrix(algos=ALGOS, layouts=("padded", "csr"),
                 int(res.n_supersteps))
 
     report = {"n": n, "M": M, "tau": tau, "balance": balance,
-              "pipeline": bool(pipeline), "cells": {}}
+              "pipeline": bool(pipeline), "cells": {}, "crossness": {}}
+    # the locality number the balance mode optimizes: cross-device /
+    # cross-host message fraction from the honest pair_counts accounting
+    from repro.core.exec import crossness_report
+    Dmax = max(_flat_devices(d) for d in device_counts)
+    for lay, pg in pgs.items():
+        cr = crossness_report(pg, Dmax if M % Dmax == 0 else None)
+        report["crossness"][f"{lay}/{balance}"] = cr
+        line = (f"[shard_check] crossness {lay}/{balance}: "
+                f"cross-worker={cr['cross_worker_frac']:.3f}")
+        if "cross_device_frac" in cr:
+            line += (f" cross-device={cr['cross_device_frac']:.3f}"
+                     f" (D={cr['D']})")
+        print(line)
     ok = True
     pipe_tag = "/pipeline" if pipeline else ""
     for algo in algos:
@@ -632,6 +647,16 @@ def _suite_cells(suite: str):
              False),
             (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)), "split",
              True),
+            # the PR-10 partitioner modes: locality refinement and
+            # mega-hub vertex-cut ride the same csr/pallas row
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)),
+             "edges+refine", False),
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)),
+             "edges+refine", True),
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)),
+             "vertex-cut", False),
+            (("hashmin",), ("csr",), ("pallas",), (8, (2, 4)),
+             "vertex-cut", True),
         ]
     if suite == "hier":
         # the hierarchical conformance axis: every algorithm on every
@@ -652,10 +677,14 @@ def _suite_cells(suite: str):
             cells += [
                 (ALGOS, ("padded", "csr"), ("dense", "pallas"), (1, 2, 8),
                  "hash", pipe),
-                (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "edges",
-                 pipe),
-                (ALGOS, ("csr",), ("dense", "pallas"), (1, 2, 8), "split",
-                 pipe),
+                (ALGOS, ("csr",), ("dense", "pallas"),
+                 (1, 2, 8, (2, 4)), "edges", pipe),
+                (ALGOS, ("csr",), ("dense", "pallas"),
+                 (1, 2, 8, (2, 4)), "split", pipe),
+                (ALGOS, ("csr",), ("pallas",), (1, 8, (2, 4)),
+                 "edges+refine", pipe),
+                (ALGOS, ("csr",), ("pallas",), (1, 8, (2, 4)),
+                 "vertex-cut", pipe),
             ]
         return cells
     raise ValueError(f"unknown suite {suite!r}")
@@ -686,7 +715,8 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--balance", nargs="+", default=["hash"],
                     help="partition balance modes to sweep (hash / edges "
-                         "/ split; split runs csr cells only)")
+                         "/ edges+refine / split / vertex-cut; split runs "
+                         "csr cells only)")
     ap.add_argument("--layouts", nargs="+", default=["padded", "csr"])
     ap.add_argument("--pipeline", action="store_true",
                     help="run the sharded side through the "

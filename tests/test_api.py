@@ -83,3 +83,50 @@ def test_legacy_wrappers_match_run_results(corpus):
     res = eng.run("sssp", pg, source=src)
     assert np.array_equal(np.asarray(dist), np.asarray(res.state),
                           equal_nan=True)
+
+
+def test_legacy_wrappers_warn_engine_does_not(corpus):
+    """Every positional-tuple entry point emits a real
+    DeprecationWarning naming its Engine replacement; the Engine front
+    door itself stays warning-clean."""
+    import warnings
+    _, pg = corpus
+    from repro.algorithms import (attr_bcast as ab, hashmin as hm, msf,
+                                  pagerank as prm, sssp as ss, sv)
+    import jax.numpy as jnp
+    attr = jnp.ones((pg.M, pg.n_loc), jnp.float32)
+    calls = [
+        (hm.hashmin, (pg,), {}, "hashmin()"),
+        (prm.pagerank, (pg,), dict(n_iters=2, tol=0.0), "pagerank()"),
+        (ss.sssp, (pg, int(pg.perm[0])), {}, "sssp()"),
+        (sv.sv, (pg,), {}, "sv()"),
+        (msf.msf, (pg,), {}, "msf()"),
+        (ab.attribute_broadcast, (pg,), dict(attr=attr),
+         "attribute_broadcast()"),
+    ]
+    for fn, a, kw, name in calls:
+        with pytest.warns(DeprecationWarning,
+                          match="deprecated.*Engine") as rec:
+            fn(*a, **kw)
+        assert name in str(rec[0].message)
+    eng = Engine(config_of(pg))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng.run("hashmin", pg)
+        eng.run("sssp", pg, source=int(pg.perm[0]))
+
+
+def test_load_report_surfaces_per_worker_telemetry(corpus):
+    """RunResult.load_report(): the telemetry the elastic-repartition
+    trigger consumes — per-worker message totals plus the straggler
+    summary."""
+    _, pg = corpus
+    eng = Engine(config_of(pg))
+    rep = eng.run("hashmin", pg).load_report()
+    assert rep is not None
+    pw = np.asarray(rep["per_worker_total"], np.float64)
+    assert pw.shape == (pg.M,) and pw.sum() > 0
+    assert rep["max_over_mean"] >= 1.0
+    assert np.isclose(rep["max_over_mean"], pw.max() / pw.mean())
+    assert len(rep["top_workers"]) == min(4, pg.M)
+    assert rep["top_workers"][0] == int(np.argmax(pw))

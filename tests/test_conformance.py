@@ -179,7 +179,7 @@ def test_sharded_conformance_suite():
     The 2-D cells match the same single-device reference as the 1-D
     cells, pinning 2-D == 1-D bitwise / integer-exact."""
     report = _run_shard_suite("tier1")
-    assert len(report["cells"]) == 32
+    assert len(report["cells"]) == 40
     # the pipelined rows mirror the sequential slice cell for cell
     seq = {c for c in report["cells"] if not c.endswith("/pipeline")}
     assert {f"{c}/pipeline" for c in seq} == set(report["cells"]) - seq
@@ -213,12 +213,15 @@ def test_sharded_conformance_hier_axis():
 def test_sharded_conformance_matrix_full():
     """Nightly: the full conformance matrix — 6 algos x 2 layouts x 2
     backends x devices {1,2,8} under balance=hash plus the csr cells of
-    balance edges/split at every device count — bitwise / integer-exact
-    vs the unsharded reference, the whole matrix run both sequential
-    and through the double-buffered pipeline."""
+    balance edges/split at devices {1,2,8,(2,4)} and of the PR-10
+    partitioner modes (edges+refine, vertex-cut) at devices {1,8,(2,4)}
+    — bitwise / integer-exact vs the unsharded reference, the whole
+    matrix run both sequential and through the double-buffered
+    pipeline."""
     report = _run_shard_suite("full")
-    # (hash: 6*2*2*3; edges: 6*1*2*3; split: 6*1*2*3) x {seq, pipelined}
-    assert len(report["cells"]) == (72 + 36 + 36) * 2
+    # (hash: 6*2*2*3; edges/split: 6*1*2*4 each;
+    #  edges+refine/vertex-cut: 6*1*1*3 each) x {seq, pipelined}
+    assert len(report["cells"]) == (72 + 48 + 48 + 18 + 18) * 2
 
 
 BAL_N, BAL_M = 240, 4
@@ -286,12 +289,14 @@ def _run_balance(algo, balance, backend):
              pytest.param("msf", marks=pytest.mark.slow)))
 def test_balance_axis_conformance(algo):
     """The balance mode is a placement choice, never a semantic one:
-    canonicalized results agree across {hash, edges, split}; within a
-    mode the two backends agree on every result and statistic; and a
-    split partition keeps the exact message totals of its "edges" twin
-    for the raw (basic) channel — splitting only re-shards combining."""
+    canonicalized results agree across {hash, edges, edges+refine,
+    split, vertex-cut}; within a mode the two backends agree on every
+    result and statistic; and a split partition keeps the exact message
+    totals of its "edges" twin for the raw (basic) channel — splitting
+    only re-shards combining."""
     ref = {}
-    for balance in ("hash", "edges", "split"):
+    for balance in ("hash", "edges", "edges+refine", "split",
+                    "vertex-cut"):
         exact_d, approx_d, stats_d = _run_balance(algo, balance, "dense")
         exact_p, approx_p, stats_p = _run_balance(algo, balance, "pallas")
         ctx = f"{algo}/{balance}"

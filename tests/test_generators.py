@@ -1,0 +1,117 @@
+"""Property coverage for ``graph/generators.py`` — previously the only
+untested module in graph/.
+
+Three families of invariants:
+
+* **power-law degree tail** — the Chung-Lu generator must actually be
+  skewed: the hottest vertex carries many times its fair share, heavier
+  at smaller alpha, while ``erdos``/``grid_road`` stay flat;
+* **seed determinism** — same seed bitwise-same graph, different seed a
+  different one (the conformance matrix and every benchmark depend on
+  partition(seed) reproducibility all the way down to the generator);
+* **symmetrization / dedup invariants** — no self loops, no duplicate
+  directed pairs, every edge's reverse present, and undirected weights
+  canonicalized so w(a, b) == w(b, a).
+"""
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+
+
+def _pair_key(g):
+    return g.src.astype(np.int64) * g.n + g.dst
+
+
+# -- power-law degree tail -------------------------------------------------
+
+def test_powerlaw_degree_tail_is_skewed():
+    g = gen.powerlaw(5000, avg_deg=8, seed=0, alpha=1.8)
+    deg = g.out_degrees()
+    mean = deg.mean()
+    # a real heavy tail: the hub carries >> its fair share...
+    assert deg.max() > 20 * mean
+    # ...while most vertices sit at or below the mean
+    assert (deg <= mean).sum() > 0.5 * g.n
+
+
+def test_powerlaw_tail_heavier_at_smaller_alpha():
+    tails = []
+    for alpha in (1.5, 2.5):
+        g = gen.powerlaw(5000, avg_deg=8, seed=1, alpha=alpha)
+        deg = g.out_degrees()
+        tails.append(deg.max() / deg.mean())
+    assert tails[0] > tails[1]
+
+
+def test_flat_generators_have_no_tail():
+    deg = gen.erdos(2000, avg_deg=10, seed=0).out_degrees()
+    assert deg.max() < 5 * deg.mean()
+    deg = gen.grid_road(30).out_degrees()
+    assert deg.max() <= 4
+
+
+# -- seed determinism ------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda s: gen.powerlaw(800, avg_deg=6, seed=s, alpha=1.7,
+                           weighted=True),
+    lambda s: gen.erdos(500, avg_deg=8, seed=s, weighted=True),
+])
+def test_seed_determinism(make):
+    a, b, c = make(7), make(7), make(8)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.weight, b.weight)
+    assert (a.m != c.m) or not np.array_equal(a.src, c.src)
+
+
+# -- dedup / symmetrization invariants -------------------------------------
+
+@pytest.mark.parametrize("g", [
+    gen.powerlaw(600, avg_deg=6, seed=2, alpha=1.6),
+    gen.erdos(400, avg_deg=8, seed=3),
+], ids=["powerlaw", "erdos"])
+def test_dedup_no_self_loops_no_duplicates(g):
+    assert (g.src != g.dst).all()
+    key = _pair_key(g)
+    assert len(np.unique(key)) == g.m
+
+
+@pytest.mark.parametrize("g", [
+    gen.powerlaw(600, avg_deg=6, seed=2, alpha=1.6, weighted=True),
+    gen.chain(40),
+    gen.star(50),
+    gen.two_cliques(8),
+], ids=["powerlaw", "chain", "star", "two_cliques"])
+def test_symmetrized_has_both_directions(g):
+    s = g.symmetrized()
+    key = set(_pair_key(s).tolist())
+    rev = set((s.dst.astype(np.int64) * s.n + s.src).tolist())
+    assert key == rev
+    assert (s.src != s.dst).all()
+    assert len(key) == s.m
+
+
+def test_symmetrized_weights_are_undirected():
+    g = gen.powerlaw(500, avg_deg=6, seed=4, alpha=1.7,
+                     weighted=True).symmetrized()
+    w = {}
+    for a, b, x in zip(g.src.tolist(), g.dst.tolist(),
+                       g.weight.tolist()):
+        w[(a, b)] = x
+    for (a, b), x in w.items():
+        assert w[(b, a)] == x
+
+
+def test_adversarial_shapes():
+    g = gen.chain(10)
+    deg = np.bincount(np.concatenate([g.src]), minlength=g.n)
+    assert deg[0] == deg[-1] == 1 and (deg[1:-1] == 2).all()
+    g = gen.star(10)
+    deg = g.out_degrees()
+    assert deg[0] == 9 and (deg[1:] == 1).all()
+    g = gen.two_cliques(5)
+    # 2 * k*(k-1) intra-clique directed edges + the 2-way bridge
+    assert g.m == 2 * 5 * 4 + 2
+    assert g.n == 10

@@ -1,0 +1,215 @@
+"""The pluggable partitioner layer (PR 10).
+
+* protocol/registry: every ``balance`` mode resolves to a
+  :class:`~repro.graph.partitioner.Partitioner`, and ``partition()``
+  consumes all of them through the one ``assign()`` seam;
+* locality refinement: strictly descends the weighted ``pair_counts``
+  crossness objective under the ``greedy_assign`` slot/load caps
+  (equal-or-better balance by construction), with cross-host lanes
+  priced above cross-device ones when ``hosts`` is set;
+* vertex-cut: a mega-hub whose degree exceeds the split threshold gets
+  its state rows force-mirrored, bringing the max per-worker edge load
+  below the threshold on a graph edge-range splitting alone cannot fix
+  (split never changes the LOGICAL worker loads);
+* crossness accounting is honest: the static cross-worker count from
+  ``pair_counts`` equals the measured ``msgs_combined`` of a full
+  first broadcast superstep with mirroring off.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Engine, config_of
+from repro.core import cost_model
+from repro.core.exec import crossness_report
+from repro.graph import generators as gen
+from repro.graph import partitioner as pmod
+from repro.graph.structs import (apply_delta, canonical_labels,
+                                 fold_delta, partition)
+from test_service import assert_same_partition, churn_delta
+
+
+def _crossness_of(pg, weight=None):
+    return cost_model.crossness(np.asarray(pg.pair_counts), weight)
+
+
+# -- protocol / registry ---------------------------------------------------
+
+def test_registry_covers_every_balance_mode():
+    assert pmod.BALANCES == ("hash", "edges", "edges+refine", "split",
+                             "vertex-cut")
+    for balance in pmod.BALANCES:
+        p = pmod.partitioner_for(balance, tau=8, seed=1,
+                                 split_factor=1.3)
+        assert isinstance(p, pmod.Partitioner)
+        assert p.name == balance
+    with pytest.raises(ValueError, match="unknown balance"):
+        pmod.partitioner_for("metis")
+
+
+def test_assign_seam_shapes_and_split_specs():
+    g = gen.powerlaw(300, avg_deg=5, seed=1).symmetrized()
+    M = 4
+    for balance, kind in [("hash", "none"), ("edges", "none"),
+                          ("edges+refine", "none"),
+                          ("split", "edge_ranges"),
+                          ("vertex-cut", "vertex_cut")]:
+        perm, spec = pmod.partitioner_for(balance).assign(g, M)
+        assert perm.shape == (g.n,) and perm.dtype == np.int64
+        # block relabeling: every worker holds at most n_loc vertices
+        n_loc = -(-g.n // M)
+        assert np.bincount(perm // n_loc, minlength=M).max() <= n_loc
+        assert len(np.unique(perm)) == g.n
+        assert spec.kind == kind
+        assert (spec.vc_thresh is not None) == (kind == "vertex_cut")
+
+
+def test_partition_rejects_unknown_balance():
+    g = gen.chain(16)
+    with pytest.raises(ValueError):
+        partition(g, 2, balance="nope")
+
+
+# -- locality refinement ---------------------------------------------------
+
+def test_refinement_descends_crossness_at_equal_balance():
+    g = gen.powerlaw(600, avg_deg=6, seed=1, alpha=1.6).symmetrized()
+    M = 8
+    pg_e = partition(g, M, tau=None, layout="csr", balance="edges")
+    pg_r = partition(g, M, tau=None, layout="csr",
+                     balance="edges+refine")
+    assert _crossness_of(pg_r) < _crossness_of(pg_e)
+    le, lr = pg_e.edge_load(), pg_r.edge_load()
+    assert lr.max() <= le.max()          # the refiner's load cap
+    assert np.bincount(np.asarray(pg_r.perm) // pg_r.n_loc,
+                       minlength=M).max() <= pg_r.n_loc
+
+
+def test_refine_assignment_respects_caps_and_makes_swaps():
+    # n divides M exactly: every slot is taken, so only SWAPS can move
+    g = gen.powerlaw(640, avg_deg=6, seed=3, alpha=1.6).symmetrized()
+    M, n_loc = 8, 80
+    deg = np.bincount(g.src, minlength=g.n)
+    cost = cost_model.vertex_cost(deg, M, None)
+    assign = cost_model.greedy_assign(cost, M, n_loc)
+    assert np.bincount(assign, minlength=M).min() == n_loc  # full
+    W = cost_model.pair_weight(M)
+
+    def J(owner):
+        n_ids = M * g.n  # crossness from scratch over distinct pairs
+        key = np.unique(owner[g.src].astype(np.int64) * g.n + g.dst)
+        pc = np.zeros((M, M), np.int64)
+        np.add.at(pc, (key // g.n, owner[key % g.n]), 1)
+        return cost_model.crossness(pc, W)
+
+    refined, moves = cost_model.refine_assignment(
+        g.src, g.dst, assign, M, n_loc, cost, weight=W, rounds=3)
+    assert moves > 0
+    assert J(refined) < J(assign)
+    counts = np.bincount(refined, minlength=M)
+    assert counts.max() <= n_loc
+    loads0 = np.zeros(M, np.int64)
+    np.add.at(loads0, assign, cost)
+    loads1 = np.zeros(M, np.int64)
+    np.add.at(loads1, refined, cost)
+    assert loads1.max() <= loads0.max()
+
+
+def test_refinement_prices_cross_host_lanes_higher():
+    W = cost_model.pair_weight(8, hosts=2, cross_host_weight=4.0)
+    assert W[0, 0] == 0.0
+    assert W[0, 1] == 1.0          # same host block
+    assert W[0, 4] == 4.0          # across the host boundary
+    g = gen.powerlaw(600, avg_deg=6, seed=2, alpha=1.6).symmetrized()
+    pg_e = partition(g, 8, tau=None, layout="csr", balance="edges",
+                     hosts=2)
+    pg_r = partition(g, 8, tau=None, layout="csr",
+                     balance="edges+refine", hosts=2)
+    # refinement descends the HOST-weighted objective it was priced with
+    assert _crossness_of(pg_r, W) < _crossness_of(pg_e, W)
+
+
+# -- vertex-cut for mega-hubs ----------------------------------------------
+
+def test_vertex_cut_tames_mega_hub_below_split_threshold():
+    g = gen.star(401).symmetrized()   # hub degree 400
+    M = 8
+    vc_t = pmod.VertexCutPartitioner(split_factor=1.1).vc_thresh(g, M)
+    assert np.bincount(g.src, minlength=g.n).max() > vc_t
+    pg_e = partition(g, M, tau=None, layout="csr", balance="edges")
+    pg_s = partition(g, M, tau=None, layout="csr", balance="split",
+                     split_factor=1.1)
+    pg_v = partition(g, M, tau=None, layout="csr", balance="vertex-cut",
+                     split_factor=1.1)
+    # a single vertex above the threshold: no vertex-disjoint assignment
+    # (and no edge-range split — it never moves logical rows) can fix it
+    assert pg_e.edge_load().max() > vc_t
+    assert pg_s.edge_load().max() > vc_t
+    # the cut spreads the hub's fan-out rows across hosting workers
+    assert pg_v.edge_load().max() <= vc_t
+    assert pg_v.tau == vc_t
+    assert int((np.asarray(pg_v.mir_nworkers) > 0).sum()) >= 1
+    # master/replica combine keeps the Theorem-1 lane bound
+    assert np.asarray(pg_v.mir_nworkers).max() <= min(M, 400)
+    # placement never changes semantics
+    eng = Engine(config_of(pg_e))
+    ref = canonical_labels(pg_e, eng.run("hashmin", pg_e).state)
+    for pg in (pg_s, pg_v):
+        got = canonical_labels(pg, Engine(config_of(pg)).run(
+            "hashmin", pg).state)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_vertex_cut_threshold_composes_with_tau():
+    g = gen.star(401).symmetrized()
+    vc_t = pmod.VertexCutPartitioner(split_factor=1.1).vc_thresh(g, 8)
+    # explicit tau below the cut threshold wins; above it the cut wins
+    pg_lo = partition(g, 8, tau=5, layout="csr", balance="vertex-cut",
+                      split_factor=1.1)
+    assert pg_lo.tau == 5
+    pg_hi = partition(g, 8, tau=10 * vc_t, layout="csr",
+                      balance="vertex-cut", split_factor=1.1)
+    assert pg_hi.tau == vc_t
+
+
+def test_vertex_cut_fold_parity_under_pinned_perm():
+    """``pg.tau`` embeds the vertex-cut fold, so the pinned-perm rebuild
+    (and therefore ``fold_delta``) reproduces a cut partition exactly."""
+    g = gen.star(401).symmetrized()
+    pg = partition(g, 8, tau=None, layout="csr", balance="vertex-cut",
+                   split_factor=1.1)
+    delta = churn_delta(g, 0.04, 7)
+    folded = fold_delta(pg, delta)
+    fresh = partition(apply_delta(g, delta), 8, tau=pg.tau,
+                      layout="csr", balance="vertex-cut",
+                      split_factor=1.1, perm=pg.perm)
+    assert_same_partition(folded, fresh)
+
+
+# -- honest crossness accounting -------------------------------------------
+
+def test_crossness_report_matches_measured_messages():
+    """The static cross-worker count IS the combined-message count of a
+    full broadcast superstep: superstep 0 of Hash-Min (every vertex
+    active) with mirroring off must measure exactly it."""
+    g = gen.powerlaw(400, avg_deg=6, seed=4, alpha=1.7).symmetrized()
+    for balance in ("hash", "edges", "edges+refine"):
+        pg = partition(g, 8, tau=None, layout="csr", balance=balance)
+        rep = crossness_report(pg, 8)
+        eng = Engine(config_of(pg, use_mirroring=False))
+        res = eng.run("hashmin", pg, max_supersteps=1)
+        assert rep["cross_worker"] == int(res.stats["msgs_combined"]), \
+            balance
+        assert rep["total"] == int(np.asarray(pg.pair_counts).sum())
+        assert 0.0 <= rep["cross_device_frac"] \
+            <= rep["cross_worker_frac"] <= 1.0
+
+
+def test_crossness_report_levels_nest():
+    g = gen.powerlaw(400, avg_deg=6, seed=5, alpha=1.7).symmetrized()
+    pg = partition(g, 8, tau=None, layout="csr", balance="edges",
+                   hosts=2)
+    rep = crossness_report(pg, (2, 4))
+    assert rep["cross_host"] <= rep["cross_device"] <= rep["cross_worker"]
+    assert rep["H"] == 2 and rep["D"] == 8
+    with pytest.raises(ValueError, match="divide"):
+        crossness_report(pg, 3)

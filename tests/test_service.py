@@ -59,8 +59,8 @@ def assert_same_partition(pa, pb):
 
 
 @pytest.mark.parametrize("layout,balance", [
-    ("csr", "hash"), ("csr", "edges"), ("csr", "split"),
-    ("padded", "hash")])
+    ("csr", "hash"), ("csr", "edges"), ("csr", "edges+refine"),
+    ("csr", "split"), ("csr", "vertex-cut"), ("padded", "hash")])
 def test_fold_equals_full_repartition(layout, balance):
     for seed in range(sweep(6)):
         g = gen.powerlaw(300, avg_deg=5, seed=seed,
@@ -224,6 +224,76 @@ def test_no_retrace_across_batches_and_folds(service):
     client.request([Query("sssp", 43), Query("ppr", 44),
                     Query("ego", 45)])
     assert svc.traces == traces, "resident executors re-traced"
+
+
+def _make_service(**kw):
+    g = gen.powerlaw(300, avg_deg=5, seed=3, weighted=True).symmetrized()
+    svc = GraphService(g, M=4,
+                       config=EngineConfig(layout="csr", balance="edges",
+                                           devices=1),
+                       buckets=(2,), ppr_iters=6, max_supersteps=64,
+                       profile_slack=2.0, **kw)
+    svc.warmup()
+    return svc
+
+
+def test_elastic_repartition_no_retrace_and_parity():
+    """Telemetry-driven elastic repartition: pump() fires it from the
+    measured per-worker message load, the resident executors never
+    re-trace across it, and post-repartition answers equal a
+    fresh-partition Engine run."""
+    svc = _make_service(rebalance_threshold=1.0)
+    client = GraphClient(svc)
+    client.request([Query("sssp", 0), Query("ppr", 7)])
+    # a power-law load is never perfectly flat: max/mean > 1.0 fires
+    assert svc.repartitions >= 1
+    traces = svc.traces
+    reps = svc.repartitions
+    svc.mutate(churn_delta(svc.snapshot_graph(), 0.05, 21))
+    res = client.request([Query("sssp", 12), Query("ppr", 29),
+                          Query("ego", 4)])
+    assert svc.repartitions > reps
+    assert svc.traces == traces, \
+        "elastic repartition must reshard, never re-trace"
+    # answers on the repartitioned residency == fresh-partition run
+    eng = Engine(config_of(svc.pg, devices=None))
+    want = np.asarray(
+        eng.run("sssp", svc.pg,
+                source=int(svc.pg.perm[12])).state).reshape(-1)[svc.pg.perm]
+    assert np.allclose(res[0].value, want, equal_nan=True)
+    want_ppr = _ppr_oracle(svc.snapshot_graph(), 29, svc.ppr_alpha,
+                           svc.ppr_iters)
+    assert np.allclose(res[1].value, want_ppr, atol=1e-5)
+
+
+def test_rebalance_threshold_gates_the_trigger():
+    svc = _make_service(rebalance_threshold=1e9)
+    client = GraphClient(svc)
+    client.request([Query("sssp", 0), Query("ppr", 7)])
+    assert svc.repartitions == 0          # never drifts THAT far
+    assert svc.last_batch["stats"]["per_worker_total"].size == svc.M
+    svc.repartition()                     # manual trigger still works
+    assert svc.repartitions == 1
+
+
+def test_repartition_retightens_pair_counts():
+    """Satellite-6 property: folds only ever GROW the monotone
+    ``pair_counts`` caps (removals leave stale pairs behind);
+    ``repartition()`` shrinks them back to fresh-partition values."""
+    svc = _make_service()
+    g0 = svc.snapshot_graph()
+    svc.mutate(churn_delta(g0, 0.08, 11))
+    svc.pump()
+    fresh = svc.engine.partition(svc.g, svc.M, tau=svc.tau,
+                                 seed=svc.seed)
+    folded_pc = np.asarray(svc.pg.pair_counts)
+    fresh_pc = np.asarray(fresh.pair_counts)
+    assert np.all(folded_pc >= fresh_pc)
+    assert np.any(folded_pc > fresh_pc), \
+        "churn with removals should leave stale caps behind"
+    svc.repartition()
+    assert np.array_equal(np.asarray(svc.pg.pair_counts), fresh_pc)
+    assert_same_partition(svc.pg, fresh)
 
 
 def test_profile_overflow_rewarns_and_stays_correct():
